@@ -1,0 +1,36 @@
+"""Paper Figs. 8 & 9: block-cell/single-cell speedup ratios over the grid."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import TRACES, policy_grid
+
+MIGRATION_TIMES = [0.1, 0.5, 1.0, 2.0, 5.0, 10.0]
+REMOTE_SPEEDUPS = [2, 10, 50, 150]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for tname, maker in TRACES.items():
+        tr = maker()
+        fig = "fig8" if tname == "synthetic-loops" else "fig9"
+        grid = policy_grid(tr, MIGRATION_TIMES, REMOTE_SPEEDUPS)
+        blk = np.array(grid["speedup"]["block"])
+        sng = np.array(grid["speedup"]["single"])
+        ratio = blk / np.maximum(sng, 1e-9)
+        rows.append((f"{fig}/{tname}/ratio_max", float(ratio.max()), ""))
+        # paper: ratio ~1 at small remote speedup, rises with speedup
+        lo = ratio[:, 0].mean()
+        hi = ratio[:, -1].mean()
+        rows.append((f"{fig}/{tname}/ratio@low_speedup", float(lo),
+                     "paper: close to one when remote speedup is small"))
+        rows.append((f"{fig}/{tname}/ratio@high_speedup", float(hi),
+                     "paper: rises as the speedup increases"))
+        rows.append((f"{fig}/{tname}/ratio_monotone_in_speedup",
+                     float(hi >= lo), ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.4f},{note}")

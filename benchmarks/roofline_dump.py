@@ -1,0 +1,36 @@
+"""Roofline summary rows from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Emits one row per (arch x shape x mesh) cell found under experiments/dryrun.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_ROOFLINE = os.path.join(_HERE, "src", "repro", "launch", "roofline.py")
+
+spec = importlib.util.spec_from_file_location("roofline_mod", _ROOFLINE)
+R = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(R)
+
+
+def run() -> list[tuple[str, float, str]]:
+    d = os.path.join(_HERE, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        return [("roofline/missing", 0.0, "run repro.launch.dryrun first")]
+    rows = []
+    for rec in R.load_all(d):
+        a = R.analyze(rec)
+        if a is None or "skip" in a:
+            continue
+        key = f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}/{a['tag']}"
+        rows.append((key + "/frac", a["roofline_frac"],
+                     f"dominant={a['dominant']} useful={a['useful_ratio']:.2f} "
+                     f"mem={a['mem_peak_gb']:.1f}GB fits={a['fits_hbm']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.4f},{note}")

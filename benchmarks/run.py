@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline dump).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2]
+
+Prints ``name,value,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table2_state_sizes",         # Table II
+    "fig5_fig6_policy_speedups",  # Figs 5-6
+    "fig8_fig9_ratio",            # Figs 8-9
+    "fig10_migration_counts",     # Fig 10
+    "fig11_knowledge_policy",     # Fig 11
+    "kernel_bench",               # kernels
+    "roofline_dump",              # §Roofline table feed
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    print("name,value,derived")
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+            for name, val, note in mod.run():
+                print(f"{name},{val},{note}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{modname},ERROR,", file=sys.stderr)
+        print(f"# {modname}: {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end training driver: demo-100m with delta checkpointing + restart.
+
+Default runs the REDUCED config for a fast CPU demo; pass ``--full`` to train
+the real ~110M-parameter model (slow on CPU — the config is the point).
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--full]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] if len(sys.argv) > 1 else [])
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    argv = ["train", "--arch", "demo-100m", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--ckpt-dir", "/tmp/repro_e2e_ckpt",
+            "--ckpt-every", "50", "--resume"]
+    if not args.full:
+        argv.append("--reduced")
+    sys.argv = argv
+    train_main()
+
+
+if __name__ == "__main__":
+    main()

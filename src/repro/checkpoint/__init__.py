@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointing import (
+    AsyncCheckpointer, Checkpointer, CheckpointInfo,
+)
+
+__all__ = ["AsyncCheckpointer", "Checkpointer", "CheckpointInfo"]

@@ -1,0 +1,224 @@
+"""Delta checkpointing = migration to a disk environment (DESIGN.md §1).
+
+A checkpoint is the paper's reduced/delta/compressed state transfer with the
+destination being a directory: the first save writes a full base, subsequent
+saves write only leaves whose content digest changed (e.g. params + moments
+change every step, frozen embeddings or data buffers don't).  A JSON manifest
+carries digests + codec; corrupted or torn writes are detected via the
+digests and the atomic tmp->rename protocol.  ``AsyncCheckpointer`` overlaps
+serialization with compute (background thread).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core.reducer import StateReducer
+from repro.core.state import ExecutionState
+
+
+def _flatten(tree, prefix: str) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {prefix + jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def _unflatten(template, prefix: str, store: dict):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = [store[prefix + jax.tree_util.keystr(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclass
+class CheckpointInfo:
+    step: int
+    nbytes: int
+    n_leaves_written: int
+    n_leaves_total: int
+    seconds: float
+
+
+class Checkpointer:
+    def __init__(self, directory: str, codec: str = "zstd", keep: int = 3,
+                 delta: bool = True, rebase_every: int = 5):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.reducer = StateReducer(codec=codec, reduce_state=False)
+        self.codec = codec
+        self.keep = keep
+        self.delta = delta
+        self.rebase_every = max(rebase_every, 1)  # every k-th save is FULL
+        self._count = 0
+        self._known: dict[str, int] = {}     # leaf digests on disk
+
+    # ------------------------------------------------------------------
+    def _manifest_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"manifest-{step:08d}.json")
+
+    def save(self, step: int, trees: dict) -> CheckpointInfo:
+        """trees: e.g. {"params": params, "opt": opt_state, "data_step": ...}"""
+        t0 = time.perf_counter()
+        store: dict[str, np.ndarray] = {}
+        for k, tree in trees.items():
+            store.update(_flatten(tree, k + "/"))
+        state = ExecutionState(dict(store))
+        names = set(store)
+
+        # periodic full saves ("rebase") keep delta chains short and make
+        # garbage collection of old deltas safe
+        full = (self._count % self.rebase_every == 0) or not self.delta
+        self._count += 1
+        if full:
+            send, dead = set(names), set()
+            here = self.reducer.digests(state, names)
+        else:
+            send, dead, here = self.reducer.delta_names(state, names, self._known)
+
+        ser = self.reducer.serialize_names(state, send)
+        blob_path = os.path.join(self.dir, f"delta-{step:08d}.bin")
+        tmp = blob_path + ".tmp"
+        offsets = {}
+        with open(tmp, "wb") as f:
+            for name in sorted(ser.blobs):
+                b = ser.blobs[name]
+                rec = {"pickle": b.pickle_bytes.hex(), "arrays": [
+                    {**a, "data": a["data"].hex(),
+                     **({"scales": a["scales"].hex()} if "scales" in a else {})}
+                    for a in b.arrays]}
+                raw = json.dumps(rec).encode()
+                offsets[name] = (f.tell(), len(raw))
+                f.write(raw)
+        os.replace(tmp, blob_path)
+
+        manifest = {
+            "step": step, "codec": self.codec, "full": full,
+            "digests": {n: here[n] for n in names},
+            "written": sorted(send), "deleted": sorted(dead),
+            "offsets": offsets,
+            "keys": sorted(trees),
+        }
+        mtmp = self._manifest_path(step) + ".tmp"
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(mtmp, self._manifest_path(step))
+
+        self._known.update(here)
+        self._gc()
+        nbytes = os.path.getsize(blob_path)
+        return CheckpointInfo(step, nbytes, len(send), len(names),
+                              time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    def _steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            if fn.startswith("manifest-") and fn.endswith(".json"):
+                out.append(int(fn[len("manifest-"):-len(".json")]))
+        return sorted(out)
+
+    def _manifest(self, step: int) -> dict:
+        with open(self._manifest_path(step)) as f:
+            return json.load(f)
+
+    def _gc(self) -> None:
+        # deleting a middle delta would lose leaves that changed only there,
+        # so GC only drops steps strictly older than the newest FULL save
+        steps = self._steps()
+        if len(steps) <= self.keep + 1:
+            return
+        fulls = [s for s in steps if self._manifest(s).get("full")]
+        if not fulls:
+            return
+        for s in [x for x in steps if x < fulls[-1]]:
+            for pat in (f"manifest-{s:08d}.json", f"delta-{s:08d}.bin"):
+                p = os.path.join(self.dir, pat)
+                if os.path.exists(p):
+                    os.remove(p)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(self, templates: dict, step: int | None = None) -> tuple[dict, int]:
+        """Replay base + deltas up to ``step``; verifies digests."""
+        from repro.core.reducer import SerializedName, SerializedState
+        steps = self._steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        target = step if step is not None else steps[-1]
+        upto = [x for x in steps if x <= target]
+        # replay from the newest FULL checkpoint at or before the target
+        fulls = [x for x in upto
+                 if json.load(open(self._manifest_path(x))).get("full")]
+        if fulls:
+            upto = [x for x in upto if x >= fulls[-1]]
+        store: dict[str, np.ndarray] = {}
+        final_manifest = None
+        for s in upto:
+            with open(self._manifest_path(s)) as f:
+                manifest = json.load(f)
+            final_manifest = manifest
+            blob_path = os.path.join(self.dir, f"delta-{s:08d}.bin")
+            with open(blob_path, "rb") as f:
+                raw_all = f.read()
+            blobs = {}
+            for name in manifest["written"]:
+                off, ln = manifest["offsets"][name]
+                rec = json.loads(raw_all[off:off + ln])
+                arrays = []
+                for a in rec["arrays"]:
+                    a = dict(a)
+                    a["data"] = bytes.fromhex(a["data"])
+                    if "scales" in a:
+                        a["scales"] = bytes.fromhex(a["scales"])
+                    a["shape"] = tuple(a["shape"])
+                    arrays.append(a)
+                blobs[name] = SerializedName(bytes.fromhex(rec["pickle"]), arrays)
+            ser = SerializedState(codec=manifest["codec"], blobs=blobs)
+            store.update(self.reducer.deserialize(ser))
+            for name in manifest["deleted"]:
+                store.pop(name, None)
+
+        # integrity check against final manifest digests
+        st = ExecutionState(dict(store))
+        for name, want in final_manifest["digests"].items():
+            if name not in store:
+                raise IOError(f"checkpoint missing leaf {name}")
+            got = self.reducer.digest(store[name])
+            if want != -1 and got != want:
+                raise IOError(f"checkpoint digest mismatch for {name}")
+
+        out = {k: _unflatten(t, k + "/", store) for k, t in templates.items()}
+        return out, final_manifest["step"]
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint writes with compute (single background writer)."""
+
+    def __init__(self, inner: Checkpointer):
+        self.inner = inner
+        self._thread: threading.Thread | None = None
+        self.last_info: CheckpointInfo | None = None
+
+    def save(self, step: int, trees: dict) -> None:
+        self.wait()
+        # snapshot to host first (cheap on CPU; device_get on TPU)
+        host = jax.tree_util.tree_map(np.asarray, trees)
+
+        def run():
+            self.last_info = self.inner.save(step, host)
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,30 @@
+# The paper's primary contribution: context-aware execution migration.
+from repro.core.analyzer import (
+    Decision, MigrationAnalyzer, PerfModel, fit_linear, intersection,
+    substitute_kwarg,
+)
+from repro.core.context import ContextDetector, get_sequences, sequence_stats
+from repro.core.kb import KnowledgeBase, ParamEstimate, ProvRecord
+from repro.core.migration import (
+    ExecutionEnvironment, HybridRuntime, MigrationEngine, MigrationResult,
+)
+from repro.core.notebook import Cell, Notebook
+from repro.core.reducer import (
+    SerializationFailure, SerializedState, StateReducer,
+)
+from repro.core.simclock import SimClock, WallClock
+from repro.core.simulator import (
+    Trace, TRACES, cell_frequency, policy_grid, simulate,
+    synthetic_loops_trace, tf_guide_trace,
+)
+from repro.core.state import ExecutionState
+
+__all__ = [
+    "Decision", "MigrationAnalyzer", "PerfModel", "fit_linear", "intersection",
+    "substitute_kwarg", "ContextDetector", "get_sequences", "sequence_stats",
+    "KnowledgeBase", "ParamEstimate", "ProvRecord", "ExecutionEnvironment",
+    "HybridRuntime", "MigrationEngine", "MigrationResult", "Cell", "Notebook",
+    "SerializationFailure", "SerializedState", "StateReducer", "SimClock",
+    "WallClock", "Trace", "TRACES", "cell_frequency", "policy_grid",
+    "simulate", "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",
+]

@@ -1,0 +1,242 @@
+"""Context-aware migration analyzer (paper §II-C).
+
+Two policy families:
+
+* **Performance-aware** — single-cell (migrate iff remote time + 2 migrations
+  beats local) and block-cell (use the context detector's predicted block;
+  migrate once per block, return on completion or deviation — Fig. 3).
+* **Knowledge-aware** — a KB of cell parameters (epochs, num_steps, ...)
+  with thresholds; Algorithm 2 probes small parameter values in both
+  environments in the background, fits two linear regressors, and updates the
+  threshold to their intersection (Fig. 11).
+
+Every decision carries a human-readable reason that is attached to the cell
+as an annotation (explainability, Fig. 1).
+"""
+from __future__ import annotations
+
+import ast
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.astdeps import analyze_cell
+from repro.core.context import ContextDetector
+from repro.core.kb import KnowledgeBase, ProvRecord
+from repro.core.notebook import Cell, Notebook
+
+
+@dataclass
+class Decision:
+    env: str
+    migrate: bool
+    reason: str
+    block: tuple[int, ...] = ()
+    policy: str = "performance"
+
+
+class PerfModel:
+    """Observed cell durations per (cell, env) — the 'performance logs of
+    previous executions in multiple computing environments' (Fig. 1)."""
+
+    def __init__(self):
+        self._obs: dict[tuple[str, str], list[float]] = defaultdict(list)
+
+    def observe(self, cell_id: str, env: str, seconds: float) -> None:
+        self._obs[(cell_id, env)].append(float(seconds))
+
+    def estimate(self, cell_id: str, env: str) -> float | None:
+        xs = self._obs.get((cell_id, env))
+        return float(np.median(xs)) if xs else None
+
+
+# ----------------------------------------------------------------------
+# Algorithm 2 helpers
+# ----------------------------------------------------------------------
+
+class _KwargSub(ast.NodeTransformer):
+    def __init__(self, param: str, value):
+        self.param, self.value = param, value
+
+    def visit_Call(self, node: ast.Call):
+        self.generic_visit(node)
+        for kw in node.keywords:
+            if kw.arg == self.param and isinstance(kw.value, ast.Constant):
+                kw.value = ast.Constant(self.value)
+        return node
+
+
+def substitute_kwarg(source: str, param: str, value) -> str:
+    tree = _KwargSub(param, value).visit(ast.parse(source))
+    ast.fix_missing_locations(tree)
+    return ast.unparse(tree)
+
+
+def fit_linear(xs, ys) -> tuple[float, float]:
+    """least-squares slope/intercept (the paper's 'simple and unexpensive'
+    linear regressors)."""
+    a, b = np.polyfit(np.asarray(xs, float), np.asarray(ys, float), 1)
+    return float(a), float(b)
+
+
+def intersection(m_local: tuple[float, float], m_remote: tuple[float, float],
+                 migration_time: float = 0.0) -> float:
+    """Parameter value where remote (incl. migration offset) beats local."""
+    a_l, b_l = m_local
+    a_r, b_r = m_remote
+    if a_l <= a_r:
+        return float("inf")  # remote never catches up
+    return (b_r + migration_time - b_l) / (a_l - a_r)
+
+
+# ----------------------------------------------------------------------
+# the analyzer
+# ----------------------------------------------------------------------
+
+class MigrationAnalyzer:
+    def __init__(self, kb: KnowledgeBase, context: ContextDetector,
+                 perf: PerfModel | None = None, *,
+                 policy: str = "block",            # single | block
+                 use_knowledge: bool = True,
+                 migration_latency: float = 0.5,
+                 migration_bandwidth: float = 1e9):
+        assert policy in ("single", "block")
+        self.kb = kb
+        self.context = context
+        self.perf = perf or PerfModel()
+        self.policy = policy
+        self.use_knowledge = use_knowledge
+        self.migration_latency = migration_latency
+        self.migration_bandwidth = migration_bandwidth
+        self.state_size_estimate: dict[str, float] = defaultdict(lambda: 1e6)
+
+    # ------------------------------------------------------------------
+    def migration_time(self, nbytes: float) -> float:
+        return self.migration_latency + nbytes / self.migration_bandwidth
+
+    def observe_state_size(self, notebook: str, nbytes: float) -> None:
+        self.state_size_estimate[notebook] = float(nbytes)
+
+    # ------------------------------------------------------------------
+    def _knowledge_decision(self, cell: Cell) -> Decision | None:
+        info = analyze_cell(cell.source)
+        for fn, kwargs in info.call_kwargs.items():
+            for p, v in kwargs.items():
+                est = self.kb.get(p)
+                if est is None or not isinstance(v, (int, float)):
+                    continue
+                if v > est.threshold:
+                    return Decision(
+                        "remote", True,
+                        f"knowledge: {fn}({p}={v}) > threshold {est.threshold:.2f} "
+                        f"({est.source})", policy="knowledge")
+                return Decision(
+                    "local", False,
+                    f"knowledge: {fn}({p}={v}) <= threshold {est.threshold:.2f} "
+                    f"({est.source})", policy="knowledge")
+        return None
+
+    def _perf_decision(self, nb: Notebook, cell: Cell) -> Decision:
+        order = nb.order(cell.cell_id)
+        t_mig = self.migration_time(self.state_size_estimate[nb.name])
+        t_loc = self.perf.estimate(cell.cell_id, "local")
+        t_rem = self.perf.estimate(cell.cell_id, "remote")
+        if t_loc is None or t_rem is None:
+            return Decision("local", False,
+                            "performance: no history for this cell yet")
+
+        if self.policy == "single":
+            if t_rem + 2 * t_mig < t_loc:
+                return Decision("remote", True,
+                                f"performance/single: remote {t_rem:.2f}s + "
+                                f"2x{t_mig:.2f}s migration < local {t_loc:.2f}s")
+            return Decision("local", False,
+                            f"performance/single: local {t_loc:.2f}s <= remote "
+                            f"{t_rem:.2f}s + 2x{t_mig:.2f}s migration")
+
+        # block-cell: sum predicted block costs (Fig. 3)
+        block, score, ncand = self.context.predict_block_scored(nb.name, order)
+        loc_sum = rem_sum = 0.0
+        for o in block:
+            if o >= len(nb.cells):
+                continue
+            c = nb.cells[o]
+            tl = self.perf.estimate(c.cell_id, "local")
+            tr = self.perf.estimate(c.cell_id, "remote")
+            if tl is None or tr is None:
+                tl = tr = 0.0
+            loc_sum += tl
+            rem_sum += tr
+        conf = 1.0 if len(block) <= 1 else min(score / 100.0 + 0.5, 1.0)
+        if len(block) > 1 and ncand < 2:
+            # unproven prediction: commit only on the current cell's own value
+            if t_rem + 2 * t_mig < t_loc:
+                return Decision("remote", True,
+                                f"performance/block: unproven block {block}; "
+                                f"cell alone justifies migration "
+                                f"({t_rem:.2f}s + 2x{t_mig:.2f}s < {t_loc:.2f}s)",
+                                block=block)
+            return Decision("local", False,
+                            f"performance/block: insufficient context evidence "
+                            f"for block {block} ({ncand} candidate sequences)",
+                            block=block)
+        if rem_sum + 2 * t_mig < conf * loc_sum:
+            return Decision("remote", True,
+                            f"performance/block: block {block} remote "
+                            f"{rem_sum:.2f}s + 2x{t_mig:.2f}s < local {loc_sum:.2f}s",
+                            block=block)
+        return Decision("local", False,
+                        f"performance/block: block {block} local {loc_sum:.2f}s "
+                        f"<= remote {rem_sum:.2f}s + 2x{t_mig:.2f}s", block=block)
+
+    def decide(self, nb: Notebook, cell: Cell) -> Decision:
+        if self.use_knowledge:
+            d = self._knowledge_decision(cell)
+            if d is not None:
+                cell.annotate(d.reason)
+                return d
+        d = self._perf_decision(nb, cell)
+        cell.annotate(d.reason)
+        return d
+
+    # ------------------------------------------------------------------
+    # Algorithm 2: dynamic migration parameter update
+    # ------------------------------------------------------------------
+    def update_parameters(self, cell: Cell, runtime, *, probe_values=(1, 2, 3),
+                          max_wait: float | None = None) -> dict[str, float]:
+        """Probe small parameter values in both environments, fit the two
+        regressors, store the intersection in the KB.  ``runtime`` must expose
+        ``probe(cell_source, env_name) -> seconds`` (background execution)."""
+        info = analyze_cell(cell.source)
+        updated: dict[str, float] = {}
+        known = set(self.kb.get_known_parameters())
+        for fn, kwargs in info.call_kwargs.items():
+            for p in (set(kwargs) & known):
+                t_loc, t_rem, used = [], [], []
+                budget = max_wait
+                for v in probe_values:
+                    src = substitute_kwarg(cell.source, p, v)
+                    tl = runtime.probe(src, "local")
+                    tr = runtime.probe(src, "remote")
+                    used.append(v)
+                    t_loc.append(tl)
+                    t_rem.append(tr)
+                    if budget is not None:
+                        budget -= max(tl, tr)  # probes run in parallel (§II-C)
+                        if budget <= 0:
+                            break
+                if len(used) < 2:
+                    continue
+                ml = fit_linear(used, t_loc)
+                mr = fit_linear(used, t_rem)
+                t_mig = self.migration_time(self.state_size_estimate.get(
+                    "default", 1e6))
+                opt = intersection(ml, mr, t_mig)
+                self.kb.update(p, opt)
+                self.kb.record(ProvRecord(
+                    "kb-update", cell.cell_id, None, 0.0, 0.0,
+                    params={"param": p, "local": ml, "remote": mr,
+                            "migration_time": t_mig, "threshold": opt}))
+                updated[p] = opt
+        return updated

@@ -1,0 +1,179 @@
+"""AST dependency analysis (paper §II-D) and cell-parameter extraction (§II-C).
+
+``Load`` nodes name the objects a cell reads; resolving them against the
+*live* namespace and recursively walking function globals/closures/defaults
+builds the dependency closure — run-time analysis, so untaken branches cost
+nothing and dynamically-built containers are captured by construction (their
+contents serialize with the named object).
+
+``Call`` keyword arguments with constant values (e.g. ``model.fit(epochs=10)``)
+feed the Knowledge Base ("Notebook to Knowledge Base" service, PROV-lite).
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import inspect
+import types
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class CellAnalysis:
+    loads: set[str] = field(default_factory=set)
+    stores: set[str] = field(default_factory=set)
+    call_kwargs: dict[str, dict[str, Any]] = field(default_factory=dict)
+    imports: set[str] = field(default_factory=set)
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self):
+        self.out = CellAnalysis()
+
+    def visit_Name(self, node: ast.Name):
+        if isinstance(node.ctx, ast.Load):
+            self.out.loads.add(node.id)
+        elif isinstance(node.ctx, (ast.Store, ast.Del)):
+            self.out.stores.add(node.id)
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.out.imports.add(a.name.split(".")[0])
+            self.out.stores.add((a.asname or a.name).split(".")[0])
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module:
+            self.out.imports.add(node.module.split(".")[0])
+        for a in node.names:
+            self.out.stores.add(a.asname or a.name)
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        if name:
+            kwargs = {}
+            for kw in node.keywords:
+                if kw.arg is not None and isinstance(kw.value, ast.Constant):
+                    kwargs[kw.arg] = kw.value.value
+            if kwargs:
+                self.out.call_kwargs.setdefault(name, {}).update(kwargs)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self.out.stores.add(node.name)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.out.stores.add(node.name)
+        self.generic_visit(node)
+
+
+def analyze_cell(source: str) -> CellAnalysis:
+    tree = ast.parse(source)
+    v = _Visitor()
+    v.visit(tree)
+    # names assigned before use inside this cell are not external deps,
+    # but a name can be both (x = x + 1) — keep it as a load then.
+    return v.out
+
+
+_BUILTIN_NAMES = set(dir(builtins))
+
+
+def _function_refs(fn) -> set[str]:
+    """Global names a function (or its nested code objects) references."""
+    names: set[str] = set()
+    codes = [fn.__code__]
+    while codes:
+        code = codes.pop()
+        names.update(code.co_names)
+        for const in code.co_consts:
+            if isinstance(const, types.CodeType):
+                codes.append(const)
+    return names
+
+
+def dependency_closure(roots: set[str], ns: dict[str, Any]) -> tuple[set[str], set[str]]:
+    """Expand root Load-names into the full set of namespace names (and module
+    names) the execution depends on (paper: recursive inspection of variable
+    definitions, functions, and loaded modules)."""
+    needed: set[str] = set()
+    modules: set[str] = set()
+    work = [r for r in roots if r in ns]
+    seen_objs: set[int] = set()
+
+    while work:
+        name = work.pop()
+        if name in needed:
+            continue
+        needed.add(name)
+        obj = ns[name]
+        if id(obj) in seen_objs:
+            continue
+        seen_objs.add(id(obj))
+
+        if isinstance(obj, types.ModuleType):
+            # modules are re-imported on the remote side, never serialized
+            modules.add(obj.__name__.split(".")[0])
+            continue
+
+        fns = []
+        if isinstance(obj, types.FunctionType):
+            fns.append(obj)
+        elif inspect.isclass(obj):
+            fns.extend(f for f in vars(obj).values()
+                       if isinstance(f, types.FunctionType))
+        elif not isinstance(obj, (int, float, str, bytes, bool, type(None))):
+            # instances: walk methods defined on their class
+            fns.extend(f for f in vars(type(obj)).values()
+                       if isinstance(f, types.FunctionType)
+                       and type(obj).__module__ == "__main__")
+
+        for fn in fns:
+            for ref in _function_refs(fn):
+                if ref in _BUILTIN_NAMES:
+                    continue
+                if ref in ns and ref not in needed:
+                    work.append(ref)
+            # closure cells
+            if fn.__closure__:
+                for cell in fn.__closure__:
+                    try:
+                        val = cell.cell_contents
+                    except ValueError:
+                        continue
+                    for k, v in ns.items():
+                        if v is val and k not in needed:
+                            work.append(k)
+            # referenced modules
+            g = fn.__globals__
+            for ref in _function_refs(fn):
+                v = g.get(ref)
+                if isinstance(v, types.ModuleType):
+                    modules.add(v.__name__.split(".")[0])
+    return needed, modules
+
+
+def cell_dependencies(source: str, ns: dict[str, Any]) -> tuple[set[str], set[str], CellAnalysis]:
+    """Names (and modules) this cell's execution needs from the namespace."""
+    info = analyze_cell(source)
+    roots = {n for n in info.loads if n in ns and n not in _BUILTIN_NAMES}
+    needed, modules = dependency_closure(roots, ns)
+    modules |= info.imports
+    needed = {n for n in needed
+              if not isinstance(ns.get(n), types.ModuleType)}
+    return needed, modules, info

@@ -1,0 +1,106 @@
+"""Context detector (paper §II-B, Algorithm 1).
+
+Mines the history of cell-order interactions for non-decreasing sequences,
+scores them by subset-counted frequency, and predicts the block of cells the
+user is about to execute (consumed by the block-cell migration policy)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from repro.core import telemetry as T
+
+
+def get_sequences(history_order: list[int]) -> list[tuple[int, ...]]:
+    """Split a cell-order interaction history into non-decreasing runs.
+
+    Paper example: 1,2,3,2,3 -> (1,2,3), (2,3): a new sequence starts
+    whenever the ongoing one is broken (next order < current)."""
+    seqs: list[tuple[int, ...]] = []
+    cur: list[int] = []
+    for o in history_order:
+        if cur and o < cur[-1]:
+            seqs.append(tuple(cur))
+            cur = []
+        cur.append(o)
+    if cur:
+        seqs.append(tuple(cur))
+    return seqs
+
+
+def _contiguous_subseq(a: tuple, b: tuple) -> bool:
+    """a is a contiguous subsequence of b."""
+    n, m = len(a), len(b)
+    if n > m:
+        return False
+    return any(b[i:i + n] == a for i in range(m - n + 1))
+
+
+def sequence_stats(history_order: list[int],
+                   current_order: int | None = None) -> dict[tuple[int, ...], float]:
+    """Algorithm 1: score sequences by frequency (%), optionally restricted to
+    sequences containing the current active cell."""
+    sequences = get_sequences(history_order)
+    if current_order is not None:
+        sequences = [s for s in sequences if current_order in s]
+    if not sequences:
+        return {}
+
+    counts: dict[tuple[int, ...], int] = defaultdict(int)
+    for s in sequences:
+        counts[s] += 1  # duplicates removed but counted (lines 7-11)
+
+    stats: dict[tuple[int, ...], int] = {}
+    total = 0
+    for s in sorted(counts, key=len):  # increasing length (line 4)
+        subtotal = counts[s]
+        for o in counts:
+            if o != s and _contiguous_subseq(s, o):
+                subtotal += counts[o]
+        stats[s] = subtotal
+        total += subtotal
+
+    return {s: v / total * 100.0 for s, v in stats.items()}  # lines 14-15
+
+
+@dataclass
+class ContextDetector:
+    """Subscribes to the MQ bus; tracks per-notebook interaction history."""
+    history: dict[str, list[int]] = field(default_factory=lambda: defaultdict(list))
+    _cell_order: dict[str, dict[str, int]] = field(default_factory=dict)
+
+    def attach(self, bus: T.MQBus, topic: str = "telemetry") -> None:
+        bus.subscribe(topic, self.on_message)
+
+    def on_message(self, msg: T.TelemetryMessage) -> None:
+        if msg.type != T.CELL_EXECUTION_COMPLETED or msg.cell_id is None:
+            return
+        order = msg.payload.get("order")
+        if order is None:
+            order = list(msg.cell_ids).index(msg.cell_id)
+        self.history[msg.notebook].append(int(order))
+
+    # ------------------------------------------------------------------
+    def record(self, notebook: str, order: int) -> None:
+        self.history[notebook].append(order)
+
+    def stats(self, notebook: str, current_order: int | None = None):
+        return sequence_stats(self.history[notebook], current_order)
+
+    def predict_block(self, notebook: str, current_order: int) -> tuple[int, ...]:
+        """Most probable previously-seen sequence containing the current cell;
+        returns the cells from the current one onward (the upcoming block)."""
+        return self.predict_block_scored(notebook, current_order)[0]
+
+    def predict_block_scored(
+            self, notebook: str, current_order: int,
+    ) -> tuple[tuple[int, ...], float, int]:
+        """(block, score%, n_candidates) — score is the Algorithm-1 frequency
+        of the chosen sequence; n_candidates (distinct sequences containing
+        the cell) gauges how much evidence the prediction rests on."""
+        stats = self.stats(notebook, current_order)
+        if not stats:
+            return (current_order,), 0.0, 0
+        best, score = max(stats.items(), key=lambda kv: (kv[1], len(kv[0])))
+        i = best.index(current_order)
+        return best[i:], score, len(stats)

@@ -1,0 +1,74 @@
+"""Knowledge Base + provenance (paper §II-C).
+
+The KB stores, per (parameter, context), the estimated threshold above which
+migrating a cell pays off (seeded by an expert, updated by Algorithm 2), plus
+PROV-ML-lite provenance records of every cell execution and migration
+decision ("Notebook to Knowledge Base" service / ProvLake stand-in).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class ParamEstimate:
+    param: str
+    threshold: float
+    valid_range: tuple[float, float] = (0.0, float("inf"))
+    source: str = "expert"           # expert | learned
+    history: list[float] = field(default_factory=list)
+
+    def update(self, value: float) -> None:
+        lo, hi = self.valid_range
+        self.threshold = float(min(max(value, lo), hi))
+        self.source = "learned"
+        self.history.append(self.threshold)
+
+
+@dataclass
+class ProvRecord:
+    """PROV-ML-lite: Activity (cell run) + Agent (env) + used/generated."""
+    kind: str                         # cell-run | migration | kb-update
+    cell_id: str | None
+    env: str | None
+    started: float
+    ended: float
+    params: dict[str, Any] = field(default_factory=dict)
+    used: tuple[str, ...] = ()
+    generated: tuple[str, ...] = ()
+    decision: str | None = None
+    reason: str | None = None
+
+
+class KnowledgeBase:
+    def __init__(self):
+        self._params: dict[str, ParamEstimate] = {}
+        self.provenance: list[ProvRecord] = []
+
+    # --- parameter estimates (knowledge-aware policy) ------------------
+    def seed(self, param: str, threshold: float,
+             valid_range: tuple[float, float] = (0.0, float("inf"))) -> None:
+        self._params[param] = ParamEstimate(param, threshold, valid_range)
+
+    def get_known_parameters(self) -> list[str]:
+        return list(self._params)
+
+    def get(self, param: str) -> ParamEstimate | None:
+        return self._params.get(param)
+
+    def update(self, param: str, value: float) -> None:
+        if param not in self._params:
+            self._params[param] = ParamEstimate(param, value, source="learned")
+        else:
+            self._params[param].update(value)
+        self.record(ProvRecord("kb-update", None, None, time.time(), time.time(),
+                               params={param: value}))
+
+    # --- provenance -----------------------------------------------------
+    def record(self, rec: ProvRecord) -> None:
+        self.provenance.append(rec)
+
+    def records(self, kind: str | None = None) -> list[ProvRecord]:
+        return [r for r in self.provenance if kind is None or r.kind == kind]

@@ -1,0 +1,255 @@
+"""Execution environments, the migration engine, and the hybrid runtime.
+
+This is the paper's server-side machinery assembled: sessions emit Table-I
+telemetry on the MQ bus; the context detector listens; the analyzer decides
+placement; the engine moves *reduced, delta, compressed* state between
+environments; everything is recorded as provenance.
+
+An ExecutionEnvironment is "a place code can run with its own namespace":
+the user's machine, a cloud node — or, in the TPU adaptation, a JAX mesh
+(``DistContext``), which is how the same engine implements checkpointing
+(migration to a disk env) and elastic rescaling (migration between meshes).
+Timing follows the paper's §III protocol: declared cell costs (or measured
+wall time) divided by the environment speedup, on a simulated clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core import telemetry as T
+from repro.core.analyzer import Decision, MigrationAnalyzer, PerfModel
+from repro.core.context import ContextDetector
+from repro.core.kb import KnowledgeBase, ProvRecord
+from repro.core.notebook import Cell, Notebook
+from repro.core.reducer import SerializationFailure, SerializedState, StateReducer
+from repro.core.simclock import SimClock
+from repro.core.state import ExecutionState
+
+
+class ExecutionEnvironment:
+    def __init__(self, name: str, *, speedup: float = 1.0,
+                 mesh_ctx=None, globals_seed: dict | None = None):
+        self.name = name
+        self.speedup = float(speedup)
+        self.mesh_ctx = mesh_ctx
+        self.state = ExecutionState(dict(globals_seed or {}))
+
+    def execute(self, source: str, cost: float | None = None) -> float:
+        """Run real code against this env's namespace; return modeled seconds."""
+        t0 = time.perf_counter()
+        exec(compile(source, f"<{self.name}>", "exec"), self.state.ns)  # noqa: S102
+        wall = time.perf_counter() - t0
+        base = cost if cost is not None else wall
+        return base / self.speedup
+
+
+@dataclass
+class MigrationResult:
+    src: str
+    dst: str
+    names: tuple[str, ...]
+    deleted: tuple[str, ...]
+    nbytes: int
+    seconds: float
+    full_bytes: int = 0      # what a full-state migration would have cost
+
+
+class MigrationEngine:
+    """Reduced/delta/compressed state transfer between environments."""
+
+    def __init__(self, reducer: StateReducer, *, bandwidth: float = 1e9,
+                 latency: float = 0.5, delta: bool = True):
+        self.reducer = reducer
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.delta = delta
+        # receiver's content view: env name -> {state name -> digest}
+        self.synced: dict[str, dict[str, int]] = {}
+        self.log: list[MigrationResult] = []
+
+    def transfer_seconds(self, nbytes: int) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+    # ------------------------------------------------------------------
+    def migrate(self, src: ExecutionEnvironment, dst: ExecutionEnvironment,
+                cell_source: str | None = None,
+                names: set[str] | None = None,
+                strict: bool = True) -> MigrationResult:
+        """Move the state ``cell_source`` needs (or explicit ``names``) from
+        src to dst; only new/changed names are serialized when delta is on."""
+        import types as _types
+        modules: set[str] = set()
+        if names is None:
+            if cell_source is not None:
+                names, modules, _ = self.reducer.reduce(src.state, cell_source)
+            else:
+                names = set(src.state.names())
+        # re-import module aliases on the destination (paper: preamble/deps)
+        for alias, val in list(src.state.ns.items()):
+            if isinstance(val, _types.ModuleType) and (
+                    alias in names or val.__name__.split(".")[0] in modules):
+                try:
+                    dst.state.ns[alias] = __import__(val.__name__)
+                    if "." in val.__name__:  # alias points at a submodule
+                        import importlib
+                        dst.state.ns[alias] = importlib.import_module(val.__name__)
+                except ImportError:
+                    pass
+        # module aliases are re-imported on the destination, never serialized
+        names = {n for n in names
+                 if not isinstance(src.state.get(n), _types.ModuleType)}
+        known = self.synced.setdefault(dst.name, {})
+        if self.delta:
+            send, dead, here = self.reducer.delta_names(src.state, names, known)
+            send &= set(names)
+        else:
+            send, dead = set(names), set()
+            here = self.reducer.digests(src.state, names)
+
+        ser = self.reducer.serialize_names(
+            src.state, send, on_error="raise" if strict else "skip")
+        objs = self.reducer.deserialize(ser, target_ns=dst.state.ns)
+        dst.state.update(objs)
+        dst.state.drop(dead)
+
+        known.update(ser.digests)
+        for n in dead:
+            known.pop(n, None)
+        # the sender's own content view is now also known
+        self.synced.setdefault(src.name, {}).update(here)
+
+        seconds = self.transfer_seconds(ser.nbytes)
+        res = MigrationResult(src.name, dst.name, tuple(sorted(send)),
+                              tuple(sorted(dead)), ser.nbytes, seconds)
+        self.log.append(res)
+        return res
+
+    def invalidate(self, env_name: str, names) -> None:
+        """``env_name`` (re)defined these names: its content view is stale."""
+        view = self.synced.get(env_name)
+        if view:
+            for n in names:
+                view.pop(n, None)
+
+
+class HybridRuntime:
+    """Wires sessions, telemetry, context, analyzer, engine together (Fig. 1)."""
+
+    def __init__(self, notebook: Notebook, *, envs: dict[str, ExecutionEnvironment],
+                 kb: KnowledgeBase | None = None,
+                 reducer: StateReducer | None = None,
+                 clock: SimClock | None = None,
+                 policy: str = "block", use_knowledge: bool = True,
+                 bandwidth: float = 1e9, latency: float = 0.5,
+                 delta: bool = True):
+        assert "local" in envs and "remote" in envs
+        self.nb = notebook
+        self.envs = envs
+        self.clock = clock or SimClock()
+        self.bus = T.MQBus()
+        self.kb = kb or KnowledgeBase()
+        self.context = ContextDetector()
+        self.context.attach(self.bus)
+        self.reducer = reducer or StateReducer()
+        self.engine = MigrationEngine(self.reducer, bandwidth=bandwidth,
+                                      latency=latency, delta=delta)
+        self.analyzer = MigrationAnalyzer(
+            self.kb, self.context, PerfModel(), policy=policy,
+            use_knowledge=use_knowledge, migration_latency=latency,
+            migration_bandwidth=bandwidth)
+        self.current_env = "local"
+        self.block_plan: list[int] = []
+        self.session_id = T.new_session_id()
+        self.migrations = 0
+        self._emit(T.SESSION_STARTED, None)
+
+    # ------------------------------------------------------------------
+    def _emit(self, type_: str, cell_id: str | None, **payload) -> None:
+        self.bus.publish("telemetry", T.TelemetryMessage(
+            datetime=self.clock.now(), type=type_, cell_id=cell_id,
+            notebook=self.nb.name, cell_ids=self.nb.cell_ids(),
+            session=self.session_id, path=self.nb.path, payload=payload))
+
+    def probe(self, source: str, env_name: str) -> float:
+        """Background probe for Algorithm 2 (no telemetry, no migration)."""
+        env = self.envs[env_name]
+        probe_ns = ExecutionEnvironment(f"probe-{env_name}", speedup=env.speedup,
+                                        globals_seed=dict(env.state.ns))
+        return probe_ns.execute(source)
+
+    # ------------------------------------------------------------------
+    def _do_migration(self, src: str, dst: str, cell_source: str | None) -> float:
+        # return trips (no cell source) skip unserializable objects in place
+        res = self.engine.migrate(self.envs[src], self.envs[dst], cell_source,
+                                  strict=cell_source is not None)
+        self.clock.advance(res.seconds)
+        self.migrations += 1
+        self.analyzer.observe_state_size(self.nb.name, max(res.nbytes, 1))
+        self.kb.record(ProvRecord(
+            "migration", None, dst, self.clock.now() - res.seconds,
+            self.clock.now(), params={"bytes": res.nbytes, "src": src},
+            used=res.names))
+        return res.seconds
+
+    def run_cell(self, ref, *, force_env: str | None = None) -> float:
+        """Execute one cell under the policies; returns modeled duration."""
+        cell = self.nb.cell(ref)
+        order = self.nb.order(cell.cell_id)
+        self._emit(T.CELL_EXECUTION_REQUESTED, cell.cell_id, order=order)
+
+        if force_env is not None:
+            decision = Decision(force_env, force_env != self.current_env,
+                                f"forced to {force_env}")
+        elif self.block_plan and order in self.block_plan:
+            decision = Decision("remote", False, "inside predicted block")
+        elif self.block_plan and order not in self.block_plan:
+            # deviation from predicted block: return to local (Fig. 3)
+            decision = Decision("local", False, "deviated from predicted block")
+            self.block_plan = []
+        else:
+            decision = self.analyzer.decide(self.nb, cell)
+
+        target = decision.env
+        if target != self.current_env:
+            try:
+                self._do_migration(self.current_env, target, cell.source)
+                if decision.block:
+                    self.block_plan = [o for o in decision.block if o >= order]
+                self.current_env = target
+            except SerializationFailure as e:
+                cell.annotate(f"serialization failure -> local: {e}")
+                target = "local"
+
+        env = self.envs[self.current_env]
+        self._emit(T.CELL_EXECUTION_STARTED, cell.cell_id, order=order,
+                   env=self.current_env)
+        duration = env.execute(cell.source, cell.cost)
+        self.clock.advance(duration)
+        base = cell.cost if cell.cost is not None else duration * env.speedup
+        self.analyzer.perf.observe(cell.cell_id, "local", base)
+        self.analyzer.perf.observe(cell.cell_id, "remote",
+                                   base / self.envs["remote"].speedup)
+        self._emit(T.CELL_EXECUTION_COMPLETED, cell.cell_id, order=order,
+                   env=self.current_env, duration=duration)
+
+        # names this cell (re)defined are now stale on every peer
+        from repro.core.astdeps import analyze_cell
+        self.engine.invalidate(self.current_env, analyze_cell(cell.source).stores)
+
+        # block bookkeeping: leave remote when the block completes (Fig. 3)
+        if self.block_plan:
+            self.block_plan = [o for o in self.block_plan if o != order]
+            if not self.block_plan and self.current_env != "local":
+                self._do_migration(self.current_env, "local", None)
+                self.current_env = "local"
+        elif self.current_env != "local" and not decision.block:
+            # single-cell strategy: immediately switch state back
+            self._do_migration(self.current_env, "local", None)
+            self.current_env = "local"
+
+        return duration
+
+    def close(self) -> None:
+        self._emit(T.SESSION_DISPOSED, None)

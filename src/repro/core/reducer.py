@@ -1,0 +1,312 @@
+"""Notebook state reducer (paper §II-D): reduced capture, serialization,
+content hashing, delta migration, compression codecs.
+
+Pipeline (faithful to the paper, TPU-adapted per DESIGN.md §4):
+
+1. ``reduce``: AST Load-closure over the live namespace -> needed names only.
+2. ``serialize``: arrays leave the pickle stream and are stored as raw
+   buffers (optionally block-quantized to int8 on device); everything else
+   pickles.  Serialization failure => the caller executes locally (§II-D).
+3. ``digests``: content hash per name — jax arrays hash *on device* with the
+   Pallas ``hash_delta`` kernel (digests, not tensors, cross to host);
+   host objects hash with blake2b over their serialized bytes.
+4. ``delta``: only new/changed names move (both directions); deletions are
+   propagated as tombstones.
+5. codecs: none | zlib (paper's choice) | zstd | quant8+zstd (lossy, opt-in).
+"""
+from __future__ import annotations
+
+import contextvars
+import hashlib
+import io
+import marshal
+import pickle
+import types
+import zlib
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover
+    _zstd = None
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.astdeps import cell_dependencies
+from repro.core.state import ExecutionState
+
+CODECS = ("none", "zlib", "zstd", "quant8+zstd")
+
+
+class SerializationFailure(Exception):
+    """Paper §II-D: on serialization failure the cell executes locally."""
+
+
+# ----------------------------------------------------------------------
+# codec helpers
+# ----------------------------------------------------------------------
+
+def _compress(data: bytes, codec: str) -> bytes:
+    if codec == "none":
+        return data
+    if codec == "zlib":
+        return zlib.compress(data, level=6)
+    if codec in ("zstd", "quant8+zstd"):
+        if _zstd is None:
+            return zlib.compress(data, level=6)
+        return _zstd.ZstdCompressor(level=6).compress(data)
+    raise ValueError(codec)
+
+
+def _decompress(data: bytes, codec: str) -> bytes:
+    if codec == "none":
+        return data
+    if codec == "zlib":
+        return zlib.decompress(data)
+    if codec in ("zstd", "quant8+zstd"):
+        if _zstd is None:
+            return zlib.decompress(data)
+        return _zstd.ZstdDecompressor().decompress(data)
+    raise ValueError(codec)
+
+
+# ----------------------------------------------------------------------
+# array-aware pickling
+# ----------------------------------------------------------------------
+
+def _is_array(x) -> bool:
+    return isinstance(x, (np.ndarray, jax.Array)) and not np.isscalar(x)
+
+
+# Target namespace for function-globals rebinding during deserialization:
+# a migrated cell-defined function must resolve its globals in the
+# *destination* environment's namespace (paper: the remote kernel).
+_TARGET_NS: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_target_ns", default=None)
+
+
+def _make_function(code_bytes: bytes, name: str, defaults, closure_vals):
+    code = marshal.loads(code_bytes)  # noqa: S302 — our own serialized stream
+    g = _TARGET_NS.get()
+    if g is None:
+        g = {"__builtins__": __builtins__}
+    closure = tuple(types.CellType(v) for v in closure_vals) or None
+    fn = types.FunctionType(code, g, name, defaults, closure)
+    return fn
+
+
+def _by_value(fn: types.FunctionType) -> bool:
+    """Cell/exec-defined functions can't be pickled by reference."""
+    import sys
+    mod = getattr(fn, "__module__", None)
+    if mod in (None, "__main__"):
+        return True
+    m = sys.modules.get(mod)
+    return m is None or getattr(m, fn.__qualname__.split(".")[0], None) is not fn
+
+
+class _Pickler(pickle.Pickler):
+    def __init__(self, f, store: list):
+        super().__init__(f, protocol=pickle.HIGHEST_PROTOCOL)
+        self._store = store
+
+    def persistent_id(self, obj):
+        if _is_array(obj):
+            self._store.append(np.asarray(obj))
+            return ("arr", len(self._store) - 1)
+        return None
+
+    def reducer_override(self, obj):
+        if isinstance(obj, types.FunctionType) and _by_value(obj):
+            closure_vals = tuple(c.cell_contents for c in (obj.__closure__ or ()))
+            return (_make_function, (marshal.dumps(obj.__code__), obj.__name__,
+                                     obj.__defaults__, closure_vals))
+        return NotImplemented
+
+
+class _Unpickler(pickle.Unpickler):
+    def __init__(self, f, store: list):
+        super().__init__(f)
+        self._store = store
+
+    def persistent_load(self, pid):
+        kind, idx = pid
+        assert kind == "arr"
+        return self._store[idx]
+
+
+_QUANT_OK = (np.float32, np.float64, np.dtype("bfloat16").type
+             if hasattr(np.dtype("bfloat16"), "type") else np.float32)
+
+
+def _encode_array(a: np.ndarray, codec: str, interpret_kernels: bool) -> dict:
+    meta = {"shape": a.shape, "dtype": str(a.dtype)}
+    if codec == "quant8+zstd" and a.dtype in (np.dtype("float32"),
+                                              np.dtype("float64"),
+                                              jnp.bfloat16.dtype):
+        from repro.kernels.quant_blockwise.ops import quantize
+        impl = "pallas" if interpret_kernels else "xla"
+        q, s = quantize(jnp.asarray(a), interpret=interpret_kernels, impl=impl)
+        meta.update(quant=True,
+                    data=_compress(np.asarray(q).tobytes(), codec),
+                    scales=_compress(np.asarray(s).tobytes(), codec))
+        return meta
+    raw = np.ascontiguousarray(a).tobytes()
+    meta.update(quant=False, data=_compress(raw, codec))
+    return meta
+
+
+def _decode_array(meta: dict, codec: str) -> np.ndarray:
+    shape = tuple(meta["shape"])
+    dtype = np.dtype(meta["dtype"]) if meta["dtype"] != "bfloat16" else jnp.bfloat16.dtype
+    if meta["quant"]:
+        from repro.kernels.quant_blockwise.ops import dequantize
+        q = np.frombuffer(_decompress(meta["data"], codec), np.int8).reshape(-1, 1024)
+        s = np.frombuffer(_decompress(meta["scales"], codec), np.float32)
+        x = dequantize(jnp.asarray(q), jnp.asarray(s), shape,
+                       jnp.dtype(dtype), impl="xla")
+        return np.asarray(x)
+    raw = _decompress(meta["data"], codec)
+    return np.frombuffer(raw, dtype).reshape(shape).copy()
+
+
+# ----------------------------------------------------------------------
+# public containers
+# ----------------------------------------------------------------------
+
+@dataclass
+class SerializedName:
+    pickle_bytes: bytes
+    arrays: list[dict]
+
+    @property
+    def nbytes(self) -> int:
+        n = len(self.pickle_bytes)
+        for a in self.arrays:
+            n += len(a["data"]) + len(a.get("scales", b""))
+        return n
+
+
+@dataclass
+class SerializedState:
+    codec: str
+    blobs: dict[str, SerializedName]
+    deleted: tuple[str, ...] = ()
+    modules: tuple[str, ...] = ()
+    digests: dict[str, int] = field(default_factory=dict)
+    skipped: tuple[str, ...] = ()
+
+    @property
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self.blobs.values())
+
+
+# ----------------------------------------------------------------------
+# the reducer
+# ----------------------------------------------------------------------
+
+class StateReducer:
+    def __init__(self, codec: str = "zlib", reduce_state: bool = True,
+                 interpret_kernels: bool = False):
+        assert codec in CODECS, codec
+        self.codec = codec
+        self.reduce_state = reduce_state
+        self.interpret_kernels = interpret_kernels
+
+    # -- step 1: which names does this cell need? ----------------------
+    def reduce(self, state: ExecutionState, cell_source: str):
+        if not self.reduce_state:
+            names = set(state.names())
+            return names, set(), None
+        needed, modules, info = cell_dependencies(cell_source, state.ns)
+        return needed, modules, info
+
+    # -- step 2/3: serialize + digest -----------------------------------
+    def serialize_names(self, state: ExecutionState, names,
+                        codec: str | None = None,
+                        on_error: str = "raise") -> SerializedState:
+        """on_error="raise": SerializationFailure aborts (caller runs the cell
+        locally, §II-D).  on_error="skip": unserializable names simply don't
+        travel (used on return migrations — the object stays remote)."""
+        codec = codec or self.codec
+        blobs: dict[str, SerializedName] = {}
+        skipped: list[str] = []
+        for name in sorted(names):
+            obj = state.ns[name]
+            try:
+                store: list = []
+                buf = io.BytesIO()
+                _Pickler(buf, store).dump(obj)
+                arrays = [_encode_array(a, codec, self.interpret_kernels)
+                          for a in store]
+                blobs[name] = SerializedName(
+                    pickle_bytes=_compress(buf.getvalue(), codec), arrays=arrays)
+            except Exception as e:  # noqa: BLE001 — paper: fall back to local
+                if on_error == "skip":
+                    skipped.append(name)
+                    continue
+                raise SerializationFailure(f"{name}: {e}") from e
+        ser = SerializedState(codec=codec, blobs=blobs)
+        ser.digests = {n: self.digest(state.ns[n]) for n in blobs}
+        ser.skipped = tuple(skipped)
+        return ser
+
+    def deserialize(self, ser: SerializedState,
+                    target_ns: dict | None = None) -> dict[str, Any]:
+        token = _TARGET_NS.set(target_ns)
+        try:
+            out: dict[str, Any] = {}
+            for name, blob in ser.blobs.items():
+                store = [_decode_array(m, ser.codec) for m in blob.arrays]
+                buf = io.BytesIO(_decompress(blob.pickle_bytes, ser.codec))
+                out[name] = _Unpickler(buf, store).load()
+            return out
+        finally:
+            _TARGET_NS.reset(token)
+
+    # -- step 3: content digests ---------------------------------------
+    def digest(self, obj) -> int:
+        from repro.kernels.hash_delta.ops import tensor_digest
+        impl = "pallas" if self.interpret_kernels else "xla"
+        if _is_array(obj):
+            return int(tensor_digest(jnp.asarray(obj),
+                                     interpret=self.interpret_kernels, impl=impl))
+        leaves, treedef = jax.tree_util.tree_flatten(obj)
+        if leaves and all(_is_array(l) for l in leaves):
+            h = hashlib.blake2b(str(treedef).encode(), digest_size=8)
+            for l in leaves:
+                d = int(tensor_digest(jnp.asarray(l),
+                                      interpret=self.interpret_kernels, impl=impl))
+                h.update(d.to_bytes(8, "little"))
+            return int.from_bytes(h.digest(), "little")
+        try:
+            store: list = []
+            buf = io.BytesIO()
+            _Pickler(buf, store).dump(obj)
+        except Exception:
+            return -1  # unhashable => always migrate (paper §II-D)
+        h = hashlib.blake2b(buf.getvalue(), digest_size=8)
+        for a in store:
+            h.update(np.ascontiguousarray(a).tobytes())
+            h.update(str(a.shape).encode())
+        return int.from_bytes(h.digest(), "little")
+
+    def digests(self, state: ExecutionState, names) -> dict[str, int]:
+        return {n: self.digest(state.ns[n]) for n in names if n in state.ns}
+
+    # -- step 4: delta ---------------------------------------------------
+    def delta_names(self, state: ExecutionState, names,
+                    known: dict[str, int]):
+        """Returns (names to send, tombstones, sender digests).
+        ``known`` = receiver's current content view."""
+        send: set[str] = set()
+        here = self.digests(state, names)
+        for n, d in here.items():
+            if d == -1 or known.get(n) != d:
+                send.add(n)
+        dead = {n for n in known if n not in state.ns}
+        return send, dead, here

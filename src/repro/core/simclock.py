@@ -1,0 +1,32 @@
+"""Deterministic simulated clock.
+
+The paper's §III policy experiments "forced a fixed migration time and remote
+speedups" — i.e. timing is controlled, not measured.  SimClock reproduces
+that protocol: real computations run on CPU, but *reported* durations are
+base_time / env.speedup and migrations advance the clock by the modeled
+transfer time.  A real deployment swaps in WallClock.
+"""
+from __future__ import annotations
+
+import time
+
+
+class SimClock:
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0, dt
+        self._t += float(dt)
+        return self._t
+
+
+class WallClock:
+    def now(self) -> float:
+        return time.monotonic()
+
+    def advance(self, dt: float) -> float:  # real time cannot be advanced
+        return self.now()

@@ -1,0 +1,47 @@
+"""Execution state: the live namespace a notebook session mutates (§II-D).
+
+Values may be anything — JAX arrays (possibly sharded), pytrees, numpy
+arrays, plain Python objects, functions.  The reducer serializes a *subset*
+of names; the state itself is never mutated by capture ("objects are
+attached back once the serialization process completes" — we simply never
+detach, which is the functional equivalent).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+_HIDDEN_PREFIX = "_"
+
+
+class ExecutionState:
+    def __init__(self, ns: dict[str, Any] | None = None):
+        self.ns: dict[str, Any] = dict(ns or {})
+
+    # dict-ish API -----------------------------------------------------
+    def __getitem__(self, k: str) -> Any:
+        return self.ns[k]
+
+    def __setitem__(self, k: str, v: Any) -> None:
+        self.ns[k] = v
+
+    def __contains__(self, k: str) -> bool:
+        return k in self.ns
+
+    def get(self, k: str, default: Any = None) -> Any:
+        return self.ns.get(k, default)
+
+    def names(self) -> Iterator[str]:
+        """User-visible (serializable-candidate) names."""
+        for k in self.ns:
+            if not k.startswith(_HIDDEN_PREFIX) and k not in ("__builtins__",):
+                yield k
+
+    def subset(self, names) -> dict[str, Any]:
+        return {k: self.ns[k] for k in names if k in self.ns}
+
+    def update(self, objs: dict[str, Any]) -> None:
+        self.ns.update(objs)
+
+    def drop(self, names) -> None:
+        for k in names:
+            self.ns.pop(k, None)

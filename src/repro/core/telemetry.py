@@ -1,0 +1,65 @@
+"""Telemetry message types and MQ bus (paper §II-A, Table I).
+
+The JupyterLab front-end extension of the paper emits telemetry for every
+relevant user action through an authenticated endpoint onto a message-queue
+bus (Redis in the paper).  Here the bus is an in-process synchronous pub/sub
+with the same message schema; the interface mirrors a Redis channel so a
+networked broker can be dropped in.
+"""
+from __future__ import annotations
+
+import uuid
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+# Table I — telemetry message types
+SESSION_STARTED = "session-started"
+SESSION_DISPOSED = "session-disposed"
+CELL_EXECUTION_REQUESTED = "cell-execution-requested"
+CELL_EXECUTION_STARTED = "cell-execution-started"
+CELL_EXECUTION_COMPLETED = "cell-execution-completed"
+CELL_MODIFIED = "cell-modified"
+
+ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
+             CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED)
+
+
+@dataclass(frozen=True)
+class TelemetryMessage:
+    """Schema per §II-A: datetime, cell id, notebook, current cell ids,
+    session UUID, notebook path, and message type (+ free-form payload)."""
+    datetime: float
+    type: str
+    cell_id: str | None
+    notebook: str
+    cell_ids: tuple[str, ...]
+    session: str
+    path: str
+    payload: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.type in ALL_TYPES, self.type
+
+
+class MQBus:
+    """Synchronous in-process pub/sub with full history (deterministic)."""
+
+    def __init__(self):
+        self._subs: dict[str, list[Callable[[TelemetryMessage], None]]] = defaultdict(list)
+        self.history: list[tuple[str, TelemetryMessage]] = []
+
+    def subscribe(self, topic: str, fn: Callable[[TelemetryMessage], None]) -> None:
+        self._subs[topic].append(fn)
+
+    def publish(self, topic: str, msg: TelemetryMessage) -> None:
+        self.history.append((topic, msg))
+        for fn in list(self._subs.get(topic, [])):
+            fn(msg)
+
+    def messages(self, topic: str = "telemetry") -> list[TelemetryMessage]:
+        return [m for t, m in self.history if t == topic]
+
+
+def new_session_id() -> str:
+    return str(uuid.uuid4())

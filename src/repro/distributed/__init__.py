@@ -1,0 +1,3 @@
+from repro.distributed.context import DistContext, make_rules, shard
+
+__all__ = ["DistContext", "make_rules", "shard"]

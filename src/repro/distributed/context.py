@@ -1,0 +1,134 @@
+"""Distribution context threaded through model code.
+
+``DistContext`` carries the mesh and the logical->mesh axis rules; when it is
+``None`` the model runs unsharded (smoke tests, single device).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def make_rules(cfg, mesh: Mesh, *, sp_decode: bool = True,
+               mode: str = "tp") -> dict[str, Any]:
+    """Logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+    axes = dict(mesh.shape)
+    model = "model" if "model" in axes else None
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    msize = axes.get("model", 1)
+
+    if mode == "fsdp":
+        # data-parallel over EVERY mesh axis; parameters fully sharded
+        # (zero-3 style) and all-gathered just-in-time by GSPMD.
+        all_axes = data_axes + (("model",) if model else ())
+        rules: dict[str, Any] = {k: None for k in (
+            "seq", "embed", "head_dim", "heads", "kv_heads", "mlp", "vocab",
+            "layers", "groups", "conv", "pos", "ssm_heads", "ssm_state",
+            "ssm_inner", "lru", "lru_block", "enc_seq", "experts",
+            "expert_mlp")}
+        rules["batch"] = all_axes
+        rules["cache_seq"] = model if sp_decode else None
+        rules["expert_mode"] = "none" if not cfg.num_experts else "fsdp"
+        rules["mode"] = "fsdp"
+        return rules
+
+    rules = {
+        "mode": "tp",
+        "batch": data_axes if data_axes else None,
+        "seq": None,
+        "cache_seq": model if sp_decode else None,  # decode KV cache sequence-sharded
+        "embed": None,
+        "head_dim": None,
+        "heads": model if _divisible(cfg.num_heads or 1, msize) else None,
+        "kv_heads": model if _divisible(cfg.num_kv_heads or 1, msize) else None,
+        "mlp": model,
+        "vocab": model,
+        "layers": None,
+        "groups": None,
+        "conv": None,
+        "pos": None,
+        "ssm_heads": model if _divisible(getattr(cfg, "ssm_heads", 0) or 1, msize) else None,
+        "ssm_state": None,
+        "ssm_inner": model if _divisible(cfg.d_inner or 1, msize) else None,
+        "lru": model if _divisible(cfg.lru_width or 1, msize) else None,
+        "lru_block": None,
+        "enc_seq": None,
+    }
+    # MoE: expert-parallel when divisible, else tensor-parallel inside experts.
+    if cfg.num_experts:
+        if _divisible(cfg.num_experts, msize):
+            rules["experts"] = model
+            # FSDP-style: expert ffn dim additionally sharded over the data
+            # axes so 100B+-scale expert weights fit HBM (qwen3: 470 GB bf16)
+            dsize = int(np.prod([axes[a] for a in data_axes])) if data_axes else 1
+            rules["expert_mlp"] = (data_axes if len(data_axes) > 1
+                                   else data_axes[0]) if (
+                data_axes and _divisible(cfg.d_ff, dsize)) else None
+            rules["expert_mode"] = "ep"
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = model
+            rules["expert_mode"] = "tp"
+    else:
+        rules["experts"] = None
+        rules["expert_mlp"] = model
+        rules["expert_mode"] = "none"
+    return rules
+
+
+@dataclass
+class DistContext:
+    mesh: Mesh
+    rules: dict[str, Any]
+    sp_decode: bool = True          # sequence-parallel decode attention (shard_map)
+    vocab_parallel: bool = False    # Megatron-style vocab-parallel embed + loss
+    extra: dict = field(default_factory=dict)
+
+    @classmethod
+    def create(cls, cfg, mesh: Mesh, *, sp_decode: bool = True,
+               vocab_parallel: bool = False, mode: str = "tp") -> "DistContext":
+        return cls(mesh=mesh,
+                   rules=make_rules(cfg, mesh, sp_decode=sp_decode, mode=mode),
+                   sp_decode=sp_decode, vocab_parallel=vocab_parallel)
+
+    @property
+    def mode(self) -> str:
+        return self.rules.get("mode", "tp")
+
+    # ------------------------------------------------------------------
+    def pspec(self, logical_axes: tuple) -> PS:
+        spec, used = [], set()
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax is not None else None
+            if m is None:
+                spec.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(a for a in ms if a not in used)
+            used.update(ms)
+            spec.append(ms[0] if len(ms) == 1 else (ms if ms else None))
+            if not ms:
+                spec[-1] = None
+        return PS(*spec)
+
+    def sharding(self, logical_axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical_axes))
+
+    def shard(self, x, *logical_axes):
+        """with_sharding_constraint by logical axes (no-op patterns allowed)."""
+        return jax.lax.with_sharding_constraint(x, self.sharding(tuple(logical_axes)))
+
+
+def shard(ctx: DistContext | None, x, *logical_axes):
+    if ctx is None:
+        return x
+    return ctx.shard(x, *logical_axes)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,H,S,hd); k/v (B,KV,S,hd) -> (B,H,S,hd). fp32 softmax."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, k).astype(jnp.float32) * (hd ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", w, v)
+    return o.reshape(B, H, S, hd)

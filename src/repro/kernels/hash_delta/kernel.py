@@ -1,0 +1,38 @@
+"""On-device block hashing for delta migration (paper §II-D).
+
+The paper detects changed objects by hashing the serialized state on the
+host.  TPU adaptation (DESIGN.md §4): hash pytree leaves *on device* (one
+weighted-sum hash per 1024-element block) so delta detection never pulls
+full tensors to the host — only (nb,) digests move.  Position-sensitive via
+a per-lane weight vector; digests are mixed on the host into one leaf hash.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+PRIME = np.uint32(2654435761)
+
+
+def _hash_kernel(x_ref, w_ref, h_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    prod = (x * w).astype(jnp.uint32)
+    h = jnp.sum(prod, dtype=jnp.uint32)
+    h_ref[0, 0] = (h ^ (h >> np.uint32(15))) * PRIME
+
+
+def block_hash_kernel(x2d_u32, weights, *, interpret: bool = False):
+    nb, blk = x2d_u32.shape
+    h = pl.pallas_call(
+        _hash_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((1, blk), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.uint32),
+        interpret=interpret,
+    )(x2d_u32, weights[None, :])
+    return h[:, 0]

@@ -1,0 +1,37 @@
+"""Jitted wrapper: hash any tensor into one uint64-ish digest (on device)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 1024
+
+
+_W = np.random.default_rng(0xD1657).integers(
+    1, 2**32, size=BLOCK, dtype=np.uint32) | 1  # host constant (no tracer leak)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def tensor_digest(x, *, interpret: bool = False, impl: str = "pallas"):
+    """Any tensor -> scalar uint32 digest (content hash for delta migration)."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        raw = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    elif x.dtype.itemsize == 4:
+        raw = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    else:  # narrow/wide ints, bool: value-hash via uint32 cast
+        raw = x.astype(jnp.uint32)
+    flat = raw.reshape(-1).astype(jnp.uint32)
+    pad = (-flat.shape[0]) % BLOCK
+    x2d = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    if impl == "xla":
+        from repro.kernels.hash_delta.ref import block_hash_ref
+        h = block_hash_ref(x2d, jnp.asarray(_W))
+    else:
+        from repro.kernels.hash_delta.kernel import block_hash_kernel
+        h = block_hash_kernel(x2d, jnp.asarray(_W), interpret=interpret)
+    # host-free final mix: weighted fold of block digests
+    idx = jnp.arange(h.shape[0], dtype=jnp.uint32) * jnp.uint32(2246822519) + jnp.uint32(1)
+    return jnp.sum(h * idx, dtype=jnp.uint32)

@@ -1,0 +1,52 @@
+"""Block-wise int8 quantize/dequantize as Pallas TPU kernels.
+
+Migration-path compression (paper §II-D "compression ... beyond the scope";
+TPU adaptation in DESIGN.md §4): tensors are flattened to (nb, 1024) blocks —
+(8, 128) VREG-shaped — and each block gets an absmax scale.  Runs on-device
+so compression does not round-trip through the host before a migration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]).astype(x_ref.dtype)
+
+
+def quantize_kernel(x2d, *, interpret: bool = False):
+    nb, blk = x2d.shape
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, blk), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2d)
+    return q, s[:, 0]
+
+
+def dequantize_kernel(q, scale, dtype, *, interpret: bool = False):
+    nb, blk = q.shape
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk), dtype),
+        interpret=interpret,
+    )(q, scale[:, None])

@@ -1,0 +1,41 @@
+"""Jitted wrappers: quantize/dequantize arbitrary-shape tensors blockwise."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def quantize(x, *, interpret: bool = False, impl: str = "pallas"):
+    """Any-shape float tensor -> (q int8 (nb, BLOCK), scales (nb,), meta).
+
+    Pads the flattened tensor to a BLOCK multiple (meta carries true size)."""
+    n = int(np.prod(x.shape))
+    pad = (-n) % BLOCK
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    x2d = flat.reshape(-1, BLOCK)
+    if impl == "xla":
+        from repro.kernels.quant_blockwise.ref import quantize_ref
+        q, s = quantize_ref(x2d)
+    else:
+        from repro.kernels.quant_blockwise.kernel import quantize_kernel
+        q, s = quantize_kernel(x2d, interpret=interpret)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype", "interpret", "impl"))
+def dequantize(q, scales, shape: tuple, dtype=jnp.bfloat16, *,
+               interpret: bool = False, impl: str = "pallas"):
+    if impl == "xla":
+        from repro.kernels.quant_blockwise.ref import dequantize_ref
+        x2d = dequantize_ref(q, scales, dtype)
+    else:
+        from repro.kernels.quant_blockwise.kernel import dequantize_kernel
+        x2d = dequantize_kernel(q, scales, dtype, interpret=interpret)
+    n = int(np.prod(shape))
+    return x2d.reshape(-1)[:n].reshape(shape)

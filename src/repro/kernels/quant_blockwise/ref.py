@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for block-wise int8 quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x2d):
+    """x2d (nb, block) fp -> (q int8 (nb, block), scales fp32 (nb,))."""
+    xf = x2d.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[:, None]).astype(dtype)

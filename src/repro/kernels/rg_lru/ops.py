@@ -1,0 +1,22 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rg_lru.kernel import rglru_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w", "interpret",
+                                             "impl"))
+def rglru_scan(a, b, *, block_s: int = 256, block_w: int = 256,
+               interpret: bool = False, impl: str = "pallas"):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t over axis 1. Returns (h, h_last)."""
+    if impl == "xla":
+        from repro.kernels.rg_lru.ref import rglru_ref
+        return rglru_ref(a, b)
+    h = rglru_scan_kernel(a, b, block_s=block_s, block_w=block_w,
+                          interpret=interpret)
+    return h, h[:, -1, :]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t.  a/b (B,S,W) fp32; h0 (B,W) or None.
+
+    Returns (h (B,S,W), final (B,W)).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]

@@ -1,0 +1,42 @@
+"""Jitted wrapper: same signature as the model's ssd_chunked reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "impl"))
+def ssd_scan(x, dt, A, B_in, C_in, *, chunk: int = 256, interpret: bool = False,
+             impl: str = "pallas"):
+    """x (B,S,H,P); dt (B,S,H) post-softplus; A (H,)<0; B_in/C_in (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). Requires S % chunk == 0
+    (ops-level padding is the caller's job; the model path handles it).
+    """
+    if impl == "xla":
+        from repro.kernels.ssd_scan.ref import ssd_ref
+        return ssd_ref(x, dt, A, B_in, C_in, chunk)
+
+    B, S, H, P = x.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A.astype(jnp.float32)                       # (B,S,H)
+    cums = jnp.cumsum(dA.reshape(B, nc, Q, H), axis=2)     # (B,nc,Q,H)
+    cums = jnp.transpose(cums, (0, 3, 1, 2))               # (B,H,nc,Q)
+
+    xdt = (x * dt[..., None].astype(x.dtype))              # (B,S,H,P)
+    xdt = jnp.transpose(xdt.reshape(B, nc, Q, H, P), (0, 3, 1, 2, 4))
+
+    Bm = B_in.reshape(B, nc, Q, -1)
+    Cm = C_in.reshape(B, nc, Q, -1)
+
+    y, state = ssd_scan_kernel(xdt, Bm, Cm, cums, interpret=interpret)
+    y = jnp.transpose(y, (0, 2, 3, 1, 4)).reshape(B, S, H, P)
+    return y, state.astype(x.dtype)

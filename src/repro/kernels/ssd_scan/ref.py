@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the SSD chunked scan: re-exports the model's
+reference implementation (itself pure jnp and validated against decode)."""
+from repro.models.ssm import ssd_chunked as ssd_ref  # noqa: F401

@@ -1,0 +1,130 @@
+"""Analytic per-device memory model (TPU bf16 semantics).
+
+The XLA ``memory_analysis()`` on the CPU backend overstates HBM: CPU lacks
+native bf16 compute, so the backend inserts f32 promotions of weights and
+caches that a TPU build never materializes (verified in the phi3 decode HLO:
+f32 copies of the bf16 KV cache and of replicated attention weights).  This
+model computes what the SAME sharded program needs on TPU:
+
+    params(bf16, sharded) + optimizer(fp32 m/v/master, ZeRO)        [train]
+    + activation working set (scan carries per microbatch, logits)  [train]
+    + KV/state caches (bf16, sharded) + decode transients           [serve]
+
+Used by the roofline table as ``mem_model``; the XLA number is retained as
+``mem_xla`` (the compile-proof upper bound).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+
+
+def _shard_factor(pspec, mesh_shape: dict) -> int:
+    f = 1
+    for entry in pspec:
+        if entry is None:
+            continue
+        for ax in ((entry,) if isinstance(entry, str) else entry):
+            f *= mesh_shape[ax]
+    return f
+
+
+def _tree_bytes(spec_tree, ctx_like, mesh_shape, bytes_per_el: float,
+                zero1: bool = False) -> float:
+    """Sum sharded bytes over a P-spec tree."""
+    import jax
+
+    from repro.distributed.sharding import zero1_sharding
+    from repro.models.layers import is_p
+
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_p)
+    total = 0.0
+    data_axes = ctx_like.rules.get("batch") or ()
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    dsize = int(np.prod([mesh_shape[a] for a in data_axes])) if data_axes else 1
+    for p in leaves:
+        n = float(np.prod(p.shape))
+        ps = list(ctx_like.pspec(p.axes))
+        f = _shard_factor(ps, mesh_shape)
+        if zero1 and dsize > 1:
+            # extra data-axis sharding on the first divisible unsharded dim
+            ps_padded = ps + [None] * (len(p.shape) - len(ps))
+            for i, dim in enumerate(p.shape):
+                if ps_padded[i] is None and dim % dsize == 0:
+                    f *= dsize
+                    break
+        total += n / f * bytes_per_el
+    return total
+
+
+def model_memory(cfg: ModelConfig, shape: ShapeConfig, ctx, tc: TrainConfig,
+                 lm) -> dict:
+    mesh_shape = dict(ctx.mesh.shape)
+    n_data = int(np.prod([mesh_shape[a] for a in
+                          (ctx.rules.get("batch") or ())])) or 1
+    spec = lm.spec()
+    params = _tree_bytes(spec, ctx, mesh_shape, 2.0)          # bf16
+    out = {"params": params}
+
+    d, L, Vp = cfg.d_model, cfg.num_layers, cfg.padded_vocab
+    vshard = mesh_shape.get("model", 1)
+
+    if shape.kind == "train":
+        if ctx.mode == "fsdp":
+            # params/opt/grads all share the fully-sharded layout
+            from repro.distributed.sharding import fsdp_sharding
+            from repro.models.layers import is_p
+            import jax as _j
+            leaves = _j.tree_util.tree_leaves(spec, is_leaf=is_p)
+            tot = 0.0
+            for p in leaves:
+                f = _shard_factor(
+                    fsdp_sharding(ctx, p.axes, p.shape).spec, mesh_shape)
+                tot += float(np.prod(p.shape)) / f
+            out["params"] = tot * 2.0
+            out["opt"] = tot * 12.0
+            out["grads"] = tot * 4.0
+        else:
+            out["opt"] = _tree_bytes(spec, ctx, mesh_shape, 12.0, zero1=True)
+            out["grads"] = out["params"] * 2.0  # fp32, sharded like params
+        mb_tokens = shape.tokens_per_step / max(tc.microbatches, 1) / n_data
+        resid = L * mb_tokens * d * 2.0                        # scan carries
+        logits = mb_tokens * Vp / vshard * 4.0                 # fp32 xent
+        layer_ws = mb_tokens * max(cfg.d_ff or d, 4 * d) * 4.0 * 4
+        out["activations"] = resid + logits + layer_ws
+    else:
+        import jax as _jax
+        B = shape.global_batch
+        cache = 0.0
+        acache = _jax.eval_shape(lambda: lm.init_cache(B, shape.seq_len))
+        ax_tree = lm.cache_axes(ctx)
+        flat_c = _jax.tree_util.tree_leaves(acache)
+        flat_a = _jax.tree_util.tree_leaves(
+            ax_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        from repro.distributed.sharding import batch_pspec
+        b = batch_pspec(ctx, B)
+        for leaf, axes in zip(flat_c, flat_a):
+            ps = []
+            used = set()
+            for ax in axes:
+                v = b if ax == "batch" else (ctx.rules.get(ax) if ax else None)
+                if isinstance(v, (tuple, list)):
+                    v = tuple(a for a in v if a not in used) or None
+                if isinstance(v, str) and v in used:
+                    v = None
+                if v is not None:
+                    used.update((v,) if isinstance(v, str) else v)
+                ps.append(v)
+            f = _shard_factor(ps, mesh_shape)
+            cache += float(np.prod(leaf.shape)) * leaf.dtype.itemsize / f
+        out["cache"] = cache * 2.0  # in+out buffers (donation halves on TPU)
+        toks = (shape.seq_len if shape.kind == "prefill" else 1)
+        out["activations"] = (B / n_data) * toks * max(d * 6, 1) * 2.0 + \
+            (B / n_data) * Vp / vshard * 4.0
+
+    out["total"] = float(sum(out.values()))
+    out["fits_hbm"] = out["total"] <= 16e9
+    return out

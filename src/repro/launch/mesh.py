@@ -1,0 +1,15 @@
+"""Production mesh builders (TPU v5e target: 16x16 = 256 chips per pod)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for subprocess-based sharding tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,108 @@
+"""Roofline analysis over dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, from the compiled artifact:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s          [197 TF/s bf16]
+    memory     = HLO_bytes_per_device / HBM_bw               [819 GB/s]
+    collective = wire_bytes_per_device / link_bw             [~50 GB/s ICI]
+
+plus MODEL_FLOPS (6·N_active·tokens for train, 2·N_active·tokens for
+inference), the useful-compute ratio, the dominant term, and a one-line
+recommendation.  ``python -m repro.launch.roofline [--dir experiments/dryrun]``
+prints the full table in markdown.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9,
+      "hbm_bytes": 16e9}
+
+
+def analyze(rec: dict) -> dict | None:
+    if not rec.get("applicable", True):
+        return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "skip": rec.get("skip_reason", "n/a"), "tag": rec.get("tag", "")}
+    t_comp = rec["flops_per_device"] / HW["peak_flops"]
+    t_mem = rec["bytes_accessed_per_device"] / HW["hbm_bw"]
+    t_coll = rec["wire_bytes_per_device"] / HW["link_bw"]
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * rec["active_params"] * rec["tokens_per_step"]
+    hlo_total = rec["flops_per_device"] * rec["n_devices"]
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    bound = max(terms.values())
+    # fraction of the ideal: time if compute ran at peak vs the bounding term
+    frac = t_comp / bound if bound > 0 else 0.0
+    rec_txt = {
+        "compute": "raise MODEL_FLOPS ratio (remat policy, causal-skip kernel, "
+                   "MoE capacity factor)",
+        "memory": "improve arithmetic intensity (fusion, larger microbatch, "
+                  "bf16 spills)",
+        "collective": "cut wire bytes (bf16 collectives, FSDP-style resharding, "
+                      "sequence-parallel residual, EP dispatch locality)",
+    }[dom]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", "baseline"),
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom, "roofline_frac": frac,
+        "model_flops": model_flops, "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "mem_peak_gb": rec.get("memory", {}).get("peak", 0) / 1e9,
+        "mem_model_gb": rec.get("mem_model", {}).get("total", 0) / 1e9,
+        "fits_hbm": rec.get("mem_model", {}).get(
+            "fits_hbm", rec.get("memory", {}).get("fits_hbm")),
+        "recommendation": rec_txt,
+    }
+
+
+def load_all(d: str) -> list[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(rows: list[dict], mesh_filter: str | None = None) -> str:
+    hdr = ("| arch | shape | mesh | tag | compute s | memory s | coll s | "
+           "dominant | frac | useful | memXLA GB | memTPU GB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        a = analyze(r)
+        if a is None:
+            continue
+        if mesh_filter and mesh_filter not in a["mesh"]:
+            continue
+        if "skip" in a:
+            lines.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+                         f"{a.get('tag','')} | — | — | — | SKIP: {a['skip']} "
+                         f"| — | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | {a['tag']} "
+            f"| {a['compute_s']:.3f} | {a['memory_s']:.3f} "
+            f"| {a['collective_s']:.3f} | {a['dominant']} "
+            f"| {a['roofline_frac']:.2f} | {a['useful_ratio']:.2f} "
+            f"| {a['mem_peak_gb']:.1f} | {a['mem_model_gb']:.1f} "
+            f"| {a['fits_hbm']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load_all(args.dir)
+    print(table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

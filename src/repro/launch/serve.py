@@ -1,0 +1,68 @@
+"""Batched serving driver: prefill a prompt batch, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        --batch 4 --prompt-len 48 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import TokenPipeline
+from repro.models import LM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="demo-100m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    total = args.prompt_len + args.gen
+    lm = LM(cfg, max_seq=total)
+    shape = ShapeConfig("cli", "prefill", args.prompt_len, args.batch)
+    pipe = TokenPipeline(cfg, shape, seed=args.seed)
+
+    hb = pipe.prefill_batch(0)
+    batch = {k: jnp.asarray(v) for k, v in hb.items()}
+
+    prefill = jax.jit(lambda p, b: lm.prefill(p, b, cache_len=total))
+    decode = jax.jit(lm.decode_step)
+
+    params = lm.init(jax.random.PRNGKey(args.seed))
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    toks = []
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(args.gen):
+        toks.append(tok)
+        logits, cache = decode(params, cache, {"token": tok})
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(toks[-1])
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(toks, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill:.2f}s; "
+          f"decode {args.gen} tokens: {t_decode:.2f}s "
+          f"({args.gen*args.batch/t_decode:.1f} tok/s)")
+    print("sample generated ids:", out[0, :12].tolist())
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.padded_vocab))
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

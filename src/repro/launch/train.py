@@ -1,0 +1,85 @@
+"""End-to-end training driver (CPU-runnable at reduced scale).
+
+    PYTHONPATH=src python -m repro.launch.train --arch demo-100m --steps 20 \
+        --batch 8 --seq 128 [--reduced] [--ckpt-dir ckpts] [--resume]
+
+On TPU pods the same driver runs with --mesh pod/multipod (shardings come
+from the identical build_train_step used by the dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, TrainConfig, get_config
+from repro.configs.base import ShapeConfig
+from repro.data import TokenPipeline
+from repro.models import LM
+from repro.optim import adamw_update, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="demo-100m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1),
+                     schedule=cfg.schedule, microbatches=args.microbatches)
+    lm = LM(cfg, max_seq=args.seq)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    pipe = TokenPipeline(cfg, shape, seed=args.seed)
+
+    params = lm.init(jax.random.PRNGKey(tc.seed))
+    opt = init_opt_state(params)
+    start = 0
+
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ck and args.resume and ck.latest_step() is not None:
+        restored, start = ck.restore({"params": params,
+                                      "opt": opt._asdict()})
+        params = restored["params"]
+        from repro.optim.optimizer import OptState
+        opt = OptState(**restored["opt"])
+        print(f"resumed from step {start}")
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        (loss, m), grads = jax.value_and_grad(lm.loss, has_aux=True)(params, batch)
+        opt2, params2, om = adamw_update(tc, opt, grads, params)
+        return params2, opt2, {"loss": loss, **om}
+
+    for step in range(start, args.steps):
+        hb = pipe.train_batch(step)
+        batch = {k: jnp.asarray(v) for k, v in hb.items()}
+        t0 = time.perf_counter()
+        params, opt, metrics = train_step(params, opt, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        print(f"step {step:4d} loss {loss:.4f} lr {float(metrics['lr']):.2e} "
+              f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s")
+        if ck and (step + 1) % args.ckpt_every == 0:
+            info = ck.save(step + 1, {"params": params, "opt": opt._asdict()})
+            print(f"  ckpt@{step+1}: {info.nbytes/1e6:.1f} MB "
+                  f"({info.n_leaves_written}/{info.n_leaves_total} leaves, "
+                  f"{info.seconds:.2f}s)")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import LM
+
+__all__ = ["LM"]

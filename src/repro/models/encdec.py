@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub:
+``input_specs`` feeds precomputed frame embeddings (B, enc_seq, d_model)).
+
+Learned absolute positions, bidirectional encoder, causal decoder with
+cross-attention; decode uses a self-attn cache + precomputed cross K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard
+from repro.models import attention as attn
+from repro.models.layers import P, embed_spec, rms_norm, stack_spec, swiglu
+from repro.models.transformer import mlp_spec, _o_proj
+
+
+def enc_layer_spec(cfg):
+    ln = lambda: P((cfg.d_model,), ("embed",), init="zeros")
+    return {"ln1": ln(), "attn": attn.attn_spec(cfg), "ln2": ln(),
+            "mlp": mlp_spec(cfg)}
+
+
+def dec_layer_spec(cfg):
+    ln = lambda: P((cfg.d_model,), ("embed",), init="zeros")
+    return {"ln1": ln(), "attn": attn.attn_spec(cfg),
+            "lnx": ln(), "xattn": attn.attn_spec(cfg),
+            "ln2": ln(), "mlp": mlp_spec(cfg)}
+
+
+def encdec_spec(cfg, max_seq: int):
+    d = cfg.d_model
+    return {
+        "embed": embed_spec(cfg),
+        "enc_pos": P((cfg.encoder_seq, d), ("enc_seq", "embed"), scale=0.02),
+        "dec_pos": P((max_seq, d), ("pos", "embed"), scale=0.02),
+        "encoder": stack_spec(enc_layer_spec(cfg), cfg.encoder_layers),
+        "decoder": stack_spec(dec_layer_spec(cfg), cfg.num_layers),
+        "ln_enc": P((d,), ("embed",), init="zeros"),
+        "ln_f": P((d,), ("embed",), init="zeros"),
+        "w_out": P((cfg.padded_vocab, d), ("vocab", "embed")),
+    }
+
+
+def encoder_forward(params, frames, cfg, ctx=None):
+    """frames (B, Senc, d) -> (B, Senc, d)."""
+    Senc = frames.shape[1]
+    frames = frames.astype(params["embed"].dtype)  # stub frontend may emit f32
+    x = frames + params["enc_pos"][:Senc].astype(frames.dtype)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, jnp.zeros(h.shape[:2], jnp.int32))
+        o = attn.cross_attention(q, k, v)  # unmasked bidirectional
+        x = x + _o_proj(o, lp["attn"]["wo"])
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        x = shard(ctx, x, "batch", "seq", None)
+        return x, None
+
+    if cfg.exact_costs:
+        for i in range(cfg.encoder_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["encoder"])
+            x, _ = body(x, lp)
+    else:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+    return k, v
+
+
+def decoder_forward(params, x, enc_out, cfg, ctx=None, positions=None, *,
+                    want_cache: bool = False, cache_len: int | None = None):
+    """x (B,S,d) decoder stream; enc_out (B,Senc,d). Returns (x, cache|None)."""
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, positions)
+        o = attn.full_causal_attention(q, k, v)
+        x = x + _o_proj(o, lp["attn"]["wo"])
+
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xattn"]["wq"])
+        xk, xv = _cross_kv(lp, enc_out, cfg)
+        ox = attn.cross_attention(qx, xk, xv)
+        x = x + _o_proj(ox, lp["xattn"]["wo"])
+
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        x = shard(ctx, x, "batch", "seq", None)
+        entry = None
+        if want_cache:
+            sk, sv = jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+            target = cache_len or sk.shape[2]
+            if target > sk.shape[2]:
+                pad = ((0, 0), (0, 0), (0, target - sk.shape[2]), (0, 0))
+                sk, sv = jnp.pad(sk, pad), jnp.pad(sv, pad)
+            entry = {"self_k": sk, "self_v": sv,
+                     "cross_k": jnp.swapaxes(xk, 1, 2), "cross_v": jnp.swapaxes(xv, 1, 2)}
+        return x, entry
+
+    if cfg.exact_costs:
+        el = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["decoder"])
+            x, e = body(x, lp)
+            el.append(e)
+        entries = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *el)
+                   if want_cache else None)
+        return x, ({"stack": entries} if want_cache else None)
+
+    x, entries = jax.lax.scan(body, x, params["decoder"])
+    return x, ({"stack": entries} if want_cache else None)
+
+
+def decoder_decode(params, x, cfg, ctx, pos, cache):
+    """One-token decode. cache entries per layer: self_k/self_v (B,KV,S,hd),
+    cross_k/cross_v (B,KV,Senc,hd)."""
+    from repro.distributed.decode_attn import sp_decode_attention
+
+    def body(x, lp_c):
+        lp, c = lp_c
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, pos[:, None])
+        if ctx is not None and ctx.sp_decode:
+            o, kc, vc = sp_decode_attention(ctx, q, c["self_k"], c["self_v"], k, v, pos)
+        else:
+            kc, vc = attn.cache_write_plain(c["self_k"], c["self_v"], k, v, pos)
+            o = attn.decode_attention_plain(q, kc, vc, pos)
+        x = x + _o_proj(o, lp["attn"]["wo"])
+
+        hx = rms_norm(x, lp["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xattn"]["wq"])
+        ox = attn.decode_attention_plain(
+            qx, c["cross_k"], c["cross_v"],
+            jnp.full((x.shape[0],), c["cross_k"].shape[2] - 1, jnp.int32))
+        x = x + _o_proj(ox, lp["xattn"]["wo"])
+
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+        return x, {"self_k": kc, "self_v": vc,
+                   "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    if cfg.exact_costs:
+        outs = []
+        for i in range(cfg.num_layers):
+            sl = jax.tree_util.tree_map(lambda a: a[i],
+                                        (params["decoder"], cache["stack"]))
+            x, nc = body(x, sl)
+            outs.append(nc)
+        new_entries = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+        return x, {"stack": new_entries, "pos": cache["pos"]}
+
+    x, new_entries = jax.lax.scan(body, x, (params["decoder"], cache["stack"]))
+    return x, {"stack": new_entries, "pos": cache["pos"]}
+
+
+def init_cache(cfg, B: int, cache_len: int, dtype=jnp.bfloat16):
+    KV, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    return {"stack": {
+        "self_k": jnp.zeros((L, B, KV, cache_len, hd), dtype),
+        "self_v": jnp.zeros((L, B, KV, cache_len, hd), dtype),
+        "cross_k": jnp.zeros((L, B, KV, cfg.encoder_seq, hd), dtype),
+        "cross_v": jnp.zeros((L, B, KV, cfg.encoder_seq, hd), dtype),
+    }, "pos": jnp.zeros((B,), jnp.int32)}
+
+
+def cache_axes(cfg, ctx):
+    sp = ctx is not None and ctx.sp_decode
+    self_ax = ("layers", "batch", None, "cache_seq" if sp else None, None)
+    cross_ax = ("layers", "batch", None, None, None)
+    return {"stack": {"self_k": self_ax, "self_v": self_ax,
+                      "cross_k": cross_ax, "cross_v": cross_ax},
+            "pos": ("batch",)}

@@ -1,0 +1,25 @@
+"""Stub modality frontends.
+
+Per the assignment, [audio]/[vlm] architectures specify the transformer
+backbone only; the modality frontend is a STUB — ``input_specs()`` supplies
+precomputed frame/patch embeddings.  These helpers generate deterministic
+synthetic embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synthetic_patch_embeds(key, batch: int, num_patches: int, d_model: int,
+                           dtype=jnp.bfloat16):
+    """Stand-in for an InternViT patch encoder output."""
+    return (jax.random.normal(key, (batch, num_patches, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def synthetic_frame_embeds(key, batch: int, num_frames: int, d_model: int,
+                           dtype=jnp.bfloat16):
+    """Stand-in for whisper's conv mel-spectrogram frontend output."""
+    return (jax.random.normal(key, (batch, num_frames, d_model), jnp.float32)
+            * 0.02).astype(dtype)

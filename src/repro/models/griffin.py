@@ -1,0 +1,90 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU [arXiv:2402.19427].
+
+Temporal mixing: x -> linear -> causal conv1d (linear) -> RG-LRU, gated by a
+GeLU branch.  Training/prefill use ``jax.lax.associative_scan`` in fp32 (the
+Pallas kernel in :mod:`repro.kernels.rg_lru` is the TPU sequential-scan
+version); decode is a single recurrence step on O(1) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard
+from repro.models.layers import P, causal_conv1d, silu
+
+LRU_C = 8.0          # RG-LRU exponent constant
+NUM_BLOCKS = 8       # block-diagonal gate projections
+
+
+def rglru_spec(cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    k = w // NUM_BLOCKS
+    return {
+        "w_gate": P((d, w), ("embed", "lru")),
+        "w_x": P((d, w), ("embed", "lru")),
+        "conv_w": P((w, cfg.conv_width), ("lru", None)),
+        "gate_a_w": P((NUM_BLOCKS, k, k), ("lru_block", None, None)),
+        "gate_a_b": P((w,), ("lru",), init="zeros"),
+        "gate_x_w": P((NUM_BLOCKS, k, k), ("lru_block", None, None)),
+        "gate_x_b": P((w,), ("lru",), init="zeros"),
+        "lambda_p": P((w,), ("lru",), init="lambda"),
+        "w_out": P((w, d), ("lru", "embed")),
+    }
+
+
+def _block_diag(x, w, b):
+    """x (B,S,w) through block-diagonal projection (nb,k,k)."""
+    B, S, W = x.shape
+    nb, k, _ = w.shape
+    xr = x.reshape(B, S, nb, k)
+    y = jnp.einsum("bsnk,nkj->bsnj", xr, w).reshape(B, S, W)
+    return y + b.astype(y.dtype)
+
+
+def _rglru_coeffs(p, x):
+    """Gates/coefficients. Returns (a, gated_input) both fp32, shapes (B,S,w)."""
+    r = jax.nn.sigmoid(_block_diag(x, p["gate_a_w"], p["gate_a_b"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(x, p["gate_x_w"], p["gate_x_b"]).astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    return a, beta * i * x.astype(jnp.float32)
+
+
+def rglru_scan(p, x, init_state=None):
+    """Associative scan over S. x (B,S,w) -> (y (B,S,w), final_state (B,w))."""
+    a, bx = _rglru_coeffs(p, x)
+    if init_state is not None:
+        # fold h_{-1} into the first step: b_0 += a_0 * h_init
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * init_state.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h.astype(x.dtype), h[:, -1, :].astype(x.dtype)
+
+
+def rglru_step(p, x, state):
+    """One decode step. x (B,1,w), state (B,w)."""
+    a, bx = _rglru_coeffs(p, x)
+    h = a[:, 0] * state.astype(jnp.float32) + bx[:, 0]
+    return h[:, None, :].astype(x.dtype), h.astype(x.dtype)
+
+
+def recurrent_forward(p, x_res, cfg, ctx=None, conv_state=None, lru_state=None,
+                      decode: bool = False):
+    """Full griffin recurrent mixer. x_res (B,S,d) -> (y, (conv_state, lru_state))."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_res, p["w_gate"]))
+    xl = jnp.einsum("bsd,dw->bsw", x_res, p["w_x"])
+    xl = shard(ctx, xl, "batch", "seq", "lru")
+    xl, new_conv = causal_conv1d(xl, p["conv_w"], conv_state, activation=False)
+    if decode:
+        h, new_state = rglru_step(p, xl, lru_state)
+    else:
+        h, new_state = rglru_scan(p, xl, lru_state)
+    y = jnp.einsum("bsw,wd->bsd", gate * h, p["w_out"])
+    return y, (new_conv, new_state)

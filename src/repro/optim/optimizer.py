@@ -1,0 +1,92 @@
+"""AdamW with cosine / WSD schedules, fp32 master weights, global-norm clip.
+
+Optimizer state is a pytree mirroring the params; under ZeRO-1 the moments
+and master weights are additionally sharded over the data axes (see
+``repro.distributed.sharding.zero1_axes``) — GSPMD then emits
+reduce-scatter(grads) / all-gather(params) around the update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    master: dict
+
+
+def make_schedule(tc: TrainConfig):
+    """cosine: warmup -> cosine to 10%.  wsd (minicpm): warmup -> stable ->
+    linear decay over the last ``wsd_decay_frac`` of training."""
+    base = tc.learning_rate
+
+    def sched(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(s / jnp.maximum(tc.warmup_steps, 1), 1.0)
+        if tc.schedule == "wsd":
+            decay_steps = max(int(tc.total_steps * tc.wsd_decay_frac), 1)
+            start = tc.total_steps - decay_steps
+            frac = jnp.clip((s - start) / decay_steps, 0.0, 1.0)
+            return base * warm * (1.0 - 0.9 * frac)
+        prog = jnp.clip(s / max(tc.total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return base * warm * (0.1 + 0.9 * cos)
+
+    return sched
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree_util.tree_map(jnp.copy, zeros), master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(tc: TrainConfig, state: OptState, grads, params):
+    """Returns (new_state, new_params(bf16-cast), metrics)."""
+    sched = make_schedule(tc)
+    step = state.step + 1
+    lr = sched(step)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2, eps, wd = tc.beta1, tc.beta2, tc.eps, tc.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * clip
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps) + wd * w
+        w2 = w - lr * update
+        return m2, v2, w2
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_w = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_w = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+
+    pdtype = jax.tree_util.tree_leaves(params)[0].dtype
+    new_params = jax.tree_util.tree_map(lambda w: w.astype(pdtype), new_w)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return OptState(step, new_m, new_v, new_w), new_params, metrics

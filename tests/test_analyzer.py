@@ -1,0 +1,106 @@
+"""Migration analyzer: policies + Algorithm 2 (paper §II-C)."""
+import numpy as np
+
+from repro.core import (
+    ContextDetector, KnowledgeBase, MigrationAnalyzer, Notebook, PerfModel,
+    fit_linear, intersection, substitute_kwarg,
+)
+
+
+def test_substitute_kwarg():
+    src = "m = model.fit(x, epochs=50, bs=4)"
+    out = substitute_kwarg(src, "epochs", 2)
+    assert "epochs=2" in out and "bs=4" in out
+
+
+def test_intersection_paper_fig11():
+    # local slope 21.5, remote slope 21.5/4.43=4.85, migration 120s:
+    # paper: "for epochs e > 7, the migration pays off"
+    ml = (21.5, 30.0)
+    mr = (21.5 / 4.43, 30.0 / 1.0)
+    e = intersection(ml, mr, migration_time=120.0)
+    assert 6.0 < e < 8.5
+
+
+def test_intersection_remote_never_wins():
+    assert intersection((1.0, 0.0), (2.0, 5.0)) == float("inf")
+
+
+def test_knowledge_policy_decision():
+    kb = KnowledgeBase()
+    kb.seed("epochs", 7.0)
+    an = MigrationAnalyzer(kb, ContextDetector())
+    nb = Notebook("nb")
+    hi = nb.add_cell("m = fit(x, epochs=50)")
+    lo = nb.add_cell("m = fit(x, epochs=3)")
+    assert an.decide(nb, hi).env == "remote"
+    assert an.decide(nb, lo).env == "local"
+    assert any("knowledge" in a for a in hi.annotations)  # explainability
+
+
+def test_performance_single_policy():
+    kb = KnowledgeBase()
+    perf = PerfModel()
+    an = MigrationAnalyzer(kb, ContextDetector(), perf, policy="single",
+                           use_knowledge=False, migration_latency=1.0,
+                           migration_bandwidth=1e9)
+    nb = Notebook("nb")
+    cell = nb.add_cell("z = crunch(x)")
+    # no history -> local
+    assert an.decide(nb, cell).env == "local"
+    perf.observe(cell.cell_id, "local", 60.0)
+    perf.observe(cell.cell_id, "remote", 2.0)
+    an.observe_state_size("nb", 1e6)
+    assert an.decide(nb, cell).env == "remote"
+    # huge state -> migration dominates -> stay local
+    an.observe_state_size("nb", 1e12)
+    assert an.decide(nb, cell).env == "local"
+
+
+def test_performance_block_policy_uses_context():
+    kb = KnowledgeBase()
+    ctxd = ContextDetector()
+    perf = PerfModel()
+    an = MigrationAnalyzer(kb, ctxd, perf, policy="block", use_knowledge=False,
+                           migration_latency=5.0, migration_bandwidth=1e9)
+    nb = Notebook("nb")
+    cells = [nb.add_cell(f"s{i} = work_{i}()") for i in range(3)]
+    # history: block (0,1,2) repeatedly, plus a distinct (0,1) run so the
+    # evidence guard (>=2 candidate sequences) is satisfied
+    for _ in range(3):
+        for o in range(3):
+            ctxd.record("nb", o)
+    ctxd.record("nb", 0)
+    ctxd.record("nb", 1)
+    for c in cells:  # cheap individually, worthwhile as a block
+        perf.observe(c.cell_id, "local", 8.0)
+        perf.observe(c.cell_id, "remote", 0.4)
+    an.observe_state_size("nb", 1e6)
+    d = an.decide(nb, cells[0])
+    # Algorithm-1 scoring prefers the most frequent subsequence (0,1)
+    assert d.env == "remote" and d.block in ((0, 1), (0, 1, 2))
+
+
+def test_algorithm2_updates_kb():
+    kb = KnowledgeBase()
+    kb.seed("epochs", 50.0)
+    an = MigrationAnalyzer(kb, ContextDetector(), migration_latency=120.0,
+                           migration_bandwidth=1e12)
+    an.state_size_estimate["default"] = 0.0
+    nb = Notebook("nb")
+    cell = nb.add_cell("m = fit(x, epochs=20)")
+
+    class RT:
+        def probe(self, src, env):
+            import re
+            e = int(re.search(r"epochs=(\d+)", src).group(1))
+            return 30 + 21.5 * e if env == "local" else 30 + (21.5 / 4.43) * e
+
+    updated = an.update_parameters(cell, RT())
+    assert 6.0 < updated["epochs"] < 8.5
+    assert kb.get("epochs").source == "learned"
+    assert kb.get("epochs").threshold == updated["epochs"]
+    assert kb.records("kb-update")
+    # linear fit sanity
+    a, b = fit_linear([1, 2, 3], [51.5, 73.0, 94.5])
+    assert abs(a - 21.5) < 1e-6 and abs(b - 30.0) < 1e-6

@@ -1,0 +1,56 @@
+"""AST dependency analysis (paper §II-D)."""
+import numpy as np
+
+from repro.core.astdeps import analyze_cell, cell_dependencies
+
+
+def test_loads_stores_kwargs():
+    info = analyze_cell("y = model.fit(x, epochs=10, batch_size=32)\nz = y + w")
+    assert {"model", "x", "w"} <= info.loads
+    assert {"y", "z"} <= info.stores
+    assert info.call_kwargs["model.fit"] == {"epochs": 10, "batch_size": 32}
+
+
+def test_imports_tracked():
+    info = analyze_cell("import numpy as np\nfrom os import path")
+    assert "numpy" in info.imports and "os" in info.imports
+    assert "np" in info.stores
+
+
+def test_closure_pulls_function_globals():
+    ns = {}
+    exec("""
+import math
+scale = 2.0
+offset = 1.0
+unused = list(range(100))
+def inner(v):
+    return v * scale
+def outer(v):
+    return inner(v) + offset
+""", ns)
+    needed, modules, _ = cell_dependencies("r = outer(3.0)", ns)
+    assert {"outer", "inner", "scale", "offset"} <= needed
+    assert "unused" not in needed
+    assert "math" not in needed  # module: re-imported, not serialized
+
+
+def test_module_use_recorded():
+    ns = {}
+    exec("import numpy as np\nx = np.arange(4)", ns)
+    needed, modules, _ = cell_dependencies("y = np.sum(x)", ns)
+    assert "x" in needed and "np" not in needed
+    assert "numpy" in modules
+
+
+def test_container_values_captured_via_name():
+    ns = {"items": [np.zeros(4), np.ones(4)], "k": 3}
+    needed, _, _ = cell_dependencies("total = sum(x.sum() for x in items) + k", ns)
+    assert {"items", "k"} <= needed
+
+
+def test_runtime_analysis_ignores_untaken_names():
+    # only names that resolve in the live namespace become dependencies
+    ns = {"a": 1}
+    needed, _, _ = cell_dependencies("b = a + undefined_later", ns)
+    assert needed == {"a"}

@@ -1,0 +1,95 @@
+"""Delta checkpointing + restart."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, Checkpointer
+
+
+def _tree(x=0.0):
+    return {"params": {"w": jnp.arange(100, dtype=jnp.float32) + x,
+                       "frozen": jnp.ones((50,), jnp.float32)},
+            "meta": {"step": np.int64(3)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(1, {"state": t})
+    out, step = ck.restore({"state": t})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_delta_skips_unchanged_leaves(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    i1 = ck.save(1, {"state": _tree(0.0)})
+    assert i1.n_leaves_written == i1.n_leaves_total
+    i2 = ck.save(2, {"state": _tree(1.0)})   # only "w" changed
+    assert i2.n_leaves_written < i2.n_leaves_total
+    out, step = ck.restore({"state": _tree()})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["w"]),
+                                  np.arange(100, dtype=np.float32) + 1.0)
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["frozen"]),
+                                  np.ones(50, np.float32))
+
+
+def test_restore_specific_step(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"state": _tree(0.0)})
+    ck.save(2, {"state": _tree(5.0)})
+    out, step = ck.restore({"state": _tree()}, step=1)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["w"]),
+                                  np.arange(100, dtype=np.float32))
+
+
+def test_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"state": _tree()})
+    blob = [f for f in os.listdir(tmp_path) if f.endswith(".bin")][0]
+    p = os.path.join(tmp_path, blob)
+    data = bytearray(open(p, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(p, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        ck.restore({"state": _tree()})
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(Checkpointer(str(tmp_path)))
+    ck.save(1, {"state": _tree()})
+    ck.wait()
+    assert ck.last_info is not None and ck.last_info.step == 1
+    out, step = ck.inner.restore({"state": _tree()})
+    assert step == 1
+
+
+def test_gc_rebase_chain(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, rebase_every=5)
+    for s in range(1, 7):
+        ck.save(s, {"state": _tree(float(s))})
+    steps = ck._steps()
+    # save #6 is a FULL rebase -> everything older is GC-safe to drop
+    assert steps[-1] == 6
+    assert ck._manifest(6)["full"]
+    out, step = ck.restore({"state": _tree()})
+    assert step == 6
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["w"]),
+                                  np.arange(100, dtype=np.float32) + 6.0)
+
+
+def test_restart_mid_chain(tmp_path):
+    ck = Checkpointer(str(tmp_path), rebase_every=10)
+    for s in range(1, 5):
+        ck.save(s, {"state": _tree(float(s))})
+    # fresh process: new Checkpointer over the same dir
+    ck2 = Checkpointer(str(tmp_path), rebase_every=10)
+    out, step = ck2.restore({"state": _tree()})
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["w"]),
+                                  np.arange(100, dtype=np.float32) + 4.0)

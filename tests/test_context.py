@@ -1,0 +1,73 @@
+"""Context detector (paper §II-B, Algorithm 1)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import ContextDetector, get_sequences, sequence_stats
+
+
+def test_paper_example_sequences():
+    # §II-B: "1,2,3,2,3 contains two sequences: 1,2,3 and 2,3"
+    assert get_sequences([1, 2, 3, 2, 3]) == [(1, 2, 3), (2, 3)]
+
+
+def test_paper_example_scores():
+    stats = sequence_stats([1, 2, 3, 2, 3])
+    assert abs(stats[(2, 3)] - 200 / 3) < 1e-9      # subset of (1,2,3) -> 2/3
+    assert abs(stats[(1, 2, 3)] - 100 / 3) < 1e-9
+
+
+def test_duplicates_counted():
+    # two identical (2,3) runs + one (1,2,3): (2,3) subtotal = 2 + 1
+    stats = sequence_stats([2, 3, 2, 3, 1, 2, 3])
+    assert stats[(2, 3)] > stats[(1, 2, 3)]
+
+
+def test_current_cell_filter():
+    stats = sequence_stats([1, 2, 3, 5, 6, 5, 6], current_order=5)
+    assert all(5 in s for s in stats)
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=60))
+@settings(max_examples=200, deadline=None)
+def test_sequences_partition_history(hist):
+    seqs = get_sequences(hist)
+    # invariant 1: concatenation reproduces the history
+    flat = [o for s in seqs for o in s]
+    assert flat == hist
+    # invariant 2: every run is non-decreasing
+    for s in seqs:
+        assert all(a <= b for a, b in zip(s, s[1:]))
+
+
+@given(st.lists(st.integers(0, 6), min_size=2, max_size=50))
+@settings(max_examples=200, deadline=None)
+def test_scores_normalized(hist):
+    stats = sequence_stats(hist)
+    assert abs(sum(stats.values()) - 100.0) < 1e-6
+    assert all(v > 0 for v in stats.values())
+
+
+def test_predict_block_from_history():
+    det = ContextDetector()
+    for _ in range(3):
+        for o in (2, 3, 4):
+            det.record("nb", o)
+    det.record("nb", 0)
+    assert det.predict_block("nb", 2) == (2, 3, 4)
+    assert det.predict_block("nb", 3) == (3, 4)
+    # unseen cell: degenerate block of itself
+    assert det.predict_block("nb", 9) == (9,)
+
+
+def test_detector_consumes_telemetry():
+    from repro.core import telemetry as T
+    bus = T.MQBus()
+    det = ContextDetector()
+    det.attach(bus)
+    ids = ("a", "b", "c")
+    for cid, order in (("a", 0), ("b", 1), ("c", 2)):
+        bus.publish("telemetry", T.TelemetryMessage(
+            datetime=0.0, type=T.CELL_EXECUTION_COMPLETED, cell_id=cid,
+            notebook="nb", cell_ids=ids, session="s", path="p",
+            payload={"order": order}))
+    assert det.history["nb"] == [0, 1, 2]

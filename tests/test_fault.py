@@ -1,0 +1,96 @@
+"""Fault tolerance: heartbeat failures, stragglers, restart, elastic rescale."""
+from repro.core.simclock import SimClock
+from repro.distributed.fault import Coordinator, ElasticTrainer
+
+
+def _trainer(fail_at=None, straggle=None, spares=0, workers=4):
+    clock = SimClock()
+    coord = Coordinator([f"w{i}" for i in range(workers)], clock,
+                        beat_interval=1.0, miss_threshold=3,
+                        straggler_patience=2)
+    saved = {"step": 0}
+    log = {"steps_run": []}
+    detected = set()   # once the coordinator declares a worker dead, the
+                       # "replacement node" behaves normally again
+
+    def step_fn(step, world):
+        log["steps_run"].append((step, tuple(world)))
+        out = {}
+        for w in world:
+            if (fail_at is not None and w == fail_at["worker"]
+                    and step >= fail_at["step"] and w not in detected):
+                if not coord.workers[w].alive:
+                    detected.add(w)
+                continue  # crashed: no duration, no heartbeat
+            t = 1.0
+            if straggle and w == straggle["worker"] and step >= straggle["from"]:
+                t = straggle["factor"]
+            out[w] = t
+        return out
+
+    def save_fn(step):
+        saved["step"] = step
+
+    def restore_fn():
+        for w in list(coord.workers):
+            if not coord.workers[w].alive:
+                detected.add(w)
+        return saved["step"]
+
+    rescales = {"worlds": []}
+
+    def rescale_fn(world):
+        rescales["worlds"].append(tuple(world))
+
+    et = ElasticTrainer(coord, step_fn=step_fn, save_fn=save_fn,
+                        restore_fn=restore_fn, rescale_fn=rescale_fn,
+                        checkpoint_every=5, spares=spares)
+    return et, coord, saved, log, rescales
+
+
+def test_failure_triggers_restart_from_checkpoint():
+    et, coord, saved, log, _ = _trainer(fail_at={"step": 7, "worker": "w2"},
+                                        spares=1)
+    res = et.run(12)
+    assert res["restarts"] == 1
+    kinds = [e.kind for e in res["events"]]
+    assert "failure" in kinds
+    # training resumed from the last checkpoint (step 5), not from scratch
+    resumed = [s for s, _ in log["steps_run"]]
+    assert resumed.count(5) >= 2 and res["steps"] == 12
+
+
+def test_failure_without_spares_rescales():
+    et, coord, saved, log, rescales = _trainer(
+        fail_at={"step": 7, "worker": "w2"}, spares=0)
+    res = et.run(12)
+    assert res["rescales"] == 1
+    assert rescales["worlds"] and len(rescales["worlds"][0]) == 3
+    assert all("w2" not in world for _, world in log["steps_run"][-2:])
+
+
+def test_failure_with_spare_keeps_world_size():
+    et, coord, saved, log, rescales = _trainer(
+        fail_at={"step": 7, "worker": "w2"}, spares=1)
+    res = et.run(12)
+    assert res["rescales"] == 0
+    assert "restart" in [e.kind for e in res["events"]]
+    assert len(log["steps_run"][-1][1]) == 4
+
+
+def test_straggler_evicted():
+    et, coord, saved, log, rescales = _trainer(
+        straggle={"worker": "w3", "from": 4, "factor": 30.0}, spares=0,
+        workers=5)
+    res = et.run(10)
+    kinds = [e.kind for e in res["events"]]
+    assert "straggler" in kinds
+    assert all("w3" not in world for _, world in log["steps_run"][-2:])
+
+
+def test_no_faults_clean_run():
+    et, coord, saved, log, _ = _trainer()
+    res = et.run(8)
+    assert res["restarts"] == 0 and res["rescales"] == 0
+    assert saved["step"] == 5
+    assert len(log["steps_run"]) == 8

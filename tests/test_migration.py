@@ -1,0 +1,118 @@
+"""Migration engine + hybrid runtime (paper §II, Fig. 1/3)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExecutionEnvironment, HybridRuntime, MigrationEngine, Notebook,
+    StateReducer,
+)
+from repro.core import telemetry as T
+
+
+def _seeded_envs():
+    l = ExecutionEnvironment("local")
+    r = ExecutionEnvironment("remote", speedup=8.0)
+    l.execute("""
+import numpy as np
+data = np.arange(5000, dtype=np.float32)
+factor = 3.0
+def scalef(x):
+    return x * factor
+""")
+    return l, r
+
+
+def test_reduced_migration_excludes_unneeded():
+    l, r = _seeded_envs()
+    l.execute("junk = np.zeros((1000, 1000))")
+    eng = MigrationEngine(StateReducer("zlib"))
+    res = eng.migrate(l, r, "out = scalef(data)")
+    assert "junk" not in res.names
+    assert {"data", "factor", "scalef"} <= set(res.names)
+    r.execute("out = scalef(data)")
+    assert float(r.state["out"][1]) == 3.0
+
+
+def test_delta_second_migration_empty():
+    l, r = _seeded_envs()
+    eng = MigrationEngine(StateReducer("zlib"))
+    eng.migrate(l, r, "out = scalef(data)")
+    res2 = eng.migrate(l, r, "out = scalef(data)")
+    assert res2.names == () and res2.nbytes == 0
+
+
+def test_delta_return_path_only_new_objects():
+    l, r = _seeded_envs()
+    eng = MigrationEngine(StateReducer("zlib"))
+    eng.migrate(l, r, "out = scalef(data)")
+    r.execute("out = scalef(data)")
+    eng.invalidate("remote", {"out"})
+    back = eng.migrate(r, l, None)   # full-state request, delta-filtered
+    assert "out" in back.names       # new object moves
+    assert "data" not in back.names  # unchanged object does not
+    np.testing.assert_allclose(l.state["out"], l.state["data"] * 3.0)
+
+
+def test_module_alias_reimported():
+    l, r = _seeded_envs()
+    eng = MigrationEngine(StateReducer("zlib"))
+    eng.migrate(l, r, "y = np.sum(data)")
+    r.execute("y = np.sum(data)")
+    assert float(r.state["y"]) == float(np.arange(5000, dtype=np.float32).sum())
+
+
+def test_migration_time_model():
+    eng = MigrationEngine(StateReducer("none"), bandwidth=100.0, latency=2.0)
+    assert eng.transfer_seconds(500) == 2.0 + 5.0
+
+
+def _runtime(policy="block", **kw):
+    nb = Notebook("demo")
+    nb.add_cell("import numpy as np\nxs = np.arange(100.0)", cost=0.1)
+    nb.add_cell("ys = xs * 2", cost=0.2)
+    nb.add_cell("z = float((ys ** 3).sum())", cost=30.0)
+    nb.add_cell("w = z + 1", cost=0.1)
+    rt = HybridRuntime(
+        nb, envs={"local": ExecutionEnvironment("local"),
+                  "remote": ExecutionEnvironment("remote", speedup=10.0)},
+        policy=policy, use_knowledge=False, latency=0.5, bandwidth=1e8, **kw)
+    return nb, rt
+
+
+def test_runtime_learns_to_migrate():
+    nb, rt = _runtime()
+    for _ in range(3):
+        for i in range(4):
+            rt.run_cell(i)
+    rt.close()
+    local_only = 3 * (0.1 + 0.2 + 30.0 + 0.1)
+    assert rt.clock.now() < local_only          # policy beat local-only
+    assert rt.migrations > 0
+    assert "z" in rt.envs["remote"].state.ns    # heavy cell ran remotely
+    assert rt.current_env == "local"            # returned after block
+    types = [m.type for m in rt.bus.messages()]
+    assert types[0] == T.SESSION_STARTED and types[-1] == T.SESSION_DISPOSED
+    assert T.CELL_EXECUTION_COMPLETED in types
+
+
+def test_serialization_failure_falls_back_local():
+    nb, rt = _runtime()
+    nb.cells[2].source = "import threading\nlock = threading.Lock()\n" + \
+        "z = float((ys ** 3).sum())"
+    # force migration attempt of an unpicklable object on pass 2
+    nb.cells[3].source = "w = z + (1 if lock else 0)"
+    for _ in range(3):
+        for i in range(4):
+            rt.run_cell(i)
+    # runtime must have survived; all state consistent locally
+    assert "w" in rt.envs["local"].state.ns or "w" in rt.envs["remote"].state.ns
+
+
+def test_forced_env_and_provenance():
+    nb, rt = _runtime()
+    rt.run_cell(0)
+    rt.run_cell(1)
+    rt.run_cell(2, force_env="remote")
+    assert "z" in rt.envs["remote"].state.ns
+    migs = rt.kb.records("migration")
+    assert migs and migs[0].env == "remote"

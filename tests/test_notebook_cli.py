@@ -1,0 +1,48 @@
+"""The notebook-file runner (paper's tool as a CLI): ipynb in, decisions out."""
+import json
+
+from repro.core.notebook import Notebook
+from repro.launch.notebook import run_notebook
+
+
+def _demo_ipynb(tmp_path):
+    nb = {"nbformat": 4, "nbformat_minor": 5, "metadata": {"name": "t"},
+          "cells": [
+              {"id": "c0", "cell_type": "code",
+               "metadata": {"repro": {"cost": 0.3}},
+               "source": "import numpy as np\nxs = np.arange(1000.0)"},
+              {"id": "c1", "cell_type": "markdown", "metadata": {},
+               "source": "# only code cells are managed (paper §II-A)"},
+              {"id": "c2", "cell_type": "code",
+               "metadata": {"repro": {"cost": 15.0}},
+               "source": "y = float((xs ** 2).sum())"},
+              {"id": "c3", "cell_type": "code",
+               "metadata": {"repro": {"cost": 0.1}},
+               "source": "z = y + 1"},
+          ]}
+    p = tmp_path / "demo.ipynb"
+    p.write_text(json.dumps(nb))
+    return str(p)
+
+
+def test_run_notebook_file(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    report, nb = run_notebook(path, sessions=3, remote_speedup=10.0)
+    assert report["speedup_vs_local"] > 1.2
+    assert report["migrations"] >= 2
+    assert report["decisions"]["c2"]  # heavy cell got an explained decision
+    assert "c1" not in report["decisions"]  # markdown ignored
+    # annotations survive the round-trip through the document format
+    doc = nb.to_ipynb()
+    nb2 = Notebook.from_ipynb(doc)
+    heavy = nb2.cell("c2")
+    assert heavy.annotations and heavy.cost == 15.0
+
+
+def test_ipynb_roundtrip(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    nb = Notebook.from_ipynb(json.loads(open(path).read()))
+    doc = nb.to_ipynb()
+    nb2 = Notebook.from_ipynb(doc)
+    assert [c.cell_id for c in nb.cells] == [c.cell_id for c in nb2.cells]
+    assert [c.source for c in nb.cells] == [c.source for c in nb2.cells]

@@ -1,0 +1,48 @@
+"""Optimizer + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TrainConfig
+from repro.optim import adamw_update, init_opt_state, make_schedule
+
+
+def test_wsd_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100,
+                     schedule="wsd", wsd_decay_frac=0.2)
+    s = make_schedule(tc)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1e-3) < 1e-9            # warmup done
+    assert abs(float(s(50)) - 1e-3) < 1e-9            # stable plateau
+    assert float(s(100)) < float(s(85)) < float(s(80))  # decay tail
+
+
+def test_cosine_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    s = make_schedule(tc)
+    assert float(s(5)) < float(s(10))
+    assert float(s(100)) < float(s(50)) < float(s(10))
+    assert float(s(100)) >= 1e-4 * 0.99               # floor at 10%
+
+
+def test_grad_clip_applied():
+    tc = TrainConfig(grad_clip=1.0, weight_decay=0.0, learning_rate=1.0,
+                     warmup_steps=0, total_steps=1)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = init_opt_state(params)
+    huge = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    opt2, p2, m = adamw_update(tc, opt, huge, params)
+    assert float(m["grad_norm"]) > 1e5
+    assert np.all(np.isfinite(np.asarray(p2["w"], np.float32)))
+    assert float(jnp.max(jnp.abs(p2["w"].astype(jnp.float32)))) < 10.0
+
+
+def test_master_weights_fp32():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = init_opt_state(params)
+    assert opt.master["w"].dtype == jnp.float32
+    tc = TrainConfig(warmup_steps=0, total_steps=10)
+    g = {"w": jnp.full((4,), 1e-3, jnp.float32)}
+    opt2, p2, _ = adamw_update(tc, opt, g, params)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert int(opt2.step) == 1

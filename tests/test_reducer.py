@@ -1,0 +1,115 @@
+"""State reducer: serialization codecs, deltas, digests (paper §II-D)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import ExecutionState, SerializationFailure, StateReducer
+from repro.core.reducer import CODECS
+
+
+def _roundtrip(objs, codec):
+    red = StateReducer(codec=codec)
+    st_ = ExecutionState(dict(objs))
+    ser = red.serialize_names(st_, list(objs))
+    return red.deserialize(ser), ser
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_roundtrip_all_codecs(codec):
+    objs = {
+        "arr": np.arange(4000, dtype=np.float32).reshape(40, 100),
+        "jarr": jnp.linspace(0, 1, 256, dtype=jnp.float32),
+        "tree": {"a": np.ones(7), "b": [np.zeros(3), 5, "text"]},
+        "scalar": 42,
+        "string": "hello",
+    }
+    out, ser = _roundtrip(objs, codec)
+    assert out["scalar"] == 42 and out["string"] == "hello"
+    lossless = codec != "quant8+zstd"
+    if lossless:
+        np.testing.assert_array_equal(out["arr"], objs["arr"])
+        np.testing.assert_array_equal(np.asarray(out["jarr"]), np.asarray(objs["jarr"]))
+    else:
+        # blockwise int8: relative error bounded by scale/127
+        err = np.abs(out["arr"] - objs["arr"])
+        bound = np.abs(objs["arr"]).max() / 127 + 1e-6
+        assert err.max() <= bound
+    assert ser.nbytes > 0
+
+
+def test_compression_reduces_size():
+    x = np.zeros((512, 512), np.float32)  # highly compressible
+    _, raw = _roundtrip({"x": x}, "none")
+    _, z = _roundtrip({"x": x}, "zlib")
+    assert z.nbytes < raw.nbytes / 10
+
+
+def test_function_roundtrip_rebinds_globals():
+    src_ns = {}
+    exec("scale = 3.0\ndef f(v):\n    return v * scale", src_ns)
+    red = StateReducer(codec="zlib")
+    ser = red.serialize_names(ExecutionState(src_ns), ["f", "scale"])
+    target = {"scale": 100.0}
+    out = red.deserialize(ser, target_ns=target)
+    target.update(out)
+    # migrated function must resolve `scale` in the *destination* namespace
+    assert target["f"](2.0) == 2.0 * 3.0
+
+
+def test_serialization_failure_raised():
+    import threading
+    red = StateReducer()
+    with pytest.raises(SerializationFailure):
+        red.serialize_names(ExecutionState({"bad": threading.Lock()}), ["bad"])
+
+
+def test_delta_names_semantics():
+    red = StateReducer()
+    s = ExecutionState({"a": np.arange(10), "b": np.zeros(5), "c": 1})
+    send, dead, here = red.delta_names(s, {"a", "b", "c"}, known={})
+    assert send == {"a", "b", "c"} and not dead
+    known = dict(here)
+    s["a"] = np.arange(10) + 1          # changed
+    s.drop(["b"])                        # deleted
+    send, dead, _ = red.delta_names(s, {"a", "c"}, known)
+    assert send == {"a"}
+    assert dead == {"b"}
+
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_digest_deterministic_and_sensitive(vals):
+    red = StateReducer()
+    a = np.asarray(vals, np.float32)
+    d1, d2 = red.digest(a), red.digest(a.copy())
+    assert d1 == d2
+    b = a.copy()
+    b[0] = b[0] + 1.0 if np.isfinite(b[0] + 1.0) else 0.5
+    if not np.array_equal(a, b):
+        assert red.digest(b) != d1
+
+
+@given(st.integers(1, 3), st.integers(1, 2049))
+@settings(max_examples=30, deadline=None)
+def test_quant_roundtrip_bounds(seed, n):
+    from repro.kernels.quant_blockwise.ops import dequantize, quantize
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    q, s = quantize(x, impl="xla")
+    y = dequantize(q, s, (n,), jnp.float32, impl="xla")
+    # per-block bound: |err| <= blockmax/127 (+eps)
+    assert float(jnp.max(jnp.abs(y - x))) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+def test_reduce_state_flag():
+    ns = {}
+    exec("import numpy as np\nbig = np.zeros((256,256))\nx = 1", ns)
+    st_ = ExecutionState(ns)
+    red_on = StateReducer(reduce_state=True)
+    red_off = StateReducer(reduce_state=False)
+    names_on, _, _ = red_on.reduce(st_, "y = x + 1")
+    names_off, _, _ = red_off.reduce(st_, "y = x + 1")
+    assert names_on == {"x"}
+    assert "big" in names_off  # full state capture

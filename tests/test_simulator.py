@@ -1,0 +1,78 @@
+"""Policy simulator (paper §III, Figs. 4-10)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    cell_frequency, policy_grid, simulate, synthetic_loops_trace,
+    tf_guide_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return synthetic_loops_trace(), tf_guide_trace()
+
+
+def test_traces_deterministic(traces):
+    t1 = synthetic_loops_trace()
+    t2 = synthetic_loops_trace()
+    assert t1.order == t2.order and t1.costs == t2.costs
+
+
+def test_traces_have_cycles(traces):
+    syn, tf = traces
+    # Fig. 4: both traces revisit earlier cells (execution cycles)
+    assert any(b < a for a, b in zip(syn.order, syn.order[1:]))
+    assert any(b < a for a, b in zip(tf.order, tf.order[1:]))
+
+
+def test_tf_guide_two_time_groups(traces):
+    _, tf = traces
+    costs = np.array(list(tf.costs.values()))
+    assert (costs > 10).sum() >= 2 and (costs < 1).sum() >= 8  # Fig. 7
+
+
+def test_block_beats_single_everywhere(traces):
+    # paper §III-C: "block-cell migration outperforms single-cell for all
+    # combinations of full remote speedups and migration times"
+    for tr in traces:
+        for mt in (0.1, 1.0, 5.0):
+            for rs in (10, 50, 150):
+                local = simulate(tr, "local", migration_time=mt, remote_speedup=rs)
+                sng = simulate(tr, "single", migration_time=mt, remote_speedup=rs)
+                blk = simulate(tr, "block", migration_time=mt, remote_speedup=rs)
+                assert blk.total_seconds <= sng.total_seconds * 1.001, (
+                    tr.name, mt, rs)
+                assert sng.total_seconds <= local.total_seconds * 1.001
+
+
+def test_block_fewer_migrations(traces):
+    syn, _ = traces
+    sng = simulate(syn, "single", migration_time=1.0, remote_speedup=50)
+    blk = simulate(syn, "block", migration_time=1.0, remote_speedup=50)
+    assert blk.migrations < sng.migrations
+
+
+def test_speedup_shape_matches_paper(traces):
+    # max speedup at min migration time + max remote speedup (Fig. 5)
+    syn, _ = traces
+    grid = policy_grid(syn, migration_times=[0.1, 2.0, 10.0],
+                       remote_speedups=[5, 50, 200], policies=("block",))
+    sp = np.array(grid["speedup"]["block"])
+    assert sp[0, -1] == sp.max()          # corner: low mig, high speedup
+    assert sp[-1, 0] == sp.min()
+
+
+def test_migration_cap_high_cost(traces):
+    syn, _ = traces
+    r = simulate(syn, "block", migration_time=1e9, remote_speedup=200)
+    assert r.migrations == 0              # never worth it
+    loc = simulate(syn, "local", migration_time=0, remote_speedup=1)
+    assert r.total_seconds == pytest.approx(loc.total_seconds)
+
+
+def test_cell_frequency(traces):
+    syn, _ = traces
+    freq = cell_frequency(syn)
+    assert abs(sum(v["freq"] for v in freq.values()) - 1.0) < 1e-9
+    assert all(v["count"] >= 1 for v in freq.values())

@@ -1,0 +1,118 @@
+"""End-to-end system behaviour: the paper's migration stack managing a real
+JAX training workload, with checkpoint/restart riding the same engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import TrainConfig, get_config
+from repro.core import ExecutionEnvironment, HybridRuntime, Notebook
+from repro.data import TokenPipeline
+from repro.configs.base import ShapeConfig
+from repro.models import LM
+from repro.optim import adamw_update, init_opt_state
+
+
+def test_hybrid_runtime_manages_jax_training(tmp_path):
+    """A notebook whose heavy cell trains a (reduced) assigned-arch model:
+    the runtime learns to run it remotely, state migrates correctly (loss
+    continues to drop on migrated state), decisions are explained, and the
+    delta checkpoint restores bit-exact."""
+    nb = Notebook("train-notebook")
+    nb.add_cell("""
+import jax, jax.numpy as jnp
+from repro.configs import TrainConfig, get_config
+from repro.models import LM
+from repro.optim import adamw_update, init_opt_state
+cfg = get_config('demo-100m', reduced=True)
+lm = LM(cfg, max_seq=33)
+params = lm.init(jax.random.PRNGKey(0))
+opt = init_opt_state(params)
+tc = TrainConfig(total_steps=20, warmup_steps=2)
+losses = []
+""", cost=0.5)
+    nb.add_cell("""
+import numpy as np
+toks = jnp.asarray(np.random.default_rng(0).integers(
+    0, cfg.vocab_size, (4, 33), dtype=np.int32))
+""", cost=0.2)
+    train = nb.add_cell("""
+for _ in range(3):
+    (loss, _), grads = jax.value_and_grad(lm.loss, has_aux=True)(
+        params, {'tokens': toks})
+    opt, params, _ = adamw_update(tc, opt, grads, params)
+    losses.append(float(loss))
+""", cost=25.0)
+    nb.add_cell("final_loss = losses[-1]", cost=0.1)
+
+    rt = HybridRuntime(
+        nb, envs={"local": ExecutionEnvironment("local"),
+                  "remote": ExecutionEnvironment("remote", speedup=10.0)},
+        policy="block", use_knowledge=False, bandwidth=1e9, latency=0.5)
+    for _ in range(3):
+        for i in range(len(nb.cells)):
+            rt.run_cell(i)
+    rt.close()
+
+    # policy beat local-only and the heavy cell ran remotely at least once
+    local_only = 3 * sum(c.cost for c in nb.cells)
+    assert rt.clock.now() < local_only
+    assert "losses" in rt.envs["remote"].state.ns
+    # training progressed across migrations (cell 0 re-inits each session,
+    # so the last session holds 3 optimizer steps — and they must have run
+    # on correctly-migrated state: loss monotone progress)
+    losses = rt.envs["local"].state.get("losses") or rt.envs["remote"].state["losses"]
+    assert len(losses) == 3
+    assert losses[-1] < losses[0]
+    assert any("performance" in a for a in train.annotations)  # explainability
+
+    # checkpoint the migrated training state; restore must be bit-exact
+    env = ("local" if "params" in rt.envs["local"].state.ns else "remote")
+    params = rt.envs[env].state["params"]
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"params": params})
+    out, step = ck.restore({"params": params})
+    flat_a = jax.tree_util.tree_leaves(out["params"])
+    flat_b = jax.tree_util.tree_leaves(params)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_training_reproducible_after_restart(tmp_path):
+    """Kill-and-restart equivalence: steps 0..5 straight vs checkpoint at 3 +
+    resume gives identical parameters (data pipeline is step-keyed)."""
+    cfg = get_config("demo-100m", reduced=True)
+    lm = LM(cfg, max_seq=33)
+    tc = TrainConfig(total_steps=10, warmup_steps=2)
+    pipe = TokenPipeline(cfg, ShapeConfig("t", "train", 32, 4), seed=1)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), grads = jax.value_and_grad(lm.loss, has_aux=True)(params, batch)
+        opt, params, _ = adamw_update(tc, opt, grads, params)
+        return params, opt
+
+    def run(params, opt, lo, hi):
+        for s in range(lo, hi):
+            b = {k: jnp.asarray(v) for k, v in pipe.train_batch(s).items()}
+            params, opt = step(params, opt, b)
+        return params, opt
+
+    p0 = lm.init(jax.random.PRNGKey(0))
+    o0 = init_opt_state(p0)
+
+    # straight run
+    p_straight, _ = run(p0, o0, 0, 6)
+
+    # run to 3, checkpoint, restart from disk, continue to 6
+    p3, o3 = run(p0, o0, 0, 3)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, {"params": p3, "opt": o3._asdict()})
+    restored, s = ck.restore({"params": p3, "opt": o3._asdict()})
+    assert s == 3
+    from repro.optim.optimizer import OptState
+    p_resumed, _ = run(restored["params"], OptState(**restored["opt"]), 3, 6)
+
+    for a, b in zip(jax.tree_util.tree_leaves(p_straight),
+                    jax.tree_util.tree_leaves(p_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
