@@ -1,0 +1,140 @@
+"""Fabric benchmarks (beyond the paper): N-environment placement, pipelined
+migration, and multi-session scheduling.
+
+Three sweeps:
+
+* **env-count** — the same notebook under the cost-matrix policy on 2/3/4-env
+  registries (cpu-local, gpu-cloud, tpu-mesh, storage).  Reports modeled
+  time and where the heavy cell landed: with the third env present the
+  heavy cell moves to tpu-mesh and total time drops.
+* **pipelined vs synchronous** — a block-policy workload run under both
+  engines with identical per-pair links and stage bandwidths; the pipelined
+  engine overlaps transfer with execution (prefetch) and chunks the
+  serialize/compress/transfer stages, so end-to-end modeled time is lower.
+* **session-count** — k concurrent sessions multiplexed by the
+  SessionScheduler over a shared fabric with per-env capacity; reports
+  makespan, queue waits and accelerator utilization.
+"""
+from __future__ import annotations
+
+from repro.core import (
+    EnvironmentRegistry, ExecutionEnvironment, HybridRuntime,
+    MigrationEngine, Notebook, PipelinedMigrationEngine, SessionScheduler,
+    StateReducer,
+)
+from repro.core import telemetry as T
+
+
+def make_registry(n_envs: int) -> EnvironmentRegistry:
+    """2..4 heterogeneous envs with per-pair link costs."""
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.5)
+    reg.register(ExecutionEnvironment("cpu-local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=8.0), capacity=2)
+    reg.connect("cpu-local", "gpu-cloud", bandwidth=5e8, latency=0.3)
+    if n_envs >= 3:
+        reg.register(ExecutionEnvironment("tpu-mesh", speedup=40.0), capacity=1)
+        reg.connect("cpu-local", "tpu-mesh", bandwidth=1e8, latency=1.0)
+        reg.connect("gpu-cloud", "tpu-mesh", bandwidth=1e9, latency=0.2)
+    if n_envs >= 4:
+        reg.register(ExecutionEnvironment("storage", kind="storage"))
+        reg.connect("cpu-local", "storage", bandwidth=4e8, latency=0.1)
+    return reg
+
+
+def make_notebook(tag: str = "") -> Notebook:
+    """Load -> transform -> heavy train -> light report (the paper's shape)."""
+    nb = Notebook(f"fabric-session{tag}")
+    nb.add_cell("import numpy as np\n"
+                "data = np.arange(1_000_000, dtype=np.float64)", cost=8.0)
+    nb.add_cell("model = float(((data - data.mean()) ** 2).sum())", cost=90.0)
+    nb.add_cell("report = model / len(data)", cost=0.2)
+    return nb
+
+
+def _run_sessions(rt: HybridRuntime, nb: Notebook, sessions: int) -> None:
+    for _ in range(sessions):
+        for i in range(len(nb.cells)):
+            rt.run_cell(i)
+    rt.close()
+
+
+def _placements(rt: HybridRuntime, nb: Notebook) -> dict[str, str]:
+    out = {}
+    for m in rt.bus.messages():
+        if m.type == T.CELL_EXECUTION_STARTED:
+            out[m.cell_id] = m.payload["env"]
+    return out
+
+
+def env_count_sweep(rows, sessions: int) -> None:
+    local_only = sessions * sum(c.cost for c in make_notebook().cells)
+    for n in (2, 3, 4):
+        nb = make_notebook()
+        rt = HybridRuntime(nb, registry=make_registry(n), policy="cost",
+                           use_knowledge=False)
+        _run_sessions(rt, nb, sessions)
+        heavy_env = _placements(rt, nb).get(nb.cells[1].cell_id, "?")
+        rows.append((f"fabric/envs{n}/modeled_seconds", rt.clock.now(),
+                     f"local-only {local_only:.0f}s"))
+        rows.append((f"fabric/envs{n}/speedup_vs_local",
+                     local_only / rt.clock.now(), ""))
+        rows.append((f"fabric/envs{n}/heavy_cell_on_tpu",
+                     float(heavy_env == "tpu-mesh"),
+                     f"heavy cell ran on {heavy_env}"))
+        rows.append((f"fabric/envs{n}/migrations", rt.migrations, ""))
+
+
+def engine_comparison(rows, sessions: int) -> None:
+    """Same block-policy workload, synchronous vs pipelined engine."""
+    totals = {}
+    for name, cls in (("sync", MigrationEngine),
+                      ("pipelined", PipelinedMigrationEngine)):
+        nb = make_notebook()
+        reg = EnvironmentRegistry.two_env(remote_speedup=10.0,
+                                          bandwidth=2e6, latency=0.5)
+        eng = cls(StateReducer("none"), registry=reg,
+                  serialize_bandwidth=8e6, compress_bandwidth=1.6e7)
+        rt = HybridRuntime(nb, registry=reg, policy="block",
+                           use_knowledge=False, engine=eng)
+        _run_sessions(rt, nb, sessions)
+        totals[name] = rt.clock.now()
+        rows.append((f"fabric/engine_{name}/modeled_seconds", rt.clock.now(),
+                     ""))
+        if name == "pipelined":
+            rows.append(("fabric/engine_pipelined/prefetch_hits",
+                         eng.prefetch_hits, "transfers overlapped execution"))
+    rows.append(("fabric/pipelined_speedup_vs_sync",
+                 totals["sync"] / totals["pipelined"],
+                 "block-policy workload; >1 = overlap pays"))
+
+
+def session_sweep(rows, counts) -> None:
+    for k in counts:
+        reg = make_registry(3)
+        sched = SessionScheduler(reg)
+        for i in range(k):
+            sched.add_notebook(make_notebook(f"-{i}"), policy="cost",
+                               use_knowledge=False)
+        rep = sched.run()
+        rows.append((f"fabric/sessions{k}/makespan", rep.makespan, ""))
+        rows.append((f"fabric/sessions{k}/total_queue_wait",
+                     rep.total_queue_wait,
+                     f"{rep.queue_events} queue events"))
+        rows.append((f"fabric/sessions{k}/tpu_utilization",
+                     rep.env_utilization.get("tpu-mesh", 0.0), ""))
+        rows.append((f"fabric/sessions{k}/gpu_utilization",
+                     rep.env_utilization.get("gpu-cloud", 0.0), ""))
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    sessions = 1 if smoke else 3
+    env_count_sweep(rows, sessions)
+    engine_comparison(rows, sessions)
+    session_sweep(rows, (2,) if smoke else (2, 4, 8))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val},{note}")

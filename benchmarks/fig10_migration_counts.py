@@ -8,12 +8,13 @@ MIGRATION_TIMES = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0, 1.5, 2.0, 3.0, 5.0]
 REMOTE_SPEEDUP = 150
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
+    mig_times = MIGRATION_TIMES if not smoke else MIGRATION_TIMES[:2]
     tr = synthetic_loops_trace()
     local = simulate(tr, "local", migration_time=0, remote_speedup=1)
     prev_key = None
-    for mt in MIGRATION_TIMES:
+    for mt in mig_times:
         blk = simulate(tr, "block", migration_time=mt, remote_speedup=REMOTE_SPEEDUP)
         sng = simulate(tr, "single", migration_time=mt, remote_speedup=REMOTE_SPEEDUP)
         ratio = (local.total_seconds / blk.total_seconds) / max(

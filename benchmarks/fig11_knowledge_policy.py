@@ -11,8 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import (
-    ContextDetector, ExecutionEnvironment, KnowledgeBase, MigrationAnalyzer,
-    Notebook,
+    ContextDetector, EnvironmentRegistry, ExecutionEnvironment, KnowledgeBase,
+    MigrationAnalyzer, Notebook,
 )
 
 REMOTE_SPEEDUP = 4.43       # paper: "local executions run 4.43x slower"
@@ -27,10 +27,8 @@ class _ProbeRuntime:
     """Real probe execution: cells run a measurable synthetic epoch loop and
     the SimClock scaling applies the environment speedup (paper §III)."""
 
-    def __init__(self):
-        self.envs = {"local": ExecutionEnvironment("local"),
-                     "remote": ExecutionEnvironment("remote",
-                                                    speedup=REMOTE_SPEEDUP)}
+    def __init__(self, registry: EnvironmentRegistry):
+        self.envs = registry.envs()
         seed = ("import numpy as np\n"
                 "data = np.ones((64, 64))\n"
                 "def train(data, epochs=1):\n"
@@ -49,17 +47,21 @@ class _ProbeRuntime:
         return (BASE + PER_EPOCH * e) / env.speedup  # §III forced timing
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
     kb = KnowledgeBase()
     kb.seed("epochs", 50.0)  # expert prior (paper: e=50 hand-seeded)
+    # the paper's dyad expressed as a fabric registry: one home env, one
+    # remote candidate, a home<->remote link costing the forced 2 minutes
+    registry = EnvironmentRegistry.two_env(
+        remote_speedup=REMOTE_SPEEDUP, bandwidth=1e15, latency=MIGRATION_TIME)
     an = MigrationAnalyzer(kb, ContextDetector(),
                            migration_latency=MIGRATION_TIME,
-                           migration_bandwidth=1e15)
+                           migration_bandwidth=1e15, registry=registry)
     an.state_size_estimate["default"] = 0.0
     nb = Notebook("dl-train")
     cell = nb.add_cell("model = train(data, epochs=20)")
-    rt = _ProbeRuntime()
+    rt = _ProbeRuntime(registry)
     updated = an.update_parameters(cell, rt, probe_values=(1, 2, 3),
                                    max_wait=MAX_WAIT)
     thr = updated["epochs"]

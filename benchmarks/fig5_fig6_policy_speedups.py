@@ -1,5 +1,9 @@
 """Paper Figs. 5 & 6: speedup grids for block-cell and single-cell migration
-over (migration time x remote speedup), for both interaction traces."""
+over (migration time x remote speedup), for both interaction traces.
+
+Each grid point now goes through the fabric's registry API (a two-env
+EnvironmentRegistry per point, ``use_registry=True``); the derived scalars
+are identical to the paper protocol, so the decisions are unchanged."""
 from __future__ import annotations
 
 import numpy as np
@@ -10,19 +14,21 @@ MIGRATION_TIMES = [0.1, 0.3, 0.5, 0.9, 1.0, 2.0, 5.0, 10.0, 30.0]
 REMOTE_SPEEDUPS = [2, 5, 10, 25, 50, 100, 150, 200]
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
+    mig_times = MIGRATION_TIMES if not smoke else [1.0]
+    speedups = REMOTE_SPEEDUPS if not smoke else [50]
     for tname, maker in TRACES.items():
         tr = maker()
         fig = "fig5" if tname == "synthetic-loops" else "fig6"
-        grid = policy_grid(tr, MIGRATION_TIMES, REMOTE_SPEEDUPS)
+        grid = policy_grid(tr, mig_times, speedups, use_registry=True)
         for p in ("single", "block"):
             sp = np.array(grid["speedup"][p])
             rows.append((f"{fig}/{tname}/{p}/max_speedup", float(sp.max()),
                          "corner: min mig time, max remote speedup"))
             rows.append((f"{fig}/{tname}/{p}/min_speedup", float(sp.min()), ""))
             # the paper's headline operating point: block-cell gains up to 3.25x
-            i, j = MIGRATION_TIMES.index(1.0), REMOTE_SPEEDUPS.index(50)
+            i, j = mig_times.index(1.0), speedups.index(50)
             rows.append((f"{fig}/{tname}/{p}/speedup@mig1s_rs50",
                          float(sp[i, j]), "paper reports gains up to 3.25x"))
         blk = np.array(grid["speedup"]["block"])

@@ -9,12 +9,14 @@ MIGRATION_TIMES = [0.1, 0.5, 1.0, 2.0, 5.0, 10.0]
 REMOTE_SPEEDUPS = [2, 10, 50, 150]
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
+    mig_times = MIGRATION_TIMES if not smoke else [0.5, 5.0]
+    speedups = REMOTE_SPEEDUPS if not smoke else [2, 150]
     for tname, maker in TRACES.items():
         tr = maker()
         fig = "fig8" if tname == "synthetic-loops" else "fig9"
-        grid = policy_grid(tr, MIGRATION_TIMES, REMOTE_SPEEDUPS)
+        grid = policy_grid(tr, mig_times, speedups)
         blk = np.array(grid["speedup"]["block"])
         sng = np.array(grid["speedup"]["single"])
         ratio = blk / np.maximum(sng, 1e-9)

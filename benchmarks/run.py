@@ -1,12 +1,14 @@
-"""Benchmark harness: one module per paper table/figure (+ roofline dump).
+"""Benchmark harness: one module per paper table/figure (+ fabric sweeps).
 
-    PYTHONPATH=src python -m benchmarks.run [--only table2]
+    PYTHONPATH=src python -m benchmarks.run [--only table2] [--smoke]
 
+``--smoke`` runs every module for one tiny iteration (CI-friendly).
 Prints ``name,value,derived`` CSV rows.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -17,6 +19,7 @@ MODULES = [
     "fig8_fig9_ratio",            # Figs 8-9
     "fig10_migration_counts",     # Fig 10
     "fig11_knowledge_policy",     # Fig 11
+    "bench_fabric",               # N-env fabric / pipeline / scheduler
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
@@ -25,6 +28,8 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny iteration per benchmark")
     args = ap.parse_args()
     failures = 0
     print("name,value,derived")
@@ -34,7 +39,10 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
-            for name, val, note in mod.run():
+            kw = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kw["smoke"] = True
+            for name, val, note in mod.run(**kw):
                 print(f"{name},{val},{note}")
         except Exception:  # noqa: BLE001
             failures += 1

@@ -58,10 +58,14 @@ for img in edges:
 """
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
+    setup = SETUP
+    if smoke:  # tiny scene stack: exercises the pipeline, not the ratios
+        setup = setup.replace("(256, 256, 3)", "(32, 32, 3)").replace(
+            "for _ in range(60)", "for _ in range(6)")
     local = ExecutionEnvironment("local")
-    local.execute(SETUP)
+    local.execute(setup)
 
     import types
 

@@ -1,16 +1,22 @@
-# The paper's primary contribution: context-aware execution migration.
+# The paper's primary contribution: context-aware execution migration —
+# generalized to an N-environment placement fabric.
 from repro.core.analyzer import (
-    Decision, MigrationAnalyzer, PerfModel, fit_linear, intersection,
-    substitute_kwarg,
+    BlockPolicy, CostMatrixPolicy, Decision, KnowledgePolicy,
+    MigrationAnalyzer, PerfModel, PlacementPolicy, SingleCellPolicy,
+    fit_linear, intersection, substitute_kwarg,
 )
 from repro.core.context import ContextDetector, get_sequences, sequence_stats
+from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment, Link
 from repro.core.kb import KnowledgeBase, ParamEstimate, ProvRecord
 from repro.core.migration import (
-    ExecutionEnvironment, HybridRuntime, MigrationEngine, MigrationResult,
+    HybridRuntime, MigrationEngine, MigrationResult, PipelinedMigrationEngine,
 )
 from repro.core.notebook import Cell, Notebook
 from repro.core.reducer import (
     SerializationFailure, SerializedState, StateReducer,
+)
+from repro.core.scheduler import (
+    CapacityArbiter, ScheduleReport, SessionReport, SessionScheduler,
 )
 from repro.core.simclock import SimClock, WallClock
 from repro.core.simulator import (
@@ -20,11 +26,15 @@ from repro.core.simulator import (
 from repro.core.state import ExecutionState
 
 __all__ = [
-    "Decision", "MigrationAnalyzer", "PerfModel", "fit_linear", "intersection",
-    "substitute_kwarg", "ContextDetector", "get_sequences", "sequence_stats",
-    "KnowledgeBase", "ParamEstimate", "ProvRecord", "ExecutionEnvironment",
-    "HybridRuntime", "MigrationEngine", "MigrationResult", "Cell", "Notebook",
-    "SerializationFailure", "SerializedState", "StateReducer", "SimClock",
-    "WallClock", "Trace", "TRACES", "cell_frequency", "policy_grid",
-    "simulate", "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",
+    "BlockPolicy", "CostMatrixPolicy", "Decision", "KnowledgePolicy",
+    "MigrationAnalyzer", "PerfModel", "PlacementPolicy", "SingleCellPolicy",
+    "fit_linear", "intersection", "substitute_kwarg", "ContextDetector",
+    "get_sequences", "sequence_stats", "EnvironmentRegistry",
+    "ExecutionEnvironment", "Link", "KnowledgeBase", "ParamEstimate",
+    "ProvRecord", "HybridRuntime", "MigrationEngine", "MigrationResult",
+    "PipelinedMigrationEngine", "Cell", "Notebook", "SerializationFailure",
+    "SerializedState", "StateReducer", "CapacityArbiter", "ScheduleReport",
+    "SessionReport", "SessionScheduler", "SimClock", "WallClock", "Trace",
+    "TRACES", "cell_frequency", "policy_grid", "simulate",
+    "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",
 ]

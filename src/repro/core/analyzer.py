@@ -1,17 +1,25 @@
-"""Context-aware migration analyzer (paper §II-C).
+"""Context-aware migration analyzer (paper §II-C) over the environment fabric.
 
-Two policy families:
+Placement is a pluggable :class:`PlacementPolicy`:
 
-* **Performance-aware** — single-cell (migrate iff remote time + 2 migrations
-  beats local) and block-cell (use the context detector's predicted block;
-  migrate once per block, return on completion or deviation — Fig. 3).
-* **Knowledge-aware** — a KB of cell parameters (epochs, num_steps, ...)
-  with thresholds; Algorithm 2 probes small parameter values in both
-  environments in the background, fits two linear regressors, and updates the
-  threshold to their intersection (Fig. 11).
+* **Performance-aware** — :class:`SingleCellPolicy` (migrate iff the best
+  candidate env's time + round-trip migration beats home) and
+  :class:`BlockPolicy` (use the context detector's predicted block; migrate
+  once per block, return on completion or deviation — Fig. 3).
+* **Knowledge-aware** — :class:`KnowledgePolicy`: a KB of cell parameters
+  (epochs, num_steps, ...) with thresholds; Algorithm 2 probes small
+  parameter values in both environments in the background, fits two linear
+  regressors, and updates the threshold to their intersection (Fig. 11).
+* **Cost-matrix** — :class:`CostMatrixPolicy` (beyond the paper): scores
+  *every* environment in the registry per cell/block using the per-pair
+  link costs — inbound state transfer + modeled execution + return-home —
+  and places the cell on the argmin.  This is what lets a third env (e.g. a
+  TPU mesh) win the heavy cells while a GPU node keeps the medium ones.
 
-Every decision carries a human-readable reason that is attached to the cell
-as an annotation (explainability, Fig. 1).
+With no registry attached the analyzer degrades to the paper's local/remote
+dyad and reproduces its decisions exactly.  Every decision carries a
+human-readable reason that is attached to the cell as an annotation
+(explainability, Fig. 1).
 """
 from __future__ import annotations
 
@@ -91,17 +99,215 @@ def intersection(m_local: tuple[float, float], m_remote: tuple[float, float],
 
 
 # ----------------------------------------------------------------------
+# placement policies
+# ----------------------------------------------------------------------
+
+class PlacementPolicy:
+    """One placement strategy.  ``decide`` returns a Decision, or None to
+    pass the cell on to the next policy in the analyzer's chain."""
+
+    name = "policy"
+
+    def decide(self, an: "MigrationAnalyzer", nb: Notebook, cell: Cell,
+               current_env: str) -> Decision | None:
+        raise NotImplementedError
+
+
+class KnowledgePolicy(PlacementPolicy):
+    """KB parameter thresholds (the paper's knowledge-aware policy)."""
+
+    name = "knowledge"
+
+    def decide(self, an, nb, cell, current_env):
+        info = analyze_cell(cell.source)
+        target = an.offload_target()
+        for fn, kwargs in info.call_kwargs.items():
+            for p, v in kwargs.items():
+                est = an.kb.get(p)
+                if est is None or not isinstance(v, (int, float)):
+                    continue
+                if v > est.threshold:
+                    return Decision(
+                        target, True,
+                        f"knowledge: {fn}({p}={v}) > threshold {est.threshold:.2f} "
+                        f"({est.source})", policy="knowledge")
+                return Decision(
+                    an.home, False,
+                    f"knowledge: {fn}({p}={v}) <= threshold {est.threshold:.2f} "
+                    f"({est.source})", policy="knowledge")
+        return None
+
+
+class SingleCellPolicy(PlacementPolicy):
+    """Migrate iff the best candidate env's time + 2 migrations beats home."""
+
+    name = "single"
+
+    def decide(self, an, nb, cell, current_env):
+        state = an.state_size_estimate[nb.name]
+        t_loc = an.perf.estimate(cell.cell_id, an.home)
+        best = None
+        for cand in an.candidates():
+            t_env = an.perf.estimate(cell.cell_id, cand)
+            if t_env is None:
+                continue
+            t_mig = (an.pair_migration_time(state, an.home, cand)
+                     + an.pair_migration_time(state, cand, an.home)) / 2.0
+            if best is None or t_env + 2 * t_mig < best[1] + 2 * best[2]:
+                best = (cand, t_env, t_mig)
+        if t_loc is None or best is None:
+            return Decision(an.home, False,
+                            "performance: no history for this cell yet")
+        cand, t_rem, t_mig = best
+        if t_rem + 2 * t_mig < t_loc:
+            return Decision(cand, True,
+                            f"performance/single: {cand} {t_rem:.2f}s + "
+                            f"2x{t_mig:.2f}s migration < local {t_loc:.2f}s")
+        return Decision(an.home, False,
+                        f"performance/single: local {t_loc:.2f}s <= {cand} "
+                        f"{t_rem:.2f}s + 2x{t_mig:.2f}s migration")
+
+
+class BlockPolicy(PlacementPolicy):
+    """Sum predicted block costs; migrate once per block (Fig. 3)."""
+
+    name = "block"
+
+    def decide(self, an, nb, cell, current_env):
+        order = nb.order(cell.cell_id)
+        state = an.state_size_estimate[nb.name]
+        t_loc = an.perf.estimate(cell.cell_id, an.home)
+        block, score, ncand = an.context.predict_block_scored(nb.name, order)
+
+        block_cells = [nb.cells[o] for o in block if o < len(nb.cells)]
+        home_est = {c.cell_id: an.perf.estimate(c.cell_id, an.home)
+                    for c in block_cells}
+        best = None
+        for cand in an.candidates():
+            t_rem = an.perf.estimate(cell.cell_id, cand)
+            if t_rem is None:
+                continue
+            loc_sum = rem_sum = 0.0
+            for c in block_cells:
+                tl = home_est[c.cell_id]
+                tr = an.perf.estimate(c.cell_id, cand)
+                if tl is None or tr is None:
+                    # a cell unmeasured on either side contributes to neither
+                    # sum, keeping the home/candidate comparison paired
+                    tl = tr = 0.0
+                loc_sum += tl
+                rem_sum += tr
+            t_mig = (an.pair_migration_time(state, an.home, cand)
+                     + an.pair_migration_time(state, cand, an.home)) / 2.0
+            if best is None or rem_sum + 2 * t_mig < best[3] + 2 * best[4]:
+                best = (cand, t_rem, loc_sum, rem_sum, t_mig)
+        if t_loc is None or best is None:
+            return Decision(an.home, False,
+                            "performance: no history for this cell yet")
+        cand, t_rem, loc_sum, rem_sum, t_mig = best
+
+        conf = 1.0 if len(block) <= 1 else min(score / 100.0 + 0.5, 1.0)
+        if len(block) > 1 and ncand < 2:
+            # unproven prediction: commit only on the current cell's own value
+            if t_rem + 2 * t_mig < t_loc:
+                return Decision(cand, True,
+                                f"performance/block: unproven block {block}; "
+                                f"cell alone justifies migration "
+                                f"({t_rem:.2f}s + 2x{t_mig:.2f}s < {t_loc:.2f}s)",
+                                block=block)
+            return Decision(an.home, False,
+                            f"performance/block: insufficient context evidence "
+                            f"for block {block} ({ncand} candidate sequences)",
+                            block=block)
+        if rem_sum + 2 * t_mig < conf * loc_sum:
+            return Decision(cand, True,
+                            f"performance/block: block {block} {cand} "
+                            f"{rem_sum:.2f}s + 2x{t_mig:.2f}s < local {loc_sum:.2f}s",
+                            block=block)
+        return Decision(an.home, False,
+                        f"performance/block: block {block} local {loc_sum:.2f}s "
+                        f"<= {cand} {rem_sum:.2f}s + 2x{t_mig:.2f}s", block=block)
+
+
+class CostMatrixPolicy(PlacementPolicy):
+    """Score all N environments per cell/block with per-pair link costs.
+
+    cost(e) = transfer(current -> e, state) + exec(block | e)
+              + transfer(e -> home, state)      [amortized return]
+
+    Requires a registry (per-pair links + env speedups)."""
+
+    name = "cost"
+
+    def decide(self, an, nb, cell, current_env):
+        assert an.registry is not None, "cost-matrix policy needs a registry"
+        order = nb.order(cell.cell_id)
+        state = an.state_size_estimate[nb.name]
+        block, score, ncand = an.context.predict_block_scored(nb.name, order)
+        if len(block) > 1 and ncand < 2:
+            block = (order,)         # unproven prediction: score the cell alone
+
+        def exec_time(c: Cell, env_name: str) -> float | None:
+            t = an.perf.estimate(c.cell_id, env_name)
+            if t is not None:
+                return t
+            base = an.perf.estimate(c.cell_id, an.home)
+            if base is None:
+                base = c.cost
+            if base is None:
+                return None
+            return base / an.registry[env_name].speedup
+
+        costs: dict[str, float] = {}
+        known_any = False
+        for env_name in [an.home] + an.candidates():
+            total = an.pair_migration_time(state, current_env, env_name)
+            if env_name != an.home:
+                total += an.pair_migration_time(state, env_name, an.home)
+            for o in block:
+                if o >= len(nb.cells):
+                    continue
+                t = exec_time(nb.cells[o], env_name)
+                if t is not None:
+                    total += t
+                    known_any = True
+            costs[env_name] = total
+        if not known_any:
+            return Decision(an.home, False,
+                            "cost-matrix: no history or declared costs yet",
+                            policy="cost")
+        best = min(costs, key=lambda e: (costs[e], e != an.home))
+        matrix = ", ".join(f"{e}={t:.2f}s" for e, t in costs.items())
+        if best == current_env:
+            return Decision(best, False,
+                            f"cost-matrix: stay on {best} [{matrix}]",
+                            block=block if best != an.home else (),
+                            policy="cost")
+        return Decision(best, True,
+                        f"cost-matrix: {best} wins [{matrix}]",
+                        block=block if best != an.home else (),
+                        policy="cost")
+
+
+POLICIES = {"single": SingleCellPolicy, "block": BlockPolicy,
+            "cost": CostMatrixPolicy}
+
+
+# ----------------------------------------------------------------------
 # the analyzer
 # ----------------------------------------------------------------------
 
 class MigrationAnalyzer:
     def __init__(self, kb: KnowledgeBase, context: ContextDetector,
                  perf: PerfModel | None = None, *,
-                 policy: str = "block",            # single | block
+                 policy: str = "block",            # single | block | cost
                  use_knowledge: bool = True,
                  migration_latency: float = 0.5,
-                 migration_bandwidth: float = 1e9):
-        assert policy in ("single", "block")
+                 migration_bandwidth: float = 1e9,
+                 registry=None):
+        assert policy in POLICIES, policy
+        if policy == "cost" and registry is None:
+            raise ValueError("cost-matrix policy requires a registry")
         self.kb = kb
         self.context = context
         self.perf = perf or PerfModel()
@@ -109,96 +315,62 @@ class MigrationAnalyzer:
         self.use_knowledge = use_knowledge
         self.migration_latency = migration_latency
         self.migration_bandwidth = migration_bandwidth
+        self.registry = registry
         self.state_size_estimate: dict[str, float] = defaultdict(lambda: 1e6)
+        self._chain: list[PlacementPolicy] = []
+        if use_knowledge:
+            self._chain.append(KnowledgePolicy())
+        self._chain.append(POLICIES[policy]())
 
-    # ------------------------------------------------------------------
+    # -- fabric views ----------------------------------------------------
+    @property
+    def home(self) -> str:
+        return self.registry.home if self.registry is not None else "local"
+
+    def candidates(self) -> list[str]:
+        """Placement candidates other than home."""
+        if self.registry is not None:
+            return self.registry.candidates()
+        return ["remote"]
+
+    def offload_target(self) -> str:
+        """Default offload env (fastest candidate): the paper's 'remote'."""
+        cands = self.candidates()
+        if self.registry is not None and len(cands) > 1:
+            return max(cands, key=lambda n: self.registry[n].speedup)
+        return cands[0]
+
+    # -- migration cost --------------------------------------------------
     def migration_time(self, nbytes: float) -> float:
+        """Home <-> default offload target cost (the paper's scalar model)."""
+        if self.registry is not None:
+            return self.registry.transfer_seconds(
+                self.home, self.offload_target(), nbytes)
+        return self.migration_latency + nbytes / self.migration_bandwidth
+
+    def pair_migration_time(self, nbytes: float, src: str, dst: str) -> float:
+        if src == dst:
+            return 0.0
+        if self.registry is not None:
+            return self.registry.transfer_seconds(src, dst, nbytes)
         return self.migration_latency + nbytes / self.migration_bandwidth
 
     def observe_state_size(self, notebook: str, nbytes: float) -> None:
         self.state_size_estimate[notebook] = float(nbytes)
 
     # ------------------------------------------------------------------
-    def _knowledge_decision(self, cell: Cell) -> Decision | None:
-        info = analyze_cell(cell.source)
-        for fn, kwargs in info.call_kwargs.items():
-            for p, v in kwargs.items():
-                est = self.kb.get(p)
-                if est is None or not isinstance(v, (int, float)):
-                    continue
-                if v > est.threshold:
-                    return Decision(
-                        "remote", True,
-                        f"knowledge: {fn}({p}={v}) > threshold {est.threshold:.2f} "
-                        f"({est.source})", policy="knowledge")
-                return Decision(
-                    "local", False,
-                    f"knowledge: {fn}({p}={v}) <= threshold {est.threshold:.2f} "
-                    f"({est.source})", policy="knowledge")
-        return None
-
-    def _perf_decision(self, nb: Notebook, cell: Cell) -> Decision:
-        order = nb.order(cell.cell_id)
-        t_mig = self.migration_time(self.state_size_estimate[nb.name])
-        t_loc = self.perf.estimate(cell.cell_id, "local")
-        t_rem = self.perf.estimate(cell.cell_id, "remote")
-        if t_loc is None or t_rem is None:
-            return Decision("local", False,
-                            "performance: no history for this cell yet")
-
-        if self.policy == "single":
-            if t_rem + 2 * t_mig < t_loc:
-                return Decision("remote", True,
-                                f"performance/single: remote {t_rem:.2f}s + "
-                                f"2x{t_mig:.2f}s migration < local {t_loc:.2f}s")
-            return Decision("local", False,
-                            f"performance/single: local {t_loc:.2f}s <= remote "
-                            f"{t_rem:.2f}s + 2x{t_mig:.2f}s migration")
-
-        # block-cell: sum predicted block costs (Fig. 3)
-        block, score, ncand = self.context.predict_block_scored(nb.name, order)
-        loc_sum = rem_sum = 0.0
-        for o in block:
-            if o >= len(nb.cells):
-                continue
-            c = nb.cells[o]
-            tl = self.perf.estimate(c.cell_id, "local")
-            tr = self.perf.estimate(c.cell_id, "remote")
-            if tl is None or tr is None:
-                tl = tr = 0.0
-            loc_sum += tl
-            rem_sum += tr
-        conf = 1.0 if len(block) <= 1 else min(score / 100.0 + 0.5, 1.0)
-        if len(block) > 1 and ncand < 2:
-            # unproven prediction: commit only on the current cell's own value
-            if t_rem + 2 * t_mig < t_loc:
-                return Decision("remote", True,
-                                f"performance/block: unproven block {block}; "
-                                f"cell alone justifies migration "
-                                f"({t_rem:.2f}s + 2x{t_mig:.2f}s < {t_loc:.2f}s)",
-                                block=block)
-            return Decision("local", False,
-                            f"performance/block: insufficient context evidence "
-                            f"for block {block} ({ncand} candidate sequences)",
-                            block=block)
-        if rem_sum + 2 * t_mig < conf * loc_sum:
-            return Decision("remote", True,
-                            f"performance/block: block {block} remote "
-                            f"{rem_sum:.2f}s + 2x{t_mig:.2f}s < local {loc_sum:.2f}s",
-                            block=block)
-        return Decision("local", False,
-                        f"performance/block: block {block} local {loc_sum:.2f}s "
-                        f"<= remote {rem_sum:.2f}s + 2x{t_mig:.2f}s", block=block)
-
-    def decide(self, nb: Notebook, cell: Cell) -> Decision:
-        if self.use_knowledge:
-            d = self._knowledge_decision(cell)
+    def decide(self, nb: Notebook, cell: Cell, *,
+               current_env: str | None = None, peek: bool = False) -> Decision:
+        """Run the policy chain.  ``peek=True`` skips annotations (used by
+        the pipelined engine to predict the next hop without side effects)."""
+        current_env = current_env or self.home
+        for pol in self._chain:
+            d = pol.decide(self, nb, cell, current_env)
             if d is not None:
-                cell.annotate(d.reason)
+                if not peek:
+                    cell.annotate(d.reason)
                 return d
-        d = self._perf_decision(nb, cell)
-        cell.annotate(d.reason)
-        return d
+        return Decision(self.home, False, "no policy fired")  # pragma: no cover
 
     # ------------------------------------------------------------------
     # Algorithm 2: dynamic migration parameter update
@@ -211,14 +383,15 @@ class MigrationAnalyzer:
         info = analyze_cell(cell.source)
         updated: dict[str, float] = {}
         known = set(self.kb.get_known_parameters())
+        probe_env = self.offload_target()
         for fn, kwargs in info.call_kwargs.items():
             for p in (set(kwargs) & known):
                 t_loc, t_rem, used = [], [], []
                 budget = max_wait
                 for v in probe_values:
                     src = substitute_kwarg(cell.source, p, v)
-                    tl = runtime.probe(src, "local")
-                    tr = runtime.probe(src, "remote")
+                    tl = runtime.probe(src, self.home)
+                    tr = runtime.probe(src, probe_env)
                     used.append(v)
                     t_loc.append(tl)
                     t_rem.append(tr)

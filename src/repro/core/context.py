@@ -104,3 +104,12 @@ class ContextDetector:
         best, score = max(stats.items(), key=lambda kv: (kv[1], len(kv[0])))
         i = best.index(current_order)
         return best[i:], score, len(stats)
+
+    def predict_next(self, notebook: str, current_order: int) -> int | None:
+        """The cell most likely to run *after* the current one (the element
+        following it in the most probable sequence) — used by the pipelined
+        engine to prefetch the next hop's state during execution."""
+        block = self.predict_block(notebook, current_order)
+        if len(block) > 1:
+            return block[1]
+        return None

@@ -1,0 +1,186 @@
+"""Environment fabric: N heterogeneous execution environments + links.
+
+The paper's runtime moves notebook state between exactly two places (the
+user's machine and one cloud node).  This module generalizes that dyad into
+an *environment fabric*: an :class:`EnvironmentRegistry` holds any number of
+heterogeneous :class:`ExecutionEnvironment`s (cpu-local, gpu-cloud, a TPU
+mesh via ``DistContext``, a disk/checkpoint target) with per-pair
+bandwidth/latency :class:`Link`s.  Placement policies, the migration engine
+and the session scheduler all resolve environments and transfer costs
+through the registry instead of hardcoded ``"local"``/``"remote"`` strings.
+
+The paper's two-env setup is the smallest instance:
+``EnvironmentRegistry.two_env()`` builds it, and ``from_envs()`` adapts the
+legacy ``{"local": ..., "remote": ...}`` dict API.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Iterator
+
+from repro.core.state import ExecutionState
+
+
+class ExecutionEnvironment:
+    """A place code can run with its own namespace (§II): the user's machine,
+    a cloud node, a JAX mesh (``DistContext``) — or a non-compute target such
+    as disk, which the engine migrates to for checkpointing."""
+
+    def __init__(self, name: str, *, speedup: float = 1.0,
+                 mesh_ctx=None, globals_seed: dict | None = None,
+                 kind: str = "compute"):
+        self.name = name
+        self.speedup = float(speedup)
+        self.mesh_ctx = mesh_ctx
+        self.kind = kind                 # compute | storage
+        self.state = ExecutionState(dict(globals_seed or {}))
+
+    def execute(self, source: str, cost: float | None = None) -> float:
+        """Run real code against this env's namespace; return modeled seconds."""
+        t0 = time.perf_counter()
+        exec(compile(source, f"<{self.name}>", "exec"), self.state.ns)  # noqa: S102
+        wall = time.perf_counter() - t0
+        base = cost if cost is not None else wall
+        return base / self.speedup
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"ExecutionEnvironment({self.name!r}, speedup={self.speedup})"
+
+
+@dataclass(frozen=True)
+class Link:
+    """Directed transfer cost between two environments."""
+    bandwidth: float = 1e9          # bytes/second
+    latency: float = 0.5            # seconds per transfer
+
+    def transfer_seconds(self, nbytes: int | float) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+
+class EnvironmentRegistry:
+    """N environments + per-pair links + per-env capacity.
+
+    One environment is the *home* (the paper's "local"): where the user
+    sits, where sessions start, and where state returns after a block
+    completes.  Links default to (``default_bandwidth``, ``default_latency``)
+    so a registry behaves exactly like the legacy scalar-cost engine until
+    pairs are given their own costs via :meth:`connect`.
+    """
+
+    def __init__(self, *, default_bandwidth: float = 1e9,
+                 default_latency: float = 0.5):
+        self._envs: dict[str, ExecutionEnvironment] = {}
+        self._links: dict[tuple[str, str], Link] = {}
+        self._capacity: dict[str, int] = {}
+        self._placeable: dict[str, bool] = {}
+        self.default_link = Link(default_bandwidth, default_latency)
+        self.home: str | None = None
+
+    # -- membership ----------------------------------------------------
+    def register(self, env: ExecutionEnvironment, *, home: bool = False,
+                 capacity: int = 1,
+                 placeable: bool | None = None) -> ExecutionEnvironment:
+        if env.name in self._envs:
+            raise ValueError(f"environment {env.name!r} already registered")
+        self._envs[env.name] = env
+        self._capacity[env.name] = int(capacity)
+        if placeable is None:
+            placeable = env.kind == "compute"
+        self._placeable[env.name] = bool(placeable)
+        if home or self.home is None:
+            self.home = env.name
+        return env
+
+    def __getitem__(self, name: str) -> ExecutionEnvironment:
+        return self._envs[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._envs
+
+    def __len__(self) -> int:
+        return len(self._envs)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._envs)
+
+    def names(self) -> list[str]:
+        return list(self._envs)
+
+    def envs(self) -> dict[str, ExecutionEnvironment]:
+        return dict(self._envs)
+
+    def compute_envs(self) -> dict[str, ExecutionEnvironment]:
+        """Environments cells may be *placed* on (excludes storage targets)."""
+        return {n: e for n, e in self._envs.items() if self._placeable[n]}
+
+    def candidates(self) -> list[str]:
+        """Placement candidates other than home, registration order."""
+        return [n for n in self.compute_envs() if n != self.home]
+
+    def capacity(self, name: str) -> int:
+        return self._capacity[name]
+
+    # -- links ----------------------------------------------------------
+    def connect(self, a: str, b: str, *, bandwidth: float | None = None,
+                latency: float | None = None, symmetric: bool = True) -> Link:
+        link = Link(bandwidth if bandwidth is not None
+                    else self.default_link.bandwidth,
+                    latency if latency is not None
+                    else self.default_link.latency)
+        self._links[(a, b)] = link
+        if symmetric:
+            self._links[(b, a)] = link
+        return link
+
+    def link(self, src: str, dst: str) -> Link:
+        if src == dst:
+            return Link(float("inf"), 0.0)
+        return self._links.get((src, dst), self.default_link)
+
+    def transfer_seconds(self, src: str, dst: str, nbytes: int | float) -> float:
+        if src == dst:
+            return 0.0
+        return self.link(src, dst).transfer_seconds(nbytes)
+
+    def pairs(self) -> list[tuple[str, str]]:
+        ns = self.names()
+        return [(a, b) for a in ns for b in ns if a != b]
+
+    def clone_topology(self) -> "EnvironmentRegistry":
+        """Same env names/speedups/links/capacities with *fresh namespaces*.
+
+        The session scheduler gives each session a private clone (its own
+        kernel namespaces) while a shared CapacityArbiter models the actual
+        hardware the clones stand for."""
+        reg = EnvironmentRegistry(
+            default_bandwidth=self.default_link.bandwidth,
+            default_latency=self.default_link.latency)
+        for name, env in self._envs.items():
+            reg.register(
+                ExecutionEnvironment(name, speedup=env.speedup,
+                                     mesh_ctx=env.mesh_ctx, kind=env.kind),
+                home=(name == self.home), capacity=self._capacity[name],
+                placeable=self._placeable[name])
+        reg._links = dict(self._links)
+        return reg
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def two_env(cls, *, remote_speedup: float = 10.0, bandwidth: float = 1e9,
+                latency: float = 0.5) -> "EnvironmentRegistry":
+        """The paper's local/remote dyad as the smallest fabric."""
+        reg = cls(default_bandwidth=bandwidth, default_latency=latency)
+        reg.register(ExecutionEnvironment("local"), home=True)
+        reg.register(ExecutionEnvironment("remote", speedup=remote_speedup))
+        return reg
+
+    @classmethod
+    def from_envs(cls, envs: dict[str, ExecutionEnvironment], *,
+                  bandwidth: float = 1e9,
+                  latency: float = 0.5) -> "EnvironmentRegistry":
+        """Adapt the legacy ``{"local": ..., "remote": ...}`` dict API."""
+        reg = cls(default_bandwidth=bandwidth, default_latency=latency)
+        for name, env in envs.items():
+            reg.register(env, home=(name == "local"))
+        return reg

@@ -1,48 +1,39 @@
-"""Execution environments, the migration engine, and the hybrid runtime.
+"""The migration engine and the hybrid runtime over the environment fabric.
 
 This is the paper's server-side machinery assembled: sessions emit Table-I
 telemetry on the MQ bus; the context detector listens; the analyzer decides
 placement; the engine moves *reduced, delta, compressed* state between
 environments; everything is recorded as provenance.
 
-An ExecutionEnvironment is "a place code can run with its own namespace":
-the user's machine, a cloud node — or, in the TPU adaptation, a JAX mesh
-(``DistContext``), which is how the same engine implements checkpointing
-(migration to a disk env) and elastic rescaling (migration between meshes).
-Timing follows the paper's §III protocol: declared cell costs (or measured
-wall time) divided by the environment speedup, on a simulated clock.
+Environments live in :mod:`repro.core.fabric`: an ExecutionEnvironment is
+"a place code can run with its own namespace" — the user's machine, a cloud
+node, or, in the TPU adaptation, a JAX mesh (``DistContext``), which is how
+the same engine implements checkpointing (migration to a storage env) and
+elastic rescaling (migration between meshes).  The runtime works over any
+:class:`EnvironmentRegistry` (N environments, per-pair link costs); the
+paper's local/remote dyad is the two-env instance.  Timing follows the
+paper's §III protocol: declared cell costs (or measured wall time) divided
+by the environment speedup, on a simulated clock.
 """
 from __future__ import annotations
 
-import time
+import math
 from dataclasses import dataclass, field
-from typing import Any, Callable
 
 from repro.core import telemetry as T
 from repro.core.analyzer import Decision, MigrationAnalyzer, PerfModel
 from repro.core.context import ContextDetector
+from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment
 from repro.core.kb import KnowledgeBase, ProvRecord
 from repro.core.notebook import Cell, Notebook
 from repro.core.reducer import SerializationFailure, SerializedState, StateReducer
 from repro.core.simclock import SimClock
 from repro.core.state import ExecutionState
 
-
-class ExecutionEnvironment:
-    def __init__(self, name: str, *, speedup: float = 1.0,
-                 mesh_ctx=None, globals_seed: dict | None = None):
-        self.name = name
-        self.speedup = float(speedup)
-        self.mesh_ctx = mesh_ctx
-        self.state = ExecutionState(dict(globals_seed or {}))
-
-    def execute(self, source: str, cost: float | None = None) -> float:
-        """Run real code against this env's namespace; return modeled seconds."""
-        t0 = time.perf_counter()
-        exec(compile(source, f"<{self.name}>", "exec"), self.state.ns)  # noqa: S102
-        wall = time.perf_counter() - t0
-        base = cost if cost is not None else wall
-        return base / self.speedup
+__all__ = [
+    "ExecutionEnvironment", "MigrationResult", "MigrationEngine",
+    "PipelinedMigrationEngine", "HybridRuntime",
+]
 
 
 @dataclass
@@ -54,29 +45,67 @@ class MigrationResult:
     nbytes: int
     seconds: float
     full_bytes: int = 0      # what a full-state migration would have cost
+    noop: bool = False       # empty delta: nothing travelled, nothing charged
+    prefetched: tuple[str, ...] = ()   # names applied from a pipelined prefetch
+
+
+@dataclass
+class _PendingPrefetch:
+    """An in-flight background transfer started by the pipelined engine."""
+    src: str
+    dst: str
+    ser: SerializedState
+    started_at: float
+    ready_at: float
+    nbytes: int
 
 
 class MigrationEngine:
-    """Reduced/delta/compressed state transfer between environments."""
+    """Reduced/delta/compressed state transfer between environments.
+
+    Transfer cost resolves through the registry's per-pair links when a
+    registry is attached; otherwise the scalar ``bandwidth``/``latency``
+    model applies to every pair (the paper's uniform setup).  Optional
+    ``serialize_bandwidth``/``compress_bandwidth`` model the capture and
+    codec stages; this synchronous engine charges the three stages
+    *serially* — :class:`PipelinedMigrationEngine` overlaps them.
+    """
 
     def __init__(self, reducer: StateReducer, *, bandwidth: float = 1e9,
-                 latency: float = 0.5, delta: bool = True):
+                 latency: float = 0.5, delta: bool = True,
+                 registry: EnvironmentRegistry | None = None,
+                 serialize_bandwidth: float = math.inf,
+                 compress_bandwidth: float = math.inf):
         self.reducer = reducer
         self.bandwidth = bandwidth
         self.latency = latency
         self.delta = delta
+        self.registry = registry
+        self.serialize_bandwidth = serialize_bandwidth
+        self.compress_bandwidth = compress_bandwidth
         # receiver's content view: env name -> {state name -> digest}
         self.synced: dict[str, dict[str, int]] = {}
         self.log: list[MigrationResult] = []
 
-    def transfer_seconds(self, nbytes: int) -> float:
+    # -- cost model ------------------------------------------------------
+    def _link_seconds(self, nbytes: int, src: str | None, dst: str | None) -> float:
+        if self.registry is not None and src is not None and dst is not None:
+            return self.registry.transfer_seconds(src, dst, nbytes)
         return self.latency + nbytes / self.bandwidth
+
+    def _stage_seconds(self, nbytes: int) -> float:
+        return nbytes / self.serialize_bandwidth + nbytes / self.compress_bandwidth
+
+    def transfer_seconds(self, nbytes: int, src: str | None = None,
+                         dst: str | None = None) -> float:
+        """Serialize + compress + network, charged end to end (synchronous)."""
+        return self._stage_seconds(nbytes) + self._link_seconds(nbytes, src, dst)
 
     # ------------------------------------------------------------------
     def migrate(self, src: ExecutionEnvironment, dst: ExecutionEnvironment,
                 cell_source: str | None = None,
                 names: set[str] | None = None,
-                strict: bool = True) -> MigrationResult:
+                strict: bool = True, now: float | None = None) -> MigrationResult:
         """Move the state ``cell_source`` needs (or explicit ``names``) from
         src to dst; only new/changed names are serialized when delta is on."""
         import types as _types
@@ -119,50 +148,225 @@ class MigrationEngine:
             known.pop(n, None)
         # the sender's own content view is now also known
         self.synced.setdefault(src.name, {}).update(here)
+        # a deletion on the source is a deletion on *every* synced receiver
+        if dead:
+            self._propagate_tombstones(dead, exclude=(dst.name,))
 
-        seconds = self.transfer_seconds(ser.nbytes)
+        # an empty delta is a no-op: nothing crosses the wire, nothing charged
+        noop = not send and not dead
+        seconds = 0.0 if noop else self.transfer_seconds(
+            ser.nbytes, src.name, dst.name)
         res = MigrationResult(src.name, dst.name, tuple(sorted(send)),
-                              tuple(sorted(dead)), ser.nbytes, seconds)
+                              tuple(sorted(dead)), ser.nbytes, seconds,
+                              noop=noop)
         self.log.append(res)
         return res
 
+    def _propagate_tombstones(self, dead, exclude=()) -> None:
+        """Names deleted on the source are dropped on every env whose synced
+        view records them, and their digests evicted from all views."""
+        for env_name, view in self.synced.items():
+            if env_name in exclude:
+                continue
+            held = [n for n in dead if n in view]
+            if not held:
+                continue
+            for n in held:
+                view.pop(n, None)
+            if self.registry is not None and env_name in self.registry:
+                self.registry[env_name].state.drop(held)
+
     def invalidate(self, env_name: str, names) -> None:
-        """``env_name`` (re)defined these names: its content view is stale."""
-        view = self.synced.get(env_name)
-        if view:
+        """``env_name`` (re)defined these names: every peer's copy — and every
+        recorded digest — is stale; force a re-send on the next migration."""
+        for view in self.synced.values():
             for n in names:
                 view.pop(n, None)
 
 
-class HybridRuntime:
-    """Wires sessions, telemetry, context, analyzer, engine together (Fig. 1)."""
+class PipelinedMigrationEngine(MigrationEngine):
+    """Chunked serialize → compress → transfer pipeline on the sim clock.
 
-    def __init__(self, notebook: Notebook, *, envs: dict[str, ExecutionEnvironment],
+    Two wins over the synchronous engine:
+
+    * within one migration, the three stages overlap chunk-by-chunk, so the
+      charge is dominated by the slowest stage instead of their sum;
+    * :meth:`begin_prefetch` starts the predicted next hop's transfer in the
+      background while the current cell executes — the eventual ``migrate``
+      only charges whatever transfer time execution did not already cover.
+    """
+
+    def __init__(self, reducer: StateReducer, *, chunk_bytes: int = 1 << 20,
+                 **kw):
+        super().__init__(reducer, **kw)
+        self.chunk_bytes = int(chunk_bytes)
+        self._pending: dict[str, _PendingPrefetch] = {}
+        self.prefetch_hits = 0
+
+    # -- cost model ------------------------------------------------------
+    def transfer_seconds(self, nbytes: int, src: str | None = None,
+                         dst: str | None = None) -> float:
+        """Chunk-pipelined: latency + one chunk through every stage +
+        the remaining chunks behind the bottleneck stage."""
+        if nbytes <= 0:
+            return self._link_seconds(0, src, dst)
+        link = (self.registry.link(src, dst)
+                if self.registry is not None and src is not None
+                and dst is not None else None)
+        net_bw = link.bandwidth if link is not None else self.bandwidth
+        lat = link.latency if link is not None else self.latency
+        nchunks = max(1, math.ceil(nbytes / self.chunk_bytes))
+        chunk = nbytes / nchunks
+        stage = [chunk / self.serialize_bandwidth,
+                 chunk / self.compress_bandwidth, chunk / net_bw]
+        return lat + sum(stage) + (nchunks - 1) * max(stage)
+
+    # -- prefetch --------------------------------------------------------
+    def begin_prefetch(self, src: ExecutionEnvironment,
+                       dst: ExecutionEnvironment,
+                       cell_source: str | None = None,
+                       names: set[str] | None = None,
+                       now: float = 0.0) -> _PendingPrefetch | None:
+        """Snapshot the delta ``cell_source`` will need on ``dst`` and start
+        its transfer in the background (completes at ``ready_at`` on the sim
+        clock).  Nothing is applied to ``dst`` until ``migrate`` claims it."""
+        import types as _types
+        if names is None:
+            if cell_source is not None:
+                names, _, _ = self.reducer.reduce(src.state, cell_source)
+            else:
+                names = set(src.state.names())
+        # Speculatively carry the *whole* needed set, not just the current
+        # delta: the overlapped cell may invalidate names that look synced
+        # right now, and the claim only applies what actually must travel.
+        names = {n for n in names if n in src.state.ns
+                 and not isinstance(src.state.get(n), _types.ModuleType)}
+        if not names:
+            return None
+        ser = self.reducer.serialize_names(src.state, names, on_error="skip")
+        if not ser.blobs:
+            return None
+        pending = _PendingPrefetch(
+            src.name, dst.name, ser, started_at=now,
+            ready_at=now + self.transfer_seconds(ser.nbytes, src.name, dst.name),
+            nbytes=ser.nbytes)
+        self._pending[dst.name] = pending
+        return pending
+
+    def migrate(self, src: ExecutionEnvironment, dst: ExecutionEnvironment,
+                cell_source: str | None = None,
+                names: set[str] | None = None,
+                strict: bool = True, now: float | None = None) -> MigrationResult:
+        p = self._pending.get(dst.name)
+        valid: dict[str, int] = {}
+        if p is not None and p.src == src.name:
+            # a name is applied iff the source still holds the snapshotted
+            # content (else it must travel fresh) AND the receiver doesn't
+            # already have it (else the claim would turn a free no-op delta
+            # into a charged wait)
+            known = self.synced.setdefault(dst.name, {})
+            valid = {n: d for n, d in p.ser.digests.items()
+                     if n in p.ser.blobs and n in src.state.ns
+                     and known.get(n) != d
+                     and self.reducer.digest(src.state.ns[n]) == d}
+        if not valid:
+            if p is not None and p.src == src.name:
+                del self._pending[dst.name]      # consumed, nothing useful
+            return super().migrate(src, dst, cell_source, names=names,
+                                   strict=strict, now=now)
+
+        # mark the claimed names synced so the base delta skips them, but
+        # apply nothing until the residual migration has succeeded — a
+        # SerializationFailure must leave dst untouched
+        saved = {n: known[n] for n in valid if n in known}
+        known.update(valid)
+        try:
+            res = super().migrate(src, dst, cell_source, names=names,
+                                  strict=strict, now=now)
+        except Exception:
+            for n in valid:
+                known.pop(n, None)
+            known.update(saved)
+            raise
+        del self._pending[dst.name]
+        sub = SerializedState(
+            codec=p.ser.codec, blobs={n: p.ser.blobs[n] for n in valid},
+            digests=dict(valid))
+        objs = self.reducer.deserialize(sub, target_ns=dst.state.ns)
+        dst.state.update(objs)
+        # residual wait models the applied subset streaming since started_at
+        # (not the full speculative snapshot, which may be mostly synced)
+        wait = 0.0
+        if now is not None:
+            ready = p.started_at + self.transfer_seconds(
+                sub.nbytes, src.name, dst.name)
+            wait = max(0.0, ready - now)
+        self.prefetch_hits += 1
+        res.names = tuple(sorted(set(res.names) | set(valid)))
+        res.prefetched = tuple(sorted(valid))
+        res.nbytes += sub.nbytes
+        res.seconds += wait
+        res.noop = False
+        return res
+
+
+class HybridRuntime:
+    """Wires sessions, telemetry, context, analyzer, engine together (Fig. 1).
+
+    Environments come from an :class:`EnvironmentRegistry` (N environments,
+    per-pair links); the legacy ``envs={"local": ..., "remote": ...}`` dict
+    is adapted into a two-env registry.  ``registry.home`` plays the paper's
+    "local" role: sessions start there and state returns there when a block
+    completes or the plan deviates (Fig. 3).
+    """
+
+    def __init__(self, notebook: Notebook, *,
+                 envs: dict[str, ExecutionEnvironment] | None = None,
+                 registry: EnvironmentRegistry | None = None,
                  kb: KnowledgeBase | None = None,
                  reducer: StateReducer | None = None,
                  clock: SimClock | None = None,
                  policy: str = "block", use_knowledge: bool = True,
                  bandwidth: float = 1e9, latency: float = 0.5,
-                 delta: bool = True):
-        assert "local" in envs and "remote" in envs
+                 delta: bool = True, pipeline: bool = False,
+                 engine: MigrationEngine | None = None,
+                 arbiter=None):
+        if registry is None:
+            assert envs, "pass envs={...} or registry=EnvironmentRegistry(...)"
+            registry = EnvironmentRegistry.from_envs(
+                envs, bandwidth=bandwidth, latency=latency)
+        assert registry.home is not None and registry.candidates(), \
+            "registry needs a home env and at least one placement candidate"
         self.nb = notebook
-        self.envs = envs
+        self.registry = registry
+        self.envs = registry.envs()          # name -> env (back-compat view)
+        self.home = registry.home
         self.clock = clock or SimClock()
         self.bus = T.MQBus()
         self.kb = kb or KnowledgeBase()
         self.context = ContextDetector()
         self.context.attach(self.bus)
         self.reducer = reducer or StateReducer()
-        self.engine = MigrationEngine(self.reducer, bandwidth=bandwidth,
-                                      latency=latency, delta=delta)
+        if engine is not None:
+            self.engine = engine
+            if self.engine.registry is None:
+                self.engine.registry = registry
+        else:
+            engine_cls = PipelinedMigrationEngine if pipeline else MigrationEngine
+            self.engine = engine_cls(self.reducer, bandwidth=bandwidth,
+                                     latency=latency, delta=delta,
+                                     registry=registry)
         self.analyzer = MigrationAnalyzer(
             self.kb, self.context, PerfModel(), policy=policy,
             use_knowledge=use_knowledge, migration_latency=latency,
-            migration_bandwidth=bandwidth)
-        self.current_env = "local"
+            migration_bandwidth=bandwidth, registry=registry)
+        self.current_env = self.home
         self.block_plan: list[int] = []
+        self.block_env: str | None = None
         self.session_id = T.new_session_id()
         self.migrations = 0
+        self.queue_wait = 0.0
+        self.arbiter = arbiter               # shared capacity (SessionScheduler)
         self._emit(T.SESSION_STARTED, None)
 
     # ------------------------------------------------------------------
@@ -183,7 +387,10 @@ class HybridRuntime:
     def _do_migration(self, src: str, dst: str, cell_source: str | None) -> float:
         # return trips (no cell source) skip unserializable objects in place
         res = self.engine.migrate(self.envs[src], self.envs[dst], cell_source,
-                                  strict=cell_source is not None)
+                                  strict=cell_source is not None,
+                                  now=self.clock.now())
+        if res.noop:          # empty delta: free, and not a migration at all
+            return 0.0
         self.clock.advance(res.seconds)
         self.migrations += 1
         self.analyzer.observe_state_size(self.nb.name, max(res.nbytes, 1))
@@ -192,6 +399,34 @@ class HybridRuntime:
             self.clock.now(), params={"bytes": res.nbytes, "src": src},
             used=res.names))
         return res.seconds
+
+    def _maybe_prefetch(self, order: int) -> None:
+        """Pipelined engines push the predicted next hop's state while the
+        current cell executes (transfer overlaps execution on the sim clock)."""
+        if not isinstance(self.engine, PipelinedMigrationEngine):
+            return
+        if self.block_plan:
+            upcoming = [o for o in self.block_plan if o > order]
+            nxt = upcoming[0] if upcoming else order + 1
+        else:
+            predicted = self.context.predict_next(self.nb.name, order)
+            nxt = predicted if predicted is not None else order + 1
+        if nxt >= len(self.nb.cells):
+            return
+        cell = self.nb.cells[nxt]
+        d = self.analyzer.decide(self.nb, cell, current_env=self.current_env,
+                                 peek=True)
+        target = d.env
+        if self.block_plan and self.block_env is not None:
+            target = self.block_env if nxt in self.block_plan else self.home
+        if target == self.current_env:
+            return
+        p = self.engine.begin_prefetch(self.envs[self.current_env],
+                                       self.envs[target], cell.source,
+                                       now=self.clock.now())
+        if p is not None:
+            self._emit(T.STATE_PREFETCHED, cell.cell_id, target=target,
+                       nbytes=p.nbytes, ready_at=p.ready_at)
 
     def run_cell(self, ref, *, force_env: str | None = None) -> float:
         """Execute one cell under the policies; returns modeled duration."""
@@ -203,13 +438,17 @@ class HybridRuntime:
             decision = Decision(force_env, force_env != self.current_env,
                                 f"forced to {force_env}")
         elif self.block_plan and order in self.block_plan:
-            decision = Decision("remote", False, "inside predicted block")
+            decision = Decision(self.block_env or self.current_env, False,
+                                "inside predicted block")
         elif self.block_plan and order not in self.block_plan:
-            # deviation from predicted block: return to local (Fig. 3)
-            decision = Decision("local", False, "deviated from predicted block")
+            # deviation from predicted block: return home (Fig. 3)
+            decision = Decision(self.home, False,
+                                "deviated from predicted block")
             self.block_plan = []
+            self.block_env = None
         else:
-            decision = self.analyzer.decide(self.nb, cell)
+            decision = self.analyzer.decide(self.nb, cell,
+                                            current_env=self.current_env)
 
         target = decision.env
         if target != self.current_env:
@@ -217,20 +456,34 @@ class HybridRuntime:
                 self._do_migration(self.current_env, target, cell.source)
                 if decision.block:
                     self.block_plan = [o for o in decision.block if o >= order]
+                    self.block_env = target
                 self.current_env = target
             except SerializationFailure as e:
-                cell.annotate(f"serialization failure -> local: {e}")
-                target = "local"
+                cell.annotate(f"serialization failure -> {self.home}: {e}")
+                target = self.home
 
         env = self.envs[self.current_env]
+        # shared-capacity gate: queue when the target env is saturated
+        if self.arbiter is not None:
+            now = self.clock.now()
+            slot_start = self.arbiter.acquire(self.current_env, now)
+            wait = slot_start - now
+            if wait > 0:
+                self.clock.advance(wait)
+                self.queue_wait += wait
+                self._emit(T.CELL_EXECUTION_QUEUED, cell.cell_id, order=order,
+                           env=self.current_env, wait=wait)
         self._emit(T.CELL_EXECUTION_STARTED, cell.cell_id, order=order,
                    env=self.current_env)
+        self._maybe_prefetch(order)
+        exec_start = self.clock.now()
         duration = env.execute(cell.source, cell.cost)
         self.clock.advance(duration)
+        if self.arbiter is not None:
+            self.arbiter.release(self.current_env, exec_start, self.clock.now())
         base = cell.cost if cell.cost is not None else duration * env.speedup
-        self.analyzer.perf.observe(cell.cell_id, "local", base)
-        self.analyzer.perf.observe(cell.cell_id, "remote",
-                                   base / self.envs["remote"].speedup)
+        for name, e in self.registry.compute_envs().items():
+            self.analyzer.perf.observe(cell.cell_id, name, base / e.speedup)
         self._emit(T.CELL_EXECUTION_COMPLETED, cell.cell_id, order=order,
                    env=self.current_env, duration=duration)
 
@@ -238,16 +491,18 @@ class HybridRuntime:
         from repro.core.astdeps import analyze_cell
         self.engine.invalidate(self.current_env, analyze_cell(cell.source).stores)
 
-        # block bookkeeping: leave remote when the block completes (Fig. 3)
+        # block bookkeeping: leave the block env when it completes (Fig. 3)
         if self.block_plan:
             self.block_plan = [o for o in self.block_plan if o != order]
-            if not self.block_plan and self.current_env != "local":
-                self._do_migration(self.current_env, "local", None)
-                self.current_env = "local"
-        elif self.current_env != "local" and not decision.block:
+            if not self.block_plan:
+                self.block_env = None
+                if self.current_env != self.home:
+                    self._do_migration(self.current_env, self.home, None)
+                    self.current_env = self.home
+        elif self.current_env != self.home and not decision.block:
             # single-cell strategy: immediately switch state back
-            self._do_migration(self.current_env, "local", None)
-            self.current_env = "local"
+            self._do_migration(self.current_env, self.home, None)
+            self.current_env = self.home
 
         return duration
 

@@ -1,0 +1,149 @@
+"""Multi-session scheduler: many concurrent notebook sessions on one fabric.
+
+The paper serves a single user on a single cloud node.  At fleet scale
+(NotebookOS-style) many sessions contend for a shared pool of accelerator
+environments, so placement decisions meet *capacity*: when a session's
+target env is saturated, the session queues and the wait is telemetry.
+
+Design: each session owns a private :class:`HybridRuntime` over a
+``registry.clone_topology()`` (its own kernel namespaces, its own sim
+clock), while one shared :class:`CapacityArbiter` — keyed by env *name* —
+models the physical hardware all the clones stand for.  The scheduler
+interleaves sessions earliest-clock-first, which keeps the global event
+order consistent across the independent per-session clocks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.fabric import EnvironmentRegistry
+from repro.core.migration import HybridRuntime
+from repro.core.notebook import Notebook
+
+
+class CapacityArbiter:
+    """Per-env slot accounting shared by every session in the fleet.
+
+    ``acquire(env, now)`` returns the earliest start time a slot is free
+    (== ``now`` when under capacity); ``release`` records the busy interval.
+    """
+
+    def __init__(self, registry: EnvironmentRegistry):
+        self._cap = {n: registry.capacity(n) for n in registry.names()}
+        # full interval history per env: acquire times are NOT monotone
+        # across sessions (migrations advance a session's clock between the
+        # scheduler's min-clock pick and the gate), so freed slots can't be
+        # popped destructively — admission is computed against all intervals.
+        self._busy: dict[str, list[tuple[float, float]]] = {
+            n: [] for n in registry.names()}
+        self.busy_seconds: dict[str, float] = {n: 0.0 for n in registry.names()}
+        self.queue_events: list[tuple[str, float, float]] = []  # env, asked, got
+        self.horizon = 0.0
+
+    def acquire(self, env: str, now: float) -> float:
+        cap = self._cap.get(env, 1)
+        intervals = self._busy.setdefault(env, [])
+
+        def running_at(t: float) -> list[float]:
+            return [e for s, e in intervals if s <= t < e]
+
+        t = now
+        while len(ends := running_at(t)) >= cap:
+            t = min(ends)            # earliest slot to free while saturated
+        if t > now:
+            self.queue_events.append((env, now, t))
+        return t
+
+    def release(self, env: str, start: float, end: float) -> None:
+        self._busy.setdefault(env, []).append((start, end))
+        self.busy_seconds[env] = self.busy_seconds.get(env, 0.0) + (end - start)
+        self.horizon = max(self.horizon, end)
+
+    def utilization(self, env: str) -> float:
+        if self.horizon <= 0:
+            return 0.0
+        return self.busy_seconds.get(env, 0.0) / (
+            self._cap.get(env, 1) * self.horizon)
+
+
+@dataclass
+class SessionReport:
+    session: str
+    notebook: str
+    cells_run: int
+    makespan: float
+    queue_wait: float
+    migrations: int
+
+
+@dataclass
+class _Session:
+    runtime: HybridRuntime
+    plan: list
+    cursor: int = 0
+
+    def done(self) -> bool:
+        return self.cursor >= len(self.plan)
+
+
+@dataclass
+class ScheduleReport:
+    sessions: list[SessionReport]
+    env_utilization: dict[str, float]
+    queue_events: int
+    makespan: float
+    total_queue_wait: float = field(init=False)
+
+    def __post_init__(self):
+        self.total_queue_wait = sum(s.queue_wait for s in self.sessions)
+
+
+class SessionScheduler:
+    """Multiplex N sessions over shared environments with per-env capacity."""
+
+    def __init__(self, registry: EnvironmentRegistry):
+        self.registry = registry
+        self.arbiter = CapacityArbiter(registry)
+        self._sessions: list[_Session] = []
+
+    # ------------------------------------------------------------------
+    def add_session(self, runtime: HybridRuntime, plan) -> HybridRuntime:
+        """Attach an existing runtime (it must gate through our arbiter)."""
+        runtime.arbiter = self.arbiter
+        self._sessions.append(_Session(runtime, list(plan)))
+        return runtime
+
+    def add_notebook(self, notebook: Notebook, plan=None,
+                     **runtime_kw) -> HybridRuntime:
+        """Spawn a session on a private clone of the shared fabric topology."""
+        rt = HybridRuntime(notebook, registry=self.registry.clone_topology(),
+                           **runtime_kw)
+        if plan is None:
+            plan = list(range(len(notebook.cells)))
+        return self.add_session(rt, plan)
+
+    # ------------------------------------------------------------------
+    def run(self) -> ScheduleReport:
+        """Earliest-clock-first interleave until every session drains."""
+        while True:
+            ready = [s for s in self._sessions if not s.done()]
+            if not ready:
+                break
+            s = min(ready, key=lambda s: s.runtime.clock.now())
+            s.runtime.run_cell(s.plan[s.cursor])
+            s.cursor += 1
+        reports = []
+        for s in self._sessions:
+            s.runtime.close()
+            reports.append(SessionReport(
+                session=s.runtime.session_id,
+                notebook=s.runtime.nb.name,
+                cells_run=s.cursor,
+                makespan=s.runtime.clock.now(),
+                queue_wait=s.runtime.queue_wait,
+                migrations=s.runtime.migrations))
+        util = {n: self.arbiter.utilization(n) for n in self.registry.names()}
+        makespan = max((r.makespan for r in reports), default=0.0)
+        return ScheduleReport(sessions=reports, env_utilization=util,
+                              queue_events=len(self.arbiter.queue_events),
+                              makespan=makespan)

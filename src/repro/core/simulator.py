@@ -85,8 +85,23 @@ class SimResult:
         return local_seconds / self.total_seconds
 
 
-def simulate(trace: Trace, policy: str, *, migration_time: float,
-             remote_speedup: float) -> SimResult:
+def simulate(trace: Trace, policy: str, *, migration_time: float | None = None,
+             remote_speedup: float | None = None, registry=None,
+             state_nbytes: float = 0.0) -> SimResult:
+    """Replay a trace under a policy.  Costs come either from the paper's
+    forced scalars (``migration_time``/``remote_speedup``) or from an
+    :class:`~repro.core.fabric.EnvironmentRegistry`: the offload env is the
+    fastest placement candidate and the migration time is the home<->offload
+    link cost for ``state_nbytes`` of state."""
+    if registry is not None:
+        cand = max(registry.candidates(), key=lambda n: registry[n].speedup)
+        if remote_speedup is None:
+            remote_speedup = registry[cand].speedup
+        if migration_time is None:
+            migration_time = registry.transfer_seconds(
+                registry.home, cand, state_nbytes)
+    assert migration_time is not None and remote_speedup is not None, \
+        "pass migration_time/remote_speedup or a registry"
     c = trace.costs
     s = remote_speedup
     m = migration_time
@@ -166,8 +181,13 @@ def simulate(trace: Trace, policy: str, *, migration_time: float,
 
 
 def policy_grid(trace: Trace, migration_times, remote_speedups,
-                policies=("single", "block")) -> dict:
-    """Speedup (vs local) grids — the data behind Figs. 5/6/8/9/10."""
+                policies=("single", "block"), use_registry: bool = False) -> dict:
+    """Speedup (vs local) grids — the data behind Figs. 5/6/8/9/10.
+
+    With ``use_registry`` each grid point is evaluated through a two-env
+    :class:`~repro.core.fabric.EnvironmentRegistry` (the fabric API); the
+    derived scalars are identical, so decisions match the paper runs."""
+    from repro.core.fabric import EnvironmentRegistry
     local = simulate(trace, "local", migration_time=0, remote_speedup=1)
     out = {
         "trace": trace.name,
@@ -181,7 +201,12 @@ def policy_grid(trace: Trace, migration_times, remote_speedups,
         for mt in migration_times:
             row_s, row_m = [], []
             for rs in remote_speedups:
-                r = simulate(trace, p, migration_time=mt, remote_speedup=rs)
+                if use_registry:
+                    reg = EnvironmentRegistry.two_env(
+                        remote_speedup=rs, bandwidth=float("inf"), latency=mt)
+                    r = simulate(trace, p, registry=reg)
+                else:
+                    r = simulate(trace, p, migration_time=mt, remote_speedup=rs)
                 row_s.append(local.total_seconds / r.total_seconds)
                 row_m.append(r.migrations)
             out["speedup"][p].append(row_s)

@@ -20,9 +20,13 @@ CELL_EXECUTION_REQUESTED = "cell-execution-requested"
 CELL_EXECUTION_STARTED = "cell-execution-started"
 CELL_EXECUTION_COMPLETED = "cell-execution-completed"
 CELL_MODIFIED = "cell-modified"
+# fabric extensions (beyond Table I): multi-session queueing + pipelining
+CELL_EXECUTION_QUEUED = "cell-execution-queued"
+STATE_PREFETCHED = "state-prefetched"
 
 ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
-             CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED)
+             CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED,
+             CELL_EXECUTION_QUEUED, STATE_PREFETCHED)
 
 
 @dataclass(frozen=True)

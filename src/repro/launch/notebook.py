@@ -2,11 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.notebook path/to/nb.ipynb \
         --sessions 3 --remote-speedup 10 --policy block \
-        [--bandwidth 1e9] [--latency 0.5] [--codec zlib] [--report out.json]
+        [--bandwidth 1e9] [--latency 0.5] [--codec zlib] [--report out.json] \
+        [--env tpu-mesh:40:1] [--link local:tpu-mesh:1e8:1.0] [--pipeline] \
+        [--fleet 4]
 
 Cells execute for real (exec against the session namespace); timing follows
 the paper's forced-speedup protocol when cells carry a
 ``metadata.repro.cost``, else measured wall time scaled by the env speedup.
+
+By default this is the paper's local/remote dyad.  ``--env name:speedup[:cap]``
+(repeatable) registers extra environments and ``--link a:b:bw:lat`` gives a
+pair its own transfer cost; ``--policy cost`` scores every env per cell.
+``--fleet N`` replays N concurrent sessions of the notebook through the
+SessionScheduler over the shared fabric (per-env capacity, queueing stats).
+
 Prints the decision/migration report and writes the annotated notebook back
 (explainability annotations land in ``metadata.repro.annotations``).
 """
@@ -16,25 +25,83 @@ import argparse
 import json
 
 from repro.core import (
-    ExecutionEnvironment, HybridRuntime, Notebook, StateReducer,
+    EnvironmentRegistry, ExecutionEnvironment, HybridRuntime, Notebook,
+    SessionScheduler, StateReducer,
 )
+
+
+def build_registry(*, remote_speedup: float = 10.0, bandwidth: float = 1e9,
+                   latency: float = 0.5, extra_envs=(), links=()) -> EnvironmentRegistry:
+    """Two-env default plus any ``name:speedup[:capacity]`` extras and
+    ``a:b:bandwidth:latency`` link overrides."""
+    reg = EnvironmentRegistry(default_bandwidth=bandwidth,
+                              default_latency=latency)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment("remote", speedup=remote_speedup),
+                 capacity=4)
+    for spec in extra_envs:
+        parts = spec.split(":")
+        name = parts[0]
+        speedup = float(parts[1]) if len(parts) > 1 else 1.0
+        cap = int(parts[2]) if len(parts) > 2 else 1
+        reg.register(ExecutionEnvironment(name, speedup=speedup), capacity=cap)
+    for spec in links:
+        a, b, bw, lat = spec.split(":")
+        for end in (a, b):
+            if end not in reg:
+                raise ValueError(
+                    f"--link {spec!r}: unknown environment {end!r} "
+                    f"(registered: {', '.join(reg.names())})")
+        reg.connect(a, b, bandwidth=float(bw), latency=float(lat))
+    return reg
 
 
 def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  policy: str = "block", use_knowledge: bool = True,
                  bandwidth: float = 1e9, latency: float = 0.5,
-                 codec: str = "zlib") -> dict:
+                 codec: str = "zlib", extra_envs=(), links=(),
+                 pipeline: bool = False, fleet: int = 0) -> dict:
     with open(path) as f:
         nb = Notebook.from_ipynb(json.load(f))
-    rt = HybridRuntime(
-        nb,
-        envs={"local": ExecutionEnvironment("local"),
-              "remote": ExecutionEnvironment("remote", speedup=remote_speedup)},
-        reducer=StateReducer(codec=codec),
-        policy=policy, use_knowledge=use_knowledge,
-        bandwidth=bandwidth, latency=latency)
-
+    registry = build_registry(remote_speedup=remote_speedup,
+                              bandwidth=bandwidth, latency=latency,
+                              extra_envs=extra_envs, links=links)
     code = [c for c in nb.cells if c.cell_type == "code"]
+
+    if fleet:
+        sched = SessionScheduler(registry)
+        # plan by index: re-parsed notebooks regenerate ids for cells that
+        # have none in the file, so cell_ids don't survive a second parse
+        plan = [i for i, c in enumerate(nb.cells)
+                if c.cell_type == "code"] * sessions
+        for _ in range(fleet):
+            with open(path) as f:
+                session_nb = Notebook.from_ipynb(json.load(f))
+            sched.add_notebook(session_nb, plan=plan,
+                               reducer=StateReducer(codec=codec),
+                               policy=policy, use_knowledge=use_knowledge,
+                               pipeline=pipeline)
+        rep = sched.run()
+        report = {
+            "notebook": nb.name,
+            "fleet": fleet,
+            "sessions_each": sessions,
+            "policy": policy,
+            "makespan": rep.makespan,
+            "total_queue_wait": rep.total_queue_wait,
+            "queue_events": rep.queue_events,
+            "env_utilization": rep.env_utilization,
+            "per_session": [
+                {"session": s.session[:8], "makespan": s.makespan,
+                 "queue_wait": s.queue_wait, "migrations": s.migrations}
+                for s in rep.sessions],
+        }
+        return report, nb
+
+    rt = HybridRuntime(
+        nb, registry=registry, reducer=StateReducer(codec=codec),
+        policy=policy, use_knowledge=use_knowledge, pipeline=pipeline)
+
     for _ in range(sessions):
         for cell in code:
             rt.run_cell(cell.cell_id)
@@ -46,12 +113,14 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         "notebook": nb.name,
         "sessions": sessions,
         "policy": policy,
+        "environments": registry.names(),
         "modeled_seconds": rt.clock.now(),
         "local_only_seconds": local_only or None,
         "speedup_vs_local": (local_only / rt.clock.now()
                              if local_only and rt.clock.now() else None),
         "migrations": rt.migrations,
         "migrated_bytes": sum(m.nbytes for m in rt.engine.log),
+        "prefetch_hits": getattr(rt.engine, "prefetch_hits", 0),
         "decisions": {c.cell_id: c.annotations[-1] if c.annotations else None
                       for c in code},
         "provenance_records": len(rt.kb.provenance),
@@ -64,11 +133,20 @@ def main():
     ap.add_argument("notebook")
     ap.add_argument("--sessions", type=int, default=3)
     ap.add_argument("--remote-speedup", type=float, default=10.0)
-    ap.add_argument("--policy", choices=["single", "block"], default="block")
+    ap.add_argument("--policy", choices=["single", "block", "cost"],
+                    default="block")
     ap.add_argument("--no-knowledge", action="store_true")
     ap.add_argument("--bandwidth", type=float, default=1e9)
     ap.add_argument("--latency", type=float, default=0.5)
     ap.add_argument("--codec", default="zlib")
+    ap.add_argument("--env", action="append", default=[],
+                    help="extra environment: name:speedup[:capacity]")
+    ap.add_argument("--link", action="append", default=[],
+                    help="pair link override: a:b:bandwidth:latency")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined engine (prefetch overlaps execution)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run N concurrent sessions through the scheduler")
     ap.add_argument("--report", default=None)
     ap.add_argument("--write-annotated", default=None,
                     help="write the notebook back with decision annotations")
@@ -78,13 +156,15 @@ def main():
         args.notebook, sessions=args.sessions,
         remote_speedup=args.remote_speedup, policy=args.policy,
         use_knowledge=not args.no_knowledge, bandwidth=args.bandwidth,
-        latency=args.latency, codec=args.codec)
+        latency=args.latency, codec=args.codec, extra_envs=args.env,
+        links=args.link, pipeline=args.pipeline, fleet=args.fleet)
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))
-    print("\nper-cell decisions:")
-    for cid, note in report["decisions"].items():
-        print(f"  {cid[:8]}: {note}")
+    if "decisions" in report:
+        print("\nper-cell decisions:")
+        for cid, note in report["decisions"].items():
+            print(f"  {cid[:8]}: {note}")
     if args.report:
         with open(args.report, "w") as f:
             json.dump(report, f, indent=2)

@@ -2,19 +2,55 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --batch 4 --prompt-len 48 --gen 16
+
+Notebook-fleet mode serves many concurrent notebook *sessions* instead of
+token batches — the migration subsystem's serving story: N users' sessions
+multiplexed by the SessionScheduler over a shared accelerator fabric.
+
+    PYTHONPATH=src python -m repro.launch.serve --notebook-fleet 8 \
+        [--fleet-gpu-capacity 2] [--fleet-tpu-capacity 1]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.configs.base import ShapeConfig
-from repro.data import TokenPipeline
-from repro.models import LM
+def serve_notebook_fleet(n_sessions: int, *, gpu_capacity: int = 2,
+                         tpu_capacity: int = 1) -> dict:
+    """N synthetic data-science sessions over a shared 3-env fabric."""
+    from repro.core import (
+        EnvironmentRegistry, ExecutionEnvironment, Notebook, SessionScheduler,
+    )
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.5)
+    reg.register(ExecutionEnvironment("local"), home=True,
+                 capacity=max(8, n_sessions))
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=8.0),
+                 capacity=gpu_capacity)
+    reg.register(ExecutionEnvironment("tpu-mesh", speedup=40.0),
+                 capacity=tpu_capacity)
+    reg.connect("local", "gpu-cloud", bandwidth=5e8, latency=0.3)
+    reg.connect("local", "tpu-mesh", bandwidth=1e8, latency=1.0)
+    sched = SessionScheduler(reg)
+    for i in range(n_sessions):
+        nb = Notebook(f"user-{i}")
+        nb.add_cell("import numpy as np\n"
+                    "data = np.arange(200_000, dtype=np.float64)", cost=0.5)
+        nb.add_cell("model = float(((data - data.mean()) ** 2).sum())",
+                    cost=60.0)
+        nb.add_cell("report = model / len(data)", cost=0.2)
+        sched.add_notebook(nb, policy="cost", use_knowledge=False)
+    rep = sched.run()
+    return {
+        "sessions": n_sessions,
+        "makespan": rep.makespan,
+        "queue_events": rep.queue_events,
+        "total_queue_wait": rep.total_queue_wait,
+        "env_utilization": rep.env_utilization,
+        "sessions_per_modeled_hour": (
+            n_sessions / rep.makespan * 3600 if rep.makespan else 0.0),
+    }
 
 
 def main():
@@ -25,7 +61,28 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--notebook-fleet", type=int, default=0,
+                    help="serve N concurrent notebook sessions instead of "
+                         "an LM token batch")
+    ap.add_argument("--fleet-gpu-capacity", type=int, default=2)
+    ap.add_argument("--fleet-tpu-capacity", type=int, default=1)
     args = ap.parse_args()
+
+    if args.notebook_fleet:
+        report = serve_notebook_fleet(
+            args.notebook_fleet, gpu_capacity=args.fleet_gpu_capacity,
+            tpu_capacity=args.fleet_tpu_capacity)
+        print(json.dumps(report, indent=2))
+        print("ok")
+        return
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data import TokenPipeline
+    from repro.models import LM
 
     cfg = get_config(args.arch, reduced=args.reduced)
     total = args.prompt_len + args.gen

@@ -130,7 +130,8 @@ def moe_ffn_shardmap(p, x, cfg, ctx):
         out = jax.lax.psum(out, "model")
         return out.reshape(Bl, Sl, d)
 
-    fn = jax.shard_map(
+    from repro.distributed.sharding import shard_map
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(PS(batch, None, None), PS(None, None), w_spec, w_spec, wd_spec),
         out_specs=PS(batch, None, None),

@@ -1,6 +1,5 @@
 """Context detector (paper §II-B, Algorithm 1)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp_compat import given, settings, st
 
 from repro.core import ContextDetector, get_sequences, sequence_stats
 

@@ -1,0 +1,260 @@
+"""Environment fabric: registry, N-env placement, pipelined migration,
+multi-session scheduling (beyond the paper's local/remote dyad)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EnvironmentRegistry, ExecutionEnvironment, HybridRuntime, Link,
+    MigrationEngine, Notebook, PipelinedMigrationEngine, SessionScheduler,
+    StateReducer, simulate, synthetic_loops_trace,
+)
+from repro.core import telemetry as T
+
+
+def _three_env_registry(**kw):
+    reg = EnvironmentRegistry(default_bandwidth=1e9, default_latency=0.1, **kw)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=4)
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=8.0), capacity=2)
+    reg.register(ExecutionEnvironment("tpu-mesh", speedup=40.0), capacity=1)
+    reg.connect("local", "gpu-cloud", bandwidth=5e8, latency=0.3)
+    reg.connect("local", "tpu-mesh", bandwidth=1e8, latency=1.0)
+    reg.connect("gpu-cloud", "tpu-mesh", bandwidth=1e9, latency=0.2)
+    return reg
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_registry_links_and_lookup():
+    reg = _three_env_registry()
+    assert reg.home == "local"
+    assert set(reg.names()) == {"local", "gpu-cloud", "tpu-mesh"}
+    assert reg.candidates() == ["gpu-cloud", "tpu-mesh"]
+    assert reg.link("local", "gpu-cloud") == Link(5e8, 0.3)
+    assert reg.link("gpu-cloud", "local") == Link(5e8, 0.3)   # symmetric
+    assert reg.transfer_seconds("local", "tpu-mesh", 1e8) == 1.0 + 1.0
+    assert reg.transfer_seconds("local", "local", 1e9) == 0.0
+    assert len(reg.pairs()) == 6
+
+
+def test_registry_storage_env_not_placeable():
+    reg = _three_env_registry()
+    reg.register(ExecutionEnvironment("disk", kind="storage"))
+    assert "disk" in reg
+    assert "disk" not in reg.compute_envs()
+    assert "disk" not in reg.candidates()
+
+
+def test_registry_clone_topology_fresh_namespaces():
+    reg = _three_env_registry()
+    reg["local"].execute("x = 1")
+    clone = reg.clone_topology()
+    assert set(clone.names()) == set(reg.names())
+    assert clone.home == "local"
+    assert clone.link("local", "tpu-mesh") == reg.link("local", "tpu-mesh")
+    assert "x" not in clone["local"].state.ns          # fresh namespace
+    assert clone.capacity("gpu-cloud") == 2
+
+
+def test_legacy_envs_dict_adapts():
+    reg = EnvironmentRegistry.from_envs(
+        {"local": ExecutionEnvironment("local"),
+         "remote": ExecutionEnvironment("remote", speedup=10.0)},
+        bandwidth=1e8, latency=0.5)
+    assert reg.home == "local" and reg.candidates() == ["remote"]
+    assert reg.transfer_seconds("local", "remote", 1e8) == 0.5 + 1.0
+
+
+# ----------------------------------------------------------------------
+# N-env migration: tombstones on every receiver (delta §II-D generalized)
+# ----------------------------------------------------------------------
+
+def test_tombstones_propagate_to_all_synced_receivers():
+    reg = _three_env_registry()
+    a, b, c = reg["local"], reg["gpu-cloud"], reg["tpu-mesh"]
+    eng = MigrationEngine(StateReducer("zlib"), registry=reg)
+    a.execute("x = [1, 2, 3]\ny = 'keep'")
+    eng.migrate(a, b, names={"x", "y"})
+    eng.migrate(a, c, names={"x", "y"})
+    assert "x" in b.state.ns and "x" in c.state.ns
+
+    a.execute("del x")                     # deleted on the source
+    res = eng.migrate(a, b, None)          # next sync carries the tombstone
+    assert "x" in res.deleted
+    # dropped on *every* synced receiver, not just the migration target
+    assert "x" not in b.state.ns
+    assert "x" not in c.state.ns
+    # and its digest is evicted from every synced view
+    for env_name, view in eng.synced.items():
+        assert "x" not in view, env_name
+    # unrelated names survive everywhere
+    assert b.state["y"] == "keep" and c.state["y"] == "keep"
+
+
+# ----------------------------------------------------------------------
+# cost-matrix policy over N envs
+# ----------------------------------------------------------------------
+
+def _heavy_nb():
+    nb = Notebook("fabric-nb")
+    nb.add_cell("import numpy as np\nxs = np.arange(64.0)", cost=0.2)
+    nb.add_cell("ys = xs * 2", cost=0.3)
+    nb.add_cell("z = float((ys ** 2).sum())", cost=120.0)
+    nb.add_cell("w = z + 1", cost=0.1)
+    return nb
+
+
+def test_cost_matrix_places_heavy_cell_on_third_env():
+    nb = _heavy_nb()
+    rt = HybridRuntime(nb, registry=_three_env_registry(), policy="cost",
+                       use_knowledge=False)
+    for _ in range(2):
+        for i in range(len(nb.cells)):
+            rt.run_cell(i)
+    rt.close()
+    execs = [(m.cell_id, m.payload["env"]) for m in rt.bus.messages()
+             if m.type == T.CELL_EXECUTION_STARTED]
+    envs_used = {env for _, env in execs}
+    heavy_envs = {env for cid, env in execs if cid == nb.cells[2].cell_id}
+    # the heavy cell lands on the fastest env despite its slower link
+    assert "tpu-mesh" in heavy_envs
+    # cheap cells are not dragged to an accelerator for nothing
+    assert any(env == "local" for _, env in execs)
+    assert rt.current_env == "local"                  # returned home
+    assert any("cost-matrix" in a for a in nb.cells[2].annotations)
+    assert envs_used <= {"local", "gpu-cloud", "tpu-mesh"}
+
+
+def test_runtime_accepts_n_envs_with_block_policy():
+    nb = _heavy_nb()
+    rt = HybridRuntime(nb, registry=_three_env_registry(), policy="block",
+                       use_knowledge=False)
+    for _ in range(3):
+        for i in range(len(nb.cells)):
+            rt.run_cell(i)
+    rt.close()
+    local_only = 3 * sum(c.cost for c in nb.cells)
+    assert rt.clock.now() < local_only
+    assert rt.migrations > 0
+
+
+# ----------------------------------------------------------------------
+# pipelined engine
+# ----------------------------------------------------------------------
+
+def _pair():
+    reg = EnvironmentRegistry(default_bandwidth=1e6, default_latency=1.0)
+    l = reg.register(ExecutionEnvironment("local"), home=True)
+    r = reg.register(ExecutionEnvironment("remote", speedup=10.0))
+    l.execute("import numpy as np\n"
+              "data = np.arange(250_000, dtype=np.float64)\n"
+              "def use(x):\n    return float(x.sum())\n")
+    return reg, l, r
+
+
+def test_prefetch_overlaps_execution_on_clock():
+    reg, l, r = _pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    p = eng.begin_prefetch(l, r, "out = use(data)", now=0.0)
+    assert p is not None and p.ready_at > 1.0          # ~2MB over 1MB/s
+    # execution covered the whole transfer: nothing left to charge
+    res = eng.migrate(l, r, "out = use(data)", now=p.ready_at + 1.0)
+    assert res.seconds == 0.0
+    assert "data" in res.prefetched
+    r.execute("out = use(data)")
+    assert r.state["out"] == float(np.arange(250_000, dtype=np.float64).sum())
+
+
+def test_prefetch_partially_covered_charges_remainder():
+    reg, l, r = _pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    p = eng.begin_prefetch(l, r, "out = use(data)", now=0.0)
+    res = eng.migrate(l, r, "out = use(data)", now=0.5)
+    assert res.seconds == pytest.approx(p.ready_at - 0.5)
+
+
+def test_prefetch_invalidated_name_resent_fresh():
+    reg, l, r = _pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    eng.begin_prefetch(l, r, "out = use(data)", now=0.0)
+    # the overlapped cell redefines `data`: the prefetched copy is stale
+    l.execute("data = np.ones(10)")
+    eng.invalidate("local", {"data"})
+    res = eng.migrate(l, r, "out = use(data)", now=100.0)
+    assert "data" in res.names and "data" not in res.prefetched
+    assert res.seconds > 0.0                           # charged synchronously
+    r.execute("out = use(data)")
+    assert r.state["out"] == 10.0                      # fresh value, not stale
+
+
+def test_pipelined_runtime_beats_synchronous_on_blocks():
+    def total(pipeline):
+        nb = Notebook("pipe-nb")
+        nb.add_cell("import numpy as np\n"
+                    "state = np.arange(250_000, dtype=np.float64)", cost=3.0)
+        nb.add_cell("a = float(state.sum())", cost=40.0)
+        nb.add_cell("b = a * 2", cost=40.0)
+        rt = HybridRuntime(
+            nb, registry=EnvironmentRegistry.two_env(
+                remote_speedup=10.0, bandwidth=1e6, latency=0.5),
+            policy="block", use_knowledge=False, pipeline=pipeline,
+            reducer=StateReducer("none"))
+        for _ in range(3):
+            for i in range(len(nb.cells)):
+                rt.run_cell(i)
+        rt.close()
+        return rt.clock.now()
+
+    sync, pipe = total(False), total(True)
+    assert pipe < sync          # transfer overlapped execution on the clock
+
+
+# ----------------------------------------------------------------------
+# scheduler
+# ----------------------------------------------------------------------
+
+def test_scheduler_queues_on_saturated_env():
+    reg = _three_env_registry()
+    sched = SessionScheduler(reg)
+    for i in range(3):
+        sched.add_notebook(_heavy_nb(), policy="cost", use_knowledge=False)
+    report = sched.run()
+    assert len(report.sessions) == 3
+    assert all(s.cells_run == 4 for s in report.sessions)
+    # tpu-mesh has capacity 1 and every session wants its heavy cell there:
+    # somebody must have queued
+    assert report.queue_events > 0
+    assert report.total_queue_wait > 0.0
+    assert report.makespan >= max(s.makespan - s.queue_wait
+                                  for s in report.sessions)
+    assert 0.0 < report.env_utilization["tpu-mesh"] <= 1.0
+
+
+def test_scheduler_capacity_two_waits_less_than_one():
+    def wait_with_capacity(cap):
+        reg = EnvironmentRegistry(default_bandwidth=1e9, default_latency=0.1)
+        reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+        reg.register(ExecutionEnvironment("gpu-cloud", speedup=10.0),
+                     capacity=cap)
+        sched = SessionScheduler(reg)
+        for _ in range(4):
+            sched.add_notebook(_heavy_nb(), policy="cost", use_knowledge=False)
+        return sched.run().total_queue_wait
+
+    assert wait_with_capacity(2) < wait_with_capacity(1)
+
+
+# ----------------------------------------------------------------------
+# simulator registry adapter
+# ----------------------------------------------------------------------
+
+def test_simulator_registry_matches_scalars():
+    tr = synthetic_loops_trace()
+    for policy in ("single", "block"):
+        scalar = simulate(tr, policy, migration_time=1.0, remote_speedup=50)
+        reg = EnvironmentRegistry.two_env(
+            remote_speedup=50, bandwidth=float("inf"), latency=1.0)
+        fabric = simulate(tr, policy, registry=reg)
+        assert fabric.total_seconds == pytest.approx(scalar.total_seconds)
+        assert fabric.migrations == scalar.migrations

@@ -53,6 +53,45 @@ def test_delta_return_path_only_new_objects():
     np.testing.assert_allclose(l.state["out"], l.state["data"] * 3.0)
 
 
+def test_invalidated_name_resent_even_when_digest_matches():
+    """A (re)defined name is stale on every peer: the next migration must
+    re-send it even if the new binding hashes identically (regression for
+    invalidate only clearing the executing env's own view)."""
+    l, r = _seeded_envs()
+    eng = MigrationEngine(StateReducer("zlib"))
+    eng.migrate(l, r, "out = scalef(data)")
+    assert "factor" in eng.synced["remote"]
+    # redefine `factor` on local: same content, new binding
+    l.execute("factor = 3.0")
+    eng.invalidate("local", {"factor"})
+    res = eng.migrate(l, r, "out = scalef(data)")
+    assert "factor" in res.names          # re-sent on the next migration
+    assert "data" in eng.synced["remote"]  # unrelated names stay synced
+
+
+def test_noop_migration_free_and_uncounted():
+    """An empty send+dead delta costs 0 seconds (no latency charge) and does
+    not count as a migration at the runtime level."""
+    l, r = _seeded_envs()
+    eng = MigrationEngine(StateReducer("zlib"), latency=2.0, bandwidth=100.0)
+    first = eng.migrate(l, r, "out = scalef(data)")
+    assert not first.noop and first.seconds >= 2.0
+    again = eng.migrate(l, r, "out = scalef(data)")
+    assert again.noop and again.seconds == 0.0 and again.nbytes == 0
+
+    nb, rt = _runtime()
+    rt.run_cell(0)
+    rt.run_cell(1, force_env="remote")      # out + return: 2 real migrations
+    migs = rt.migrations
+    assert migs == 2
+    rt.run_cell(1, force_env="remote")
+    # forward trip is an empty delta (xs unchanged): free and uncounted;
+    # the return trip re-sends the redefined ys, so exactly one is added
+    assert rt.migrations == migs + 1
+    noops = [m for m in rt.engine.log if m.noop]
+    assert noops and all(m.seconds == 0.0 for m in noops)
+
+
 def test_module_alias_reimported():
     l, r = _seeded_envs()
     eng = MigrationEngine(StateReducer("zlib"))

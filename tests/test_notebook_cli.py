@@ -46,3 +46,23 @@ def test_ipynb_roundtrip(tmp_path):
     nb2 = Notebook.from_ipynb(doc)
     assert [c.cell_id for c in nb.cells] == [c.cell_id for c in nb2.cells]
     assert [c.source for c in nb.cells] == [c.source for c in nb2.cells]
+
+
+def test_run_notebook_fleet_over_fabric(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    report, _ = run_notebook(
+        path, sessions=2, policy="cost", use_knowledge=False,
+        extra_envs=["tpu-mesh:40:1"], links=["local:tpu-mesh:1e8:0.5"],
+        fleet=3)
+    assert report["fleet"] == 3
+    assert len(report["per_session"]) == 3
+    assert report["makespan"] > 0
+    assert set(report["env_utilization"]) == {"local", "remote", "tpu-mesh"}
+
+
+def test_run_notebook_pipelined_not_slower(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    sync, _ = run_notebook(path, sessions=3, remote_speedup=10.0)
+    pipe, _ = run_notebook(path, sessions=3, remote_speedup=10.0,
+                           pipeline=True)
+    assert pipe["modeled_seconds"] <= sync["modeled_seconds"]

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp_compat import given, settings, st
 
 from repro.core import ExecutionState, SerializationFailure, StateReducer
 from repro.core.reducer import CODECS
