@@ -1,0 +1,143 @@
+"""State-plane benchmarks: chunk-level CAS delta vs whole-name baseline.
+
+Three workloads, each run twice with the *same* engine/reducer stack and
+only the state-plane granularity flipped:
+
+* **small-mutation** — a large array migrates once, then a 1-element
+  in-place update repeats.  Whole-name delta re-ships the array every time;
+  the chunk manifest ships one chunk.
+* **append-only** — the array grows by one chunk per step.  Whole-name
+  re-ships the whole prefix; chunk delta ships only the new tail.
+* **multi-session shared dataset** — k scheduler sessions each load the
+  same dataset and migrate it to the accelerator env.  With the registry-
+  level shared chunk store the dataset's chunks cross the wire once;
+  without it (and at whole-name granularity) every session pays full price.
+
+Reports bytes-moved and wall-clock per workload and writes
+``BENCH_state_plane.json`` (uploaded as a CI artifact from the smoke run).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import (
+    EnvironmentRegistry, ExecutionEnvironment, MigrationEngine, Notebook,
+    SessionScheduler, StateReducer,
+)
+
+CHUNK = 64 << 10          # 64 KiB chunks keep mutation locality visible
+
+
+def _two_env(bandwidth: float = 1e9) -> EnvironmentRegistry:
+    reg = EnvironmentRegistry(default_bandwidth=bandwidth, default_latency=0.1)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=8.0), capacity=2)
+    return reg
+
+
+def _engine(chunked: bool, reg: EnvironmentRegistry) -> MigrationEngine:
+    # codec "none" isolates the chunking effect from compression luck
+    red = StateReducer("none", chunk_bytes=CHUNK if chunked else 0)
+    return MigrationEngine(red, registry=reg)
+
+
+def _moved(eng: MigrationEngine) -> int:
+    return sum(m.nbytes for m in eng.log)
+
+
+def small_mutation(chunked: bool, smoke: bool) -> tuple[int, float]:
+    n = (1 << 18) if smoke else (1 << 20)          # 1 MiB / 4 MiB array
+    steps = 5
+    reg = _two_env()
+    eng = _engine(chunked, reg)
+    l, r = reg["local"], reg["gpu-cloud"]
+    l.state["big"] = np.arange(n, dtype=np.float32)
+    t0 = time.perf_counter()
+    eng.migrate(l, r, names={"big"})               # initial sync (both pay)
+    base = _moved(eng)
+    for i in range(steps):
+        l.state["big"][i * 7] += 1.0               # 1-element in-place update
+        eng.migrate(l, r, names={"big"})
+    wall = time.perf_counter() - t0
+    np.testing.assert_array_equal(r.state["big"], l.state["big"])
+    return _moved(eng) - base, wall                # steady-state bytes only
+
+
+def append_only(chunked: bool, smoke: bool) -> tuple[int, float]:
+    n0 = (1 << 16) if smoke else (1 << 20)
+    grow = CHUNK // 4                              # one chunk of float32/step
+    steps = 5
+    reg = _two_env()
+    eng = _engine(chunked, reg)
+    l, r = reg["local"], reg["gpu-cloud"]
+    l.state["logbuf"] = np.arange(n0, dtype=np.float32)
+    t0 = time.perf_counter()
+    eng.migrate(l, r, names={"logbuf"})
+    base = _moved(eng)
+    for i in range(steps):
+        tail = np.full(grow, float(i), np.float32)
+        l.state["logbuf"] = np.concatenate([l.state["logbuf"], tail])
+        eng.migrate(l, r, names={"logbuf"})
+    wall = time.perf_counter() - t0
+    np.testing.assert_array_equal(r.state["logbuf"], l.state["logbuf"])
+    return _moved(eng) - base, wall
+
+
+def multi_session(chunked: bool, smoke: bool) -> tuple[int, float]:
+    n = (1 << 14) if smoke else (1 << 18)
+    sessions = 6
+    reg = _two_env()
+    sched = SessionScheduler(reg, share_chunks=chunked)
+    red_kw = dict(chunk_bytes=CHUNK if chunked else 0)
+    runtimes = []
+    t0 = time.perf_counter()
+    for i in range(sessions):
+        nb = Notebook(f"shared-ds-{i}")
+        nb.add_cell("import numpy as np\n"
+                    f"dataset = np.arange({n}, dtype=np.float64)", cost=1.0)
+        nb.add_cell("model = float(((dataset - dataset.mean()) ** 2).sum())",
+                    cost=60.0)
+        nb.add_cell("report = model / len(dataset)", cost=0.1)
+        runtimes.append(sched.add_notebook(
+            nb, policy="cost", use_knowledge=False,
+            reducer=StateReducer("none", **red_kw)))
+    sched.run()
+    wall = time.perf_counter() - t0
+    return sum(_moved(rt.engine) for rt in runtimes), wall
+
+
+WORKLOADS = [("small_mutation", small_mutation),
+             ("append_only", append_only),
+             ("multi_session", multi_session)]
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    report: dict[str, dict] = {}
+    for name, fn in WORKLOADS:
+        base_bytes, base_wall = fn(chunked=False, smoke=smoke)
+        cas_bytes, cas_wall = fn(chunked=True, smoke=smoke)
+        ratio = base_bytes / max(cas_bytes, 1)
+        report[name] = {
+            "baseline_bytes": base_bytes, "chunked_bytes": cas_bytes,
+            "bytes_ratio": ratio,
+            "baseline_wall_seconds": base_wall,
+            "chunked_wall_seconds": cas_wall,
+        }
+        rows.append((f"state_plane/{name}/baseline_bytes", base_bytes,
+                     "whole-name delta"))
+        rows.append((f"state_plane/{name}/chunked_bytes", cas_bytes,
+                     "CAS chunk delta"))
+        rows.append((f"state_plane/{name}/bytes_ratio", ratio,
+                     "acceptance: >=5x on small_mutation + multi_session"))
+    with open("BENCH_state_plane.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val},{note}")

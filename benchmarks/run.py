@@ -20,6 +20,7 @@ MODULES = [
     "fig10_migration_counts",     # Fig 10
     "fig11_knowledge_policy",     # Fig 11
     "bench_fabric",               # N-env fabric / pipeline / scheduler
+    "bench_state_plane",          # CAS chunk delta vs whole-name baseline
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]

@@ -1,12 +1,17 @@
-"""Delta checkpointing = migration to a disk environment (DESIGN.md §1).
+"""Checkpointing *is* migration to a storage environment (DESIGN.md §1).
 
-A checkpoint is the paper's reduced/delta/compressed state transfer with the
-destination being a directory: the first save writes a full base, subsequent
-saves write only leaves whose content digest changed (e.g. params + moments
-change every step, frozen embeddings or data buffers don't).  A JSON manifest
-carries digests + codec; corrupted or torn writes are detected via the
-digests and the atomic tmp->rename protocol.  ``AsyncCheckpointer`` overlaps
-serialization with compute (background thread).
+A checkpoint directory is a ``kind="storage"`` :class:`ExecutionEnvironment`
+backed by an on-disk content-addressed chunk store.  ``save`` flattens the
+trees and migrates them into that env with the same reducer/engine every
+other state transfer uses — per-name delta (unchanged leaves don't
+re-serialize), per-chunk dedup (changed leaves re-ship only changed chunks),
+tombstones for leaves that disappeared.  Each save then writes one
+*self-contained* JSON manifest: every leaf's chunk manifest + digest, so any
+step restores without replaying a delta chain and GC is just "drop old
+manifests, then drop unreferenced chunks".  Manifests are atomic
+tmp->rename; chunk files carry an integrity footer, so corrupted or torn
+writes surface on restore.  ``AsyncCheckpointer`` overlaps serialization
+with compute (background thread).
 """
 from __future__ import annotations
 
@@ -19,7 +24,10 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-from repro.core.reducer import StateReducer
+from repro.core.chunkstore import CHUNK_BYTES
+from repro.core.fabric import ExecutionEnvironment
+from repro.core.migration import MigrationEngine
+from repro.core.reducer import SerializedName, SerializedState, StateReducer
 from repro.core.state import ExecutionState
 
 
@@ -35,6 +43,24 @@ def _unflatten(template, prefix: str, store: dict):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _meta_to_json(blob: SerializedName) -> dict:
+    return {"pickle": blob.pickle_bytes.hex(), "arrays": [
+        {**a, "shape": list(a["shape"]),
+         **({"scales": a["scales"].hex()} if "scales" in a else {})}
+        for a in blob.arrays]}
+
+
+def _meta_from_json(rec: dict) -> SerializedName:
+    arrays = []
+    for a in rec["arrays"]:
+        a = dict(a)
+        a["shape"] = tuple(a["shape"])
+        if "scales" in a:
+            a["scales"] = bytes.fromhex(a["scales"])
+        arrays.append(a)
+    return SerializedName(bytes.fromhex(rec["pickle"]), arrays)
+
+
 @dataclass
 class CheckpointInfo:
     step: int
@@ -46,16 +72,22 @@ class CheckpointInfo:
 
 class Checkpointer:
     def __init__(self, directory: str, codec: str = "zstd", keep: int = 3,
-                 delta: bool = True, rebase_every: int = 5):
+                 delta: bool = True, rebase_every: int = 5,
+                 chunk_bytes: int = CHUNK_BYTES):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
-        self.reducer = StateReducer(codec=codec, reduce_state=False)
+        self.reducer = StateReducer(codec=codec, reduce_state=False,
+                                    chunk_bytes=chunk_bytes)
         self.codec = codec
         self.keep = keep
-        self.delta = delta
-        self.rebase_every = max(rebase_every, 1)  # every k-th save is FULL
+        self.rebase_every = max(rebase_every, 1)
         self._count = 0
-        self._known: dict[str, int] = {}     # leaf digests on disk
+        # the checkpoint target: a storage env over an on-disk CAS — saving
+        # is the same engine call as migrating to any other environment
+        self.storage = ExecutionEnvironment("ckpt-storage", kind="storage",
+                                            storage_dir=directory)
+        self.engine = MigrationEngine(self.reducer, delta=delta)
+        self._blob_meta: dict[str, SerializedName] = {}  # leaf -> manifest
 
     # ------------------------------------------------------------------
     def _manifest_path(self, step: int) -> str:
@@ -67,40 +99,26 @@ class Checkpointer:
         store: dict[str, np.ndarray] = {}
         for k, tree in trees.items():
             store.update(_flatten(tree, k + "/"))
-        state = ExecutionState(dict(store))
+        live = ExecutionEnvironment("ckpt-live", globals_seed=store)
         names = set(store)
 
-        # periodic full saves ("rebase") keep delta chains short and make
-        # garbage collection of old deltas safe
-        full = (self._count % self.rebase_every == 0) or not self.delta
+        res = self.engine.migrate(live, self.storage, names=names)
+        for name in res.deleted:
+            self._blob_meta.pop(name, None)
+        if self.engine.last_ser is not None:
+            self._blob_meta.update(self.engine.last_ser.blobs)
+
+        # every k-th manifest is tagged "full" for operator tooling parity
+        # with the pre-CAS delta chains — but *every* manifest is
+        # self-contained now, so restore never replays a chain
+        full = (self._count % self.rebase_every == 0)
         self._count += 1
-        if full:
-            send, dead = set(names), set()
-            here = self.reducer.digests(state, names)
-        else:
-            send, dead, here = self.reducer.delta_names(state, names, self._known)
-
-        ser = self.reducer.serialize_names(state, send)
-        blob_path = os.path.join(self.dir, f"delta-{step:08d}.bin")
-        tmp = blob_path + ".tmp"
-        offsets = {}
-        with open(tmp, "wb") as f:
-            for name in sorted(ser.blobs):
-                b = ser.blobs[name]
-                rec = {"pickle": b.pickle_bytes.hex(), "arrays": [
-                    {**a, "data": a["data"].hex(),
-                     **({"scales": a["scales"].hex()} if "scales" in a else {})}
-                    for a in b.arrays]}
-                raw = json.dumps(rec).encode()
-                offsets[name] = (f.tell(), len(raw))
-                f.write(raw)
-        os.replace(tmp, blob_path)
-
+        view = self.engine.synced.get(self.storage.name, {})
         manifest = {
             "step": step, "codec": self.codec, "full": full,
-            "digests": {n: here[n] for n in names},
-            "written": sorted(send), "deleted": sorted(dead),
-            "offsets": offsets,
+            "digests": {n: view[n] for n in names},
+            "written": sorted(res.names), "deleted": sorted(res.deleted),
+            "names": {n: _meta_to_json(self._blob_meta[n]) for n in names},
             "keys": sorted(trees),
         }
         mtmp = self._manifest_path(step) + ".tmp"
@@ -108,10 +126,8 @@ class Checkpointer:
             json.dump(manifest, f)
         os.replace(mtmp, self._manifest_path(step))
 
-        self._known.update(here)
         self._gc()
-        nbytes = os.path.getsize(blob_path)
-        return CheckpointInfo(step, nbytes, len(send), len(names),
+        return CheckpointInfo(step, res.nbytes, len(res.names), len(names),
                               time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
@@ -127,19 +143,23 @@ class Checkpointer:
             return json.load(f)
 
     def _gc(self) -> None:
-        # deleting a middle delta would lose leaves that changed only there,
-        # so GC only drops steps strictly older than the newest FULL save
+        """Drop manifests beyond ``keep`` (every one is self-contained),
+        then drop chunks no surviving manifest references."""
         steps = self._steps()
         if len(steps) <= self.keep + 1:
             return
-        fulls = [s for s in steps if self._manifest(s).get("full")]
-        if not fulls:
-            return
-        for s in [x for x in steps if x < fulls[-1]]:
-            for pat in (f"manifest-{s:08d}.json", f"delta-{s:08d}.bin"):
-                p = os.path.join(self.dir, pat)
-                if os.path.exists(p):
-                    os.remove(p)
+        drop, survive = steps[:-(self.keep + 1)], steps[-(self.keep + 1):]
+        referenced: set[int] = set()
+        for s in survive:
+            for rec in self._manifest(s)["names"].values():
+                for a in rec["arrays"]:
+                    referenced.update(a["chunks"])
+        for s in drop:
+            p = self._manifest_path(s)
+            if os.path.exists(p):
+                os.remove(p)
+        for d in self.storage.chunk_store.digests() - referenced:
+            self.storage.chunk_store.remove(d)
 
     # ------------------------------------------------------------------
     def latest_step(self) -> int | None:
@@ -147,48 +167,24 @@ class Checkpointer:
         return steps[-1] if steps else None
 
     def restore(self, templates: dict, step: int | None = None) -> tuple[dict, int]:
-        """Replay base + deltas up to ``step``; verifies digests."""
-        from repro.core.reducer import SerializedName, SerializedState
+        """Rebuild from the step's self-contained manifest + the disk CAS;
+        verifies chunk integrity footers and per-leaf content digests."""
         steps = self._steps()
         if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         target = step if step is not None else steps[-1]
-        upto = [x for x in steps if x <= target]
-        # replay from the newest FULL checkpoint at or before the target
-        fulls = [x for x in upto
-                 if json.load(open(self._manifest_path(x))).get("full")]
-        if fulls:
-            upto = [x for x in upto if x >= fulls[-1]]
-        store: dict[str, np.ndarray] = {}
-        final_manifest = None
-        for s in upto:
-            with open(self._manifest_path(s)) as f:
-                manifest = json.load(f)
-            final_manifest = manifest
-            blob_path = os.path.join(self.dir, f"delta-{s:08d}.bin")
-            with open(blob_path, "rb") as f:
-                raw_all = f.read()
-            blobs = {}
-            for name in manifest["written"]:
-                off, ln = manifest["offsets"][name]
-                rec = json.loads(raw_all[off:off + ln])
-                arrays = []
-                for a in rec["arrays"]:
-                    a = dict(a)
-                    a["data"] = bytes.fromhex(a["data"])
-                    if "scales" in a:
-                        a["scales"] = bytes.fromhex(a["scales"])
-                    a["shape"] = tuple(a["shape"])
-                    arrays.append(a)
-                blobs[name] = SerializedName(bytes.fromhex(rec["pickle"]), arrays)
-            ser = SerializedState(codec=manifest["codec"], blobs=blobs)
-            store.update(self.reducer.deserialize(ser))
-            for name in manifest["deleted"]:
-                store.pop(name, None)
+        candidates = [x for x in steps if x <= target]
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint at or before {target}")
+        manifest = self._manifest(candidates[-1])
 
-        # integrity check against final manifest digests
-        st = ExecutionState(dict(store))
-        for name, want in final_manifest["digests"].items():
+        blobs = {n: _meta_from_json(rec)
+                 for n, rec in manifest["names"].items()}
+        ser = SerializedState(codec=manifest["codec"], blobs=blobs)
+        store = self.reducer.deserialize(
+            ser, chunk_store=self.storage.chunk_store)
+
+        for name, want in manifest["digests"].items():
             if name not in store:
                 raise IOError(f"checkpoint missing leaf {name}")
             got = self.reducer.digest(store[name])
@@ -196,7 +192,7 @@ class Checkpointer:
                 raise IOError(f"checkpoint digest mismatch for {name}")
 
         out = {k: _unflatten(t, k + "/", store) for k, t in templates.items()}
-        return out, final_manifest["step"]
+        return out, manifest["step"]
 
 
 class AsyncCheckpointer:

@@ -5,6 +5,10 @@ from repro.core.analyzer import (
     MigrationAnalyzer, PerfModel, PlacementPolicy, SingleCellPolicy,
     fit_linear, intersection, substitute_kwarg,
 )
+from repro.core.chunkstore import (
+    CHUNK_BYTES, DiskChunkStore, MemoryChunkStore, array_chunk_digests,
+    digest_bytes, split_chunks,
+)
 from repro.core.context import ContextDetector, get_sequences, sequence_stats
 from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment, Link
 from repro.core.kb import KnowledgeBase, ParamEstimate, ProvRecord
@@ -28,7 +32,9 @@ from repro.core.state import ExecutionState
 __all__ = [
     "BlockPolicy", "CostMatrixPolicy", "Decision", "KnowledgePolicy",
     "MigrationAnalyzer", "PerfModel", "PlacementPolicy", "SingleCellPolicy",
-    "fit_linear", "intersection", "substitute_kwarg", "ContextDetector",
+    "fit_linear", "intersection", "substitute_kwarg", "CHUNK_BYTES",
+    "DiskChunkStore", "MemoryChunkStore", "array_chunk_digests",
+    "digest_bytes", "split_chunks", "ContextDetector",
     "get_sequences", "sequence_stats", "EnvironmentRegistry",
     "ExecutionEnvironment", "Link", "KnowledgeBase", "ParamEstimate",
     "ProvRecord", "HybridRuntime", "MigrationEngine", "MigrationResult",

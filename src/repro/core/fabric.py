@@ -19,21 +19,33 @@ import time
 from dataclasses import dataclass
 from typing import Iterator
 
+from repro.core.chunkstore import DiskChunkStore, MemoryChunkStore
 from repro.core.state import ExecutionState
 
 
 class ExecutionEnvironment:
     """A place code can run with its own namespace (§II): the user's machine,
     a cloud node, a JAX mesh (``DistContext``) — or a non-compute target such
-    as disk, which the engine migrates to for checkpointing."""
+    as disk, which the engine migrates to for checkpointing.
+
+    Every environment fronts a content-addressed chunk store — the state
+    plane's substrate: migration ships only chunks the target store lacks.
+    ``kind="storage"`` environments back theirs with an on-disk CAS
+    directory (``storage_dir``), which is how checkpointing *is* migration."""
 
     def __init__(self, name: str, *, speedup: float = 1.0,
                  mesh_ctx=None, globals_seed: dict | None = None,
-                 kind: str = "compute"):
+                 kind: str = "compute", chunk_store=None,
+                 storage_dir: str | None = None):
         self.name = name
         self.speedup = float(speedup)
         self.mesh_ctx = mesh_ctx
         self.kind = kind                 # compute | storage
+        self.storage_dir = storage_dir
+        if chunk_store is None:
+            chunk_store = (DiskChunkStore(storage_dir) if storage_dir
+                           else MemoryChunkStore())
+        self.chunk_store = chunk_store
         self.state = ExecutionState(dict(globals_seed or {}))
 
     def execute(self, source: str, cost: float | None = None) -> float:
@@ -147,19 +159,28 @@ class EnvironmentRegistry:
         ns = self.names()
         return [(a, b) for a in ns for b in ns if a != b]
 
-    def clone_topology(self) -> "EnvironmentRegistry":
+    def clone_topology(self, *,
+                       share_chunk_stores: bool = True) -> "EnvironmentRegistry":
         """Same env names/speedups/links/capacities with *fresh namespaces*.
 
         The session scheduler gives each session a private clone (its own
         kernel namespaces) while a shared CapacityArbiter models the actual
-        hardware the clones stand for."""
+        hardware the clones stand for.  By default the clones also share the
+        original envs' chunk stores — content-addressed chunks are immutable,
+        so N sessions loading the same dataset transfer its chunks once;
+        pass ``share_chunk_stores=False`` to isolate the in-memory stores.
+        Storage-backed envs keep pointing at their on-disk directory either
+        way: the disk *is* the physical medium the clones stand for."""
         reg = EnvironmentRegistry(
             default_bandwidth=self.default_link.bandwidth,
             default_latency=self.default_link.latency)
         for name, env in self._envs.items():
             reg.register(
-                ExecutionEnvironment(name, speedup=env.speedup,
-                                     mesh_ctx=env.mesh_ctx, kind=env.kind),
+                ExecutionEnvironment(
+                    name, speedup=env.speedup, mesh_ctx=env.mesh_ctx,
+                    kind=env.kind, storage_dir=env.storage_dir,
+                    chunk_store=env.chunk_store if share_chunk_stores
+                    else None),
                 home=(name == self.home), capacity=self._capacity[name],
                 placeable=self._placeable[name])
         reg._links = dict(self._links)

@@ -58,6 +58,7 @@ class _PendingPrefetch:
     started_at: float
     ready_at: float
     nbytes: int
+    held: frozenset = frozenset()   # chunks dst already had at begin time
 
 
 class MigrationEngine:
@@ -86,6 +87,10 @@ class MigrationEngine:
         # receiver's content view: env name -> {state name -> digest}
         self.synced: dict[str, dict[str, int]] = {}
         self.log: list[MigrationResult] = []
+        # chunk manifests of the most recent migrate() — consumed by the
+        # Checkpointer; deliberately NOT kept per-log-entry, which would pin
+        # every byte ever migrated in memory for the session's lifetime
+        self.last_ser: SerializedState | None = None
 
     # -- cost model ------------------------------------------------------
     def _link_seconds(self, nbytes: int, src: str | None, dst: str | None) -> float:
@@ -139,8 +144,22 @@ class MigrationEngine:
 
         ser = self.reducer.serialize_names(
             src.state, send, on_error="raise" if strict else "skip")
-        objs = self.reducer.deserialize(ser, target_ns=dst.state.ns)
-        dst.state.update(objs)
+        # chunk-manifest exchange: the receiver advertises the chunk digests
+        # its store already holds; only missing chunks cross the wire, so a
+        # small in-place update to a large array moves one chunk, not the
+        # array, and a dataset shared across sessions moves once.
+        dst_store = dst.chunk_store
+        held = {d for d in ser.chunks if dst_store.has(d)}
+        wire_bytes = ser.wire_nbytes(held)
+        dst_store.put_many(ser.missing_chunks(held))
+        src.chunk_store.put_many(ser.chunks)   # sender holds its own content
+        if dst.kind != "storage":
+            # storage envs are manifest+CAS only: restore reads the store,
+            # so materializing leaves into the namespace would just pin a
+            # second in-RAM copy of every checkpoint
+            objs = self.reducer.deserialize(ser, target_ns=dst.state.ns,
+                                            chunk_store=dst_store)
+            dst.state.update(objs)
         dst.state.drop(dead)
 
         known.update(ser.digests)
@@ -155,10 +174,11 @@ class MigrationEngine:
         # an empty delta is a no-op: nothing crosses the wire, nothing charged
         noop = not send and not dead
         seconds = 0.0 if noop else self.transfer_seconds(
-            ser.nbytes, src.name, dst.name)
+            wire_bytes, src.name, dst.name)
         res = MigrationResult(src.name, dst.name, tuple(sorted(send)),
-                              tuple(sorted(dead)), ser.nbytes, seconds,
-                              noop=noop)
+                              tuple(sorted(dead)), 0 if noop else wire_bytes,
+                              seconds, noop=noop)
+        self.last_ser = ser
         self.log.append(res)
         return res
 
@@ -196,10 +216,13 @@ class PipelinedMigrationEngine(MigrationEngine):
       only charges whatever transfer time execution did not already cover.
     """
 
-    def __init__(self, reducer: StateReducer, *, chunk_bytes: int = 1 << 20,
-                 **kw):
+    def __init__(self, reducer: StateReducer, *,
+                 chunk_bytes: int | None = None, **kw):
         super().__init__(reducer, **kw)
-        self.chunk_bytes = int(chunk_bytes)
+        # stage-overlap granularity defaults to the reducer's CAS chunk size
+        # so the pipeline and the store chunk the same way
+        self.chunk_bytes = int(chunk_bytes if chunk_bytes is not None
+                               else max(reducer.chunk_bytes, 1))
         self._pending: dict[str, _PendingPrefetch] = {}
         self.prefetch_hits = 0
 
@@ -246,10 +269,13 @@ class PipelinedMigrationEngine(MigrationEngine):
         ser = self.reducer.serialize_names(src.state, names, on_error="skip")
         if not ser.blobs:
             return None
+        # only chunks the receiver's store lacks actually stream
+        held = frozenset(d for d in ser.chunks if dst.chunk_store.has(d))
+        nbytes = ser.wire_nbytes(set(held))
         pending = _PendingPrefetch(
             src.name, dst.name, ser, started_at=now,
-            ready_at=now + self.transfer_seconds(ser.nbytes, src.name, dst.name),
-            nbytes=ser.nbytes)
+            ready_at=now + self.transfer_seconds(nbytes, src.name, dst.name),
+            nbytes=nbytes, held=held)
         self._pending[dst.name] = pending
         return pending
 
@@ -260,15 +286,30 @@ class PipelinedMigrationEngine(MigrationEngine):
         p = self._pending.get(dst.name)
         valid: dict[str, int] = {}
         if p is not None and p.src == src.name:
-            # a name is applied iff the source still holds the snapshotted
-            # content (else it must travel fresh) AND the receiver doesn't
-            # already have it (else the claim would turn a free no-op delta
-            # into a charged wait)
+            # a name is applied wholesale iff the source still holds the
+            # snapshotted content (else it must travel fresh) AND the
+            # receiver doesn't already have it (else the claim would turn a
+            # free no-op delta into a charged wait)
             known = self.synced.setdefault(dst.name, {})
             valid = {n: d for n, d in p.ser.digests.items()
                      if n in p.ser.blobs and n in src.state.ns
                      and known.get(n) != d
                      and self.reducer.digest(src.state.ns[n]) == d}
+            # the claim then validates per-chunk: content-addressed chunks
+            # are immutable, so prefetched chunks are banked into the
+            # receiver's store — but only those the transfer has physically
+            # delivered.  Once the background transfer completed, everything
+            # banks (a name redefined mid-flight re-serializes fresh, yet
+            # its unchanged chunks no longer re-cross the wire); before
+            # that, only the valid names' chunks bank, because exactly those
+            # are paid for via the residual wait below.
+            if now is not None and now >= p.ready_at:
+                dst.chunk_store.put_many(p.ser.chunks)
+            elif valid:
+                dst.chunk_store.put_many(
+                    {d: p.ser.chunks[d] for n in valid
+                     for d in p.ser.blobs[n].chunk_digests()
+                     if d in p.ser.chunks})
         if not valid:
             if p is not None and p.src == src.name:
                 del self._pending[dst.name]      # consumed, nothing useful
@@ -292,19 +333,25 @@ class PipelinedMigrationEngine(MigrationEngine):
         sub = SerializedState(
             codec=p.ser.codec, blobs={n: p.ser.blobs[n] for n in valid},
             digests=dict(valid))
-        objs = self.reducer.deserialize(sub, target_ns=dst.state.ns)
+        sub.chunks = {d: p.ser.chunks[d]
+                      for b in sub.blobs.values() for d in b.chunk_digests()
+                      if d in p.ser.chunks}
+        objs = self.reducer.deserialize(sub, target_ns=dst.state.ns,
+                                        chunk_store=dst.chunk_store)
         dst.state.update(objs)
         # residual wait models the applied subset streaming since started_at
-        # (not the full speculative snapshot, which may be mostly synced)
+        # (not the full speculative snapshot, which may be mostly synced);
+        # chunks the receiver already held at begin time never streamed
+        sub_wire = sub.wire_nbytes(set(p.held))
         wait = 0.0
         if now is not None:
             ready = p.started_at + self.transfer_seconds(
-                sub.nbytes, src.name, dst.name)
+                sub_wire, src.name, dst.name)
             wait = max(0.0, ready - now)
         self.prefetch_hits += 1
         res.names = tuple(sorted(set(res.names) | set(valid)))
         res.prefetched = tuple(sorted(valid))
-        res.nbytes += sub.nbytes
+        res.nbytes += sub_wire
         res.seconds += wait
         res.noop = False
         return res
@@ -466,7 +513,8 @@ class HybridRuntime:
         # shared-capacity gate: queue when the target env is saturated
         if self.arbiter is not None:
             now = self.clock.now()
-            slot_start = self.arbiter.acquire(self.current_env, now)
+            est = (cell.cost / env.speedup) if cell.cost is not None else 0.0
+            slot_start = self.arbiter.acquire(self.current_env, now, est)
             wait = slot_start - now
             if wait > 0:
                 self.clock.advance(wait)

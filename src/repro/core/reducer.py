@@ -1,18 +1,27 @@
-"""Notebook state reducer (paper §II-D): reduced capture, serialization,
-content hashing, delta migration, compression codecs.
+"""Notebook state reducer (paper §II-D): reduced capture, chunked
+serialization onto a content-addressed store, content hashing, delta
+migration, compression codecs.
 
-Pipeline (faithful to the paper, TPU-adapted per DESIGN.md §4):
+Pipeline (faithful to the paper, TPU-adapted per DESIGN.md §4, then
+generalized from name to chunk granularity):
 
 1. ``reduce``: AST Load-closure over the live namespace -> needed names only.
-2. ``serialize``: arrays leave the pickle stream and are stored as raw
-   buffers (optionally block-quantized to int8 on device); everything else
-   pickles.  Serialization failure => the caller executes locally (§II-D).
+2. ``serialize``: arrays leave the pickle stream and their raw buffers are
+   split into fixed-size chunks, each compressed and content-addressed by a
+   64-bit digest (optionally block-quantized to int8 on device first);
+   everything else pickles.  Identical chunks dedup within one capture.
+   Serialization failure => the caller executes locally (§II-D).
 3. ``digests``: content hash per name — jax arrays hash *on device* with the
-   Pallas ``hash_delta`` kernel (digests, not tensors, cross to host);
-   host objects hash with blake2b over their serialized bytes.
-4. ``delta``: only new/changed names move (both directions); deletions are
-   propagated as tombstones.
-5. codecs: none | zlib (paper's choice) | zstd | quant8+zstd (lossy, opt-in).
+   Pallas ``hash_delta`` kernel (per-block digest lanes, not tensors, cross
+   to host; folded to one 64-bit digest per leaf); host objects hash with
+   blake2b over their serialized bytes.  Array chunk digests reuse the same
+   per-block vector.
+4. ``delta``: per-name digests pick which names move; per-chunk manifests
+   then ship only the chunks the receiver's store does not already hold, so
+   a 1-element update to a 1 GB array moves one chunk, not the array.
+   Deletions are propagated as tombstones.
+5. codecs: none | zlib (paper's choice) | zstd | quant8+zstd (lossy,
+   opt-in), applied chunk-by-chunk and recorded per chunk.
 """
 from __future__ import annotations
 
@@ -37,9 +46,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.astdeps import cell_dependencies
+from repro.core.chunkstore import (
+    CHUNK_BYTES, array_chunk_digests, decode_chunk, encode_chunk,
+    split_chunks,
+)
 from repro.core.state import ExecutionState
 
 CODECS = ("none", "zlib", "zstd", "quant8+zstd")
+
+DIGEST_BYTES = 8     # manifest cost of advertising one chunk digest
 
 
 class SerializationFailure(Exception):
@@ -47,7 +62,7 @@ class SerializationFailure(Exception):
 
 
 # ----------------------------------------------------------------------
-# codec helpers
+# codec helpers (scales + pickle streams; chunks carry their own codec tag)
 # ----------------------------------------------------------------------
 
 def _compress(data: bytes, codec: str) -> bytes:
@@ -139,38 +154,62 @@ class _Unpickler(pickle.Unpickler):
         return self._store[idx]
 
 
-_QUANT_OK = (np.float32, np.float64, np.dtype("bfloat16").type
-             if hasattr(np.dtype("bfloat16"), "type") else np.float32)
-
-
-def _encode_array(a: np.ndarray, codec: str, interpret_kernels: bool) -> dict:
+def _encode_array(a: np.ndarray, codec: str, interpret_kernels: bool,
+                  chunk_bytes: int, chunks_out: dict[int, bytes],
+                  added: list[int]) -> dict:
+    """Array -> chunk-manifest meta; raw payload chunks land in ``chunks_out``
+    keyed by content digest (identical chunks dedup automatically — across
+    names too, so an aliased array is never recompressed).  Digests newly
+    inserted here are recorded in ``added`` so a failing name can roll its
+    chunks back out."""
     meta = {"shape": a.shape, "dtype": str(a.dtype)}
+    impl = "pallas" if interpret_kernels else "xla"
     if codec == "quant8+zstd" and a.dtype in (np.dtype("float32"),
                                               np.dtype("float64"),
                                               jnp.bfloat16.dtype):
         from repro.kernels.quant_blockwise.ops import quantize
-        impl = "pallas" if interpret_kernels else "xla"
         q, s = quantize(jnp.asarray(a), interpret=interpret_kernels, impl=impl)
-        meta.update(quant=True,
-                    data=_compress(np.asarray(q).tobytes(), codec),
+        q = np.asarray(q)
+        payload = q.tobytes()
+        meta.update(quant=True, block=int(q.shape[1]),
                     scales=_compress(np.asarray(s).tobytes(), codec))
-        return meta
-    raw = np.ascontiguousarray(a).tobytes()
-    meta.update(quant=False, data=_compress(raw, codec))
+    else:
+        payload = np.ascontiguousarray(a).tobytes()
+        meta.update(quant=False)
+    digests = array_chunk_digests(payload, chunk_bytes,
+                                  interpret=interpret_kernels, impl=impl)
+    clens = []
+    for d, chunk in zip(digests, split_chunks(payload, chunk_bytes)):
+        if d not in chunks_out:
+            chunks_out[d] = encode_chunk(chunk, codec)
+            added.append(d)
+        # the 1-byte codec tag is store framing, not wire payload
+        clens.append(len(chunks_out[d]) - 1)
+    meta.update(chunks=digests, clens=clens)
     return meta
 
 
-def _decode_array(meta: dict, codec: str) -> np.ndarray:
+def _decode_array(meta: dict, codec: str, chunks: dict[int, bytes],
+                  store=None) -> np.ndarray:
     shape = tuple(meta["shape"])
     dtype = np.dtype(meta["dtype"]) if meta["dtype"] != "bfloat16" else jnp.bfloat16.dtype
+
+    def fetch(d: int) -> bytes:
+        if d in chunks:
+            return decode_chunk(chunks[d])
+        if store is not None and store.has(d):
+            return decode_chunk(store.get(d))
+        raise KeyError(f"missing chunk {d:016x}")
+
+    raw = b"".join(fetch(d) for d in meta["chunks"])
     if meta["quant"]:
         from repro.kernels.quant_blockwise.ops import dequantize
-        q = np.frombuffer(_decompress(meta["data"], codec), np.int8).reshape(-1, 1024)
+        block = int(meta["block"])   # quant block size travels in the meta
+        q = np.frombuffer(raw, np.int8).reshape(-1, block)
         s = np.frombuffer(_decompress(meta["scales"], codec), np.float32)
         x = dequantize(jnp.asarray(q), jnp.asarray(s), shape,
                        jnp.dtype(dtype), impl="xla")
         return np.asarray(x)
-    raw = _decompress(meta["data"], codec)
     return np.frombuffer(raw, dtype).reshape(shape).copy()
 
 
@@ -185,16 +224,22 @@ class SerializedName:
 
     @property
     def nbytes(self) -> int:
+        """Standalone transfer cost of this name (chunks shared with other
+        names in the same capture are counted here per reference)."""
         n = len(self.pickle_bytes)
         for a in self.arrays:
-            n += len(a["data"]) + len(a.get("scales", b""))
+            n += sum(a["clens"]) + len(a.get("scales", b""))
         return n
+
+    def chunk_digests(self) -> list[int]:
+        return [d for a in self.arrays for d in a["chunks"]]
 
 
 @dataclass
 class SerializedState:
     codec: str
     blobs: dict[str, SerializedName]
+    chunks: dict[int, bytes] = field(default_factory=dict)  # digest -> encoded
     deleted: tuple[str, ...] = ()
     modules: tuple[str, ...] = ()
     digests: dict[str, int] = field(default_factory=dict)
@@ -202,7 +247,40 @@ class SerializedState:
 
     @property
     def nbytes(self) -> int:
+        """Full transfer cost: pickle streams + scales + every unique chunk
+        (what crosses the wire to a receiver holding nothing)."""
+        n = sum(len(b.pickle_bytes)
+                + sum(len(a.get("scales", b"")) for a in b.arrays)
+                for b in self.blobs.values())
+        return n + sum(len(c) - 1 for c in self.chunks.values())
+
+    @property
+    def ref_nbytes(self) -> int:
+        """Whole-name accounting (the pre-CAS protocol): every chunk counted
+        once per reference, no cross-name dedup — the paper's Table-II
+        measurement of a plain serialized transfer."""
         return sum(b.nbytes for b in self.blobs.values())
+
+    def wire_nbytes(self, held: set[int]) -> int:
+        """Transfer cost against a receiver advertising ``held`` chunk
+        digests: full streams for pickles/scales, encoded bytes for missing
+        chunks, and DIGEST_BYTES per referenced chunk (the manifest)."""
+        n = sum(len(b.pickle_bytes)
+                + sum(len(a.get("scales", b"")) for a in b.arrays)
+                for b in self.blobs.values())
+        refs = 0
+        counted: set[int] = set()
+        for b in self.blobs.values():
+            for d in b.chunk_digests():
+                refs += 1
+                if d in held or d in counted or d not in self.chunks:
+                    continue
+                counted.add(d)
+                n += len(self.chunks[d]) - 1
+        return n + refs * DIGEST_BYTES
+
+    def missing_chunks(self, held: set[int]) -> dict[int, bytes]:
+        return {d: c for d, c in self.chunks.items() if d not in held}
 
 
 # ----------------------------------------------------------------------
@@ -211,11 +289,15 @@ class SerializedState:
 
 class StateReducer:
     def __init__(self, codec: str = "zlib", reduce_state: bool = True,
-                 interpret_kernels: bool = False):
+                 interpret_kernels: bool = False,
+                 chunk_bytes: int = CHUNK_BYTES):
         assert codec in CODECS, codec
         self.codec = codec
         self.reduce_state = reduce_state
         self.interpret_kernels = interpret_kernels
+        # chunk_bytes <= 0 => one chunk per payload (whole-name granularity,
+        # the pre-CAS baseline; benchmarks compare against it)
+        self.chunk_bytes = int(chunk_bytes)
 
     # -- step 1: which names does this cell need? ----------------------
     def reduce(self, state: ExecutionState, cell_source: str):
@@ -234,34 +316,47 @@ class StateReducer:
         travel (used on return migrations — the object stays remote)."""
         codec = codec or self.codec
         blobs: dict[str, SerializedName] = {}
+        chunks: dict[int, bytes] = {}
         skipped: list[str] = []
         for name in sorted(names):
             obj = state.ns[name]
+            # chunks newly inserted by this name; an earlier name's chunks
+            # were inserted under *its* entry, so rolling these back on a
+            # skip can never orphan a previous blob's references
+            added: list[int] = []
             try:
                 store: list = []
                 buf = io.BytesIO()
                 _Pickler(buf, store).dump(obj)
-                arrays = [_encode_array(a, codec, self.interpret_kernels)
+                arrays = [_encode_array(a, codec, self.interpret_kernels,
+                                        self.chunk_bytes, chunks, added)
                           for a in store]
                 blobs[name] = SerializedName(
-                    pickle_bytes=_compress(buf.getvalue(), codec), arrays=arrays)
+                    pickle_bytes=_compress(buf.getvalue(), codec),
+                    arrays=arrays)
             except Exception as e:  # noqa: BLE001 — paper: fall back to local
+                for d in added:
+                    chunks.pop(d, None)
                 if on_error == "skip":
                     skipped.append(name)
                     continue
                 raise SerializationFailure(f"{name}: {e}") from e
-        ser = SerializedState(codec=codec, blobs=blobs)
+        ser = SerializedState(codec=codec, blobs=blobs, chunks=chunks)
         ser.digests = {n: self.digest(state.ns[n]) for n in blobs}
         ser.skipped = tuple(skipped)
         return ser
 
     def deserialize(self, ser: SerializedState,
-                    target_ns: dict | None = None) -> dict[str, Any]:
+                    target_ns: dict | None = None,
+                    chunk_store=None) -> dict[str, Any]:
+        """Rebuild objects; chunks resolve from ``ser.chunks`` first, then
+        from ``chunk_store`` (the receiver's CAS)."""
         token = _TARGET_NS.set(target_ns)
         try:
             out: dict[str, Any] = {}
             for name, blob in ser.blobs.items():
-                store = [_decode_array(m, ser.codec) for m in blob.arrays]
+                store = [_decode_array(m, ser.codec, ser.chunks, chunk_store)
+                         for m in blob.arrays]
                 buf = io.BytesIO(_decompress(blob.pickle_bytes, ser.codec))
                 out[name] = _Unpickler(buf, store).load()
             return out
@@ -269,19 +364,32 @@ class StateReducer:
             _TARGET_NS.reset(token)
 
     # -- step 3: content digests ---------------------------------------
-    def digest(self, obj) -> int:
+    def _array_digest(self, a) -> int:
+        """Per-leaf device digest; wide host dtypes are re-lane'd first.
+
+        With x64 disabled, ``jnp.asarray`` silently narrows int64/float64 —
+        a change confined to the high 32 bits (or low float64 mantissa
+        bits) would hash identically and the delta would drop a real
+        update.  Viewing the host buffer as uint32 lanes keeps every bit."""
         from repro.kernels.hash_delta.ops import tensor_digest
         impl = "pallas" if self.interpret_kernels else "xla"
+        if isinstance(a, np.ndarray) and (a.dtype.itemsize > 4
+                                          or a.dtype.kind == "c"):
+            try:
+                a = np.ascontiguousarray(a).reshape(-1).view(np.uint32)
+            except (TypeError, ValueError):
+                pass                     # exotic dtype: hash as-is
+        return tensor_digest(jnp.asarray(a),
+                             interpret=self.interpret_kernels, impl=impl)
+
+    def digest(self, obj) -> int:
         if _is_array(obj):
-            return int(tensor_digest(jnp.asarray(obj),
-                                     interpret=self.interpret_kernels, impl=impl))
+            return self._array_digest(obj)
         leaves, treedef = jax.tree_util.tree_flatten(obj)
         if leaves and all(_is_array(l) for l in leaves):
             h = hashlib.blake2b(str(treedef).encode(), digest_size=8)
             for l in leaves:
-                d = int(tensor_digest(jnp.asarray(l),
-                                      interpret=self.interpret_kernels, impl=impl))
-                h.update(d.to_bytes(8, "little"))
+                h.update(self._array_digest(l).to_bytes(8, "little"))
             return int.from_bytes(h.digest(), "little")
         try:
             store: list = []

@@ -40,7 +40,14 @@ class CapacityArbiter:
         self.queue_events: list[tuple[str, float, float]] = []  # env, asked, got
         self.horizon = 0.0
 
-    def acquire(self, env: str, now: float) -> float:
+    def acquire(self, env: str, now: float, duration: float = 0.0) -> float:
+        """Earliest start ≥ ``now`` with a free slot for all of ``duration``.
+
+        Checking only the start instant would let a session slip in ahead of
+        a later-starting recorded interval and overlap it (per-session sim
+        clocks are not globally ordered); probing every interval start
+        inside the candidate window keeps utilization ≤ 1 whenever declared
+        cell costs match actual durations."""
         cap = self._cap.get(env, 1)
         intervals = self._busy.setdefault(env, [])
 
@@ -48,8 +55,18 @@ class CapacityArbiter:
             return [e for s, e in intervals if s <= t < e]
 
         t = now
-        while len(ends := running_at(t)) >= cap:
-            t = min(ends)            # earliest slot to free while saturated
+        while True:
+            probes = [t] + sorted(s for s, _ in intervals
+                                  if t < s < t + duration)
+            blocked = None
+            for q in probes:
+                ends = running_at(q)
+                if len(ends) >= cap:
+                    blocked = ends
+                    break
+            if blocked is None:
+                break
+            t = min(blocked)         # earliest slot to free while saturated
         if t > now:
             self.queue_events.append((env, now, t))
         return t
@@ -99,10 +116,18 @@ class ScheduleReport:
 
 
 class SessionScheduler:
-    """Multiplex N sessions over shared environments with per-env capacity."""
+    """Multiplex N sessions over shared environments with per-env capacity.
 
-    def __init__(self, registry: EnvironmentRegistry):
+    Sessions also share the fabric's *state plane*: every per-session env
+    clone fronts the registry-level chunk store of the physical env it
+    stands for, so when N sessions load the same dataset its chunks cross
+    the wire once and every later session ships only a manifest
+    (``share_chunks=False`` isolates the stores instead)."""
+
+    def __init__(self, registry: EnvironmentRegistry, *,
+                 share_chunks: bool = True):
         self.registry = registry
+        self.share_chunks = share_chunks
         self.arbiter = CapacityArbiter(registry)
         self._sessions: list[_Session] = []
 
@@ -116,8 +141,9 @@ class SessionScheduler:
     def add_notebook(self, notebook: Notebook, plan=None,
                      **runtime_kw) -> HybridRuntime:
         """Spawn a session on a private clone of the shared fabric topology."""
-        rt = HybridRuntime(notebook, registry=self.registry.clone_topology(),
-                           **runtime_kw)
+        reg = self.registry.clone_topology(
+            share_chunk_stores=self.share_chunks)
+        rt = HybridRuntime(notebook, registry=reg, **runtime_kw)
         if plan is None:
             plan = list(range(len(notebook.cells)))
         return self.add_session(rt, plan)

@@ -2,9 +2,11 @@
 
 The paper detects changed objects by hashing the serialized state on the
 host.  TPU adaptation (DESIGN.md §4): hash pytree leaves *on device* (one
-weighted-sum hash per 1024-element block) so delta detection never pulls
-full tensors to the host — only (nb,) digests move.  Position-sensitive via
-a per-lane weight vector; digests are mixed on the host into one leaf hash.
+weighted-sum hash per 1024-element block per lane) so delta detection never
+pulls full tensors to the host — only (nb, 2) digests move.  Two independent
+weight lanes give each block a 64-bit identity: the chunk store consumes the
+per-block vector directly, and ``tensor_digest`` folds it into one leaf hash
+on the host.  Position-sensitive via the per-lane weight vectors.
 """
 from __future__ import annotations
 
@@ -17,22 +19,24 @@ PRIME = np.uint32(2654435761)
 
 
 def _hash_kernel(x_ref, w_ref, h_ref):
-    x = x_ref[...]
-    w = w_ref[...]
-    prod = (x * w).astype(jnp.uint32)
-    h = jnp.sum(prod, dtype=jnp.uint32)
-    h_ref[0, 0] = (h ^ (h >> np.uint32(15))) * PRIME
+    x = x_ref[...]                               # (1, blk)
+    w = w_ref[...]                               # (lanes, blk)
+    prod = (x * w).astype(jnp.uint32)            # broadcast over lanes
+    h = jnp.sum(prod, axis=1, dtype=jnp.uint32)  # (lanes,)
+    h_ref[0, :] = (h ^ (h >> np.uint32(15))) * PRIME
 
 
 def block_hash_kernel(x2d_u32, weights, *, interpret: bool = False):
+    """x2d (nb, blk) uint32; weights (lanes, blk) uint32 -> (nb, lanes)."""
     nb, blk = x2d_u32.shape
+    lanes = weights.shape[0]
     h = pl.pallas_call(
         _hash_kernel,
         grid=(nb,),
         in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
-                  pl.BlockSpec((1, blk), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.uint32),
+                  pl.BlockSpec((lanes, blk), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, lanes), jnp.uint32),
         interpret=interpret,
-    )(x2d_u32, weights[None, :])
-    return h[:, 0]
+    )(x2d_u32, weights)
+    return h

@@ -1,4 +1,13 @@
-"""Jitted wrapper: hash any tensor into one uint64-ish digest (on device)."""
+"""Jitted wrappers: on-device content digests for the state plane.
+
+``block_digests`` exposes the per-1024-element block digest vector that the
+content-addressed chunk store consumes (each block carries two independent
+uint32 lanes = one 64-bit identity).  ``tensor_digest`` folds that vector
+into a single **64-bit** leaf digest: both lanes are reduced on device and
+combined on the host as ``(hi << 32) | lo`` — Pallas/XLA arithmetic stays
+uint32 throughout, so no x64 mode is required, yet the digest space is a
+true 2^64 (the pre-CAS version returned a single uint32).
+"""
 from __future__ import annotations
 
 import functools
@@ -8,15 +17,19 @@ import jax.numpy as jnp
 import numpy as np
 
 BLOCK = 1024
+LANES = 2
+
+# host constants (no tracer leak): one odd weight vector per lane.  Lane 0
+# keeps the historical 0xD1657 stream; lane 1 is an independent stream.
+_W = np.stack([
+    np.random.default_rng(0xD1657).integers(1, 2**32, size=BLOCK,
+                                            dtype=np.uint32) | 1,
+    np.random.default_rng(0xD1658).integers(1, 2**32, size=BLOCK,
+                                            dtype=np.uint32) | 1,
+])
 
 
-_W = np.random.default_rng(0xD1657).integers(
-    1, 2**32, size=BLOCK, dtype=np.uint32) | 1  # host constant (no tracer leak)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
-def tensor_digest(x, *, interpret: bool = False, impl: str = "pallas"):
-    """Any tensor -> scalar uint32 digest (content hash for delta migration)."""
+def _as_u32_blocks(x):
     if jnp.issubdtype(x.dtype, jnp.floating):
         raw = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
     elif x.dtype.itemsize == 4:
@@ -25,13 +38,34 @@ def tensor_digest(x, *, interpret: bool = False, impl: str = "pallas"):
         raw = x.astype(jnp.uint32)
     flat = raw.reshape(-1).astype(jnp.uint32)
     pad = (-flat.shape[0]) % BLOCK
-    x2d = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    return jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def block_digests(x, *, interpret: bool = False, impl: str = "pallas"):
+    """Any tensor -> (nb, 2) uint32 per-block digest lanes (on device).
+
+    One row per 1024-element block; the two lanes together are the block's
+    64-bit identity.  Only this (nb, 2) vector crosses to the host — never
+    the tensor itself."""
+    x2d = _as_u32_blocks(x)
     if impl == "xla":
         from repro.kernels.hash_delta.ref import block_hash_ref
-        h = block_hash_ref(x2d, jnp.asarray(_W))
-    else:
-        from repro.kernels.hash_delta.kernel import block_hash_kernel
-        h = block_hash_kernel(x2d, jnp.asarray(_W), interpret=interpret)
-    # host-free final mix: weighted fold of block digests
-    idx = jnp.arange(h.shape[0], dtype=jnp.uint32) * jnp.uint32(2246822519) + jnp.uint32(1)
-    return jnp.sum(h * idx, dtype=jnp.uint32)
+        return block_hash_ref(x2d, jnp.asarray(_W))
+    from repro.kernels.hash_delta.kernel import block_hash_kernel
+    return block_hash_kernel(x2d, jnp.asarray(_W), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def _digest_lanes(x, *, interpret: bool = False, impl: str = "pallas"):
+    """Weighted fold of the per-block vector -> (2,) uint32 (host-free)."""
+    h2 = block_digests(x, interpret=interpret, impl=impl)
+    idx = (jnp.arange(h2.shape[0], dtype=jnp.uint32)
+           * jnp.uint32(2246822519) + jnp.uint32(1))
+    return jnp.sum(h2 * idx[:, None], axis=0, dtype=jnp.uint32)
+
+
+def tensor_digest(x, *, interpret: bool = False, impl: str = "pallas") -> int:
+    """Any tensor -> one 64-bit int digest (content hash for delta migration)."""
+    lo, hi = np.asarray(_digest_lanes(x, interpret=interpret, impl=impl))
+    return (int(hi) << 32) | int(lo)

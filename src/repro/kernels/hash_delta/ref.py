@@ -8,7 +8,7 @@ PRIME = np.uint32(2654435761)  # Knuth multiplicative
 
 
 def block_hash_ref(x2d_u32, weights):
-    """x2d (nb, blk) uint32; weights (blk,) uint32 -> (nb,) uint32 hashes."""
-    prod = x2d_u32 * weights[None, :]
-    h = jnp.sum(prod.astype(jnp.uint32), axis=1, dtype=jnp.uint32)
+    """x2d (nb, blk) uint32; weights (lanes, blk) uint32 -> (nb, lanes)."""
+    prod = x2d_u32[:, None, :] * weights[None, :, :]
+    h = jnp.sum(prod.astype(jnp.uint32), axis=2, dtype=jnp.uint32)
     return (h ^ (h >> np.uint32(15))) * PRIME

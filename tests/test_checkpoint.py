@@ -83,6 +83,48 @@ def test_gc_rebase_chain(tmp_path):
                                   np.arange(100, dtype=np.float32) + 6.0)
 
 
+def test_tombstone_through_storage_checkpoint_cycle(tmp_path):
+    """A leaf dropped between saves is a tombstone on the storage env: the
+    next manifest records it deleted, the storage namespace drops it, and a
+    restore of the later step never resurrects it."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"state": {"a": np.arange(10.0), "b": np.ones(5)}})
+    info = ck.save(2, {"state": {"a": np.arange(10.0) + 1.0}})
+    assert info.n_leaves_total == 1
+    m2 = ck._manifest(2)
+    dead = [n for n in m2["deleted"] if n.startswith("state/")]
+    assert len(dead) == 1                      # the vanished "b" leaf
+    assert dead[0] not in m2["names"] and dead[0] not in m2["digests"]
+    # storage envs are manifest + CAS only — no leaf is ever materialized
+    # into the namespace, deleted or otherwise
+    assert dead[0] not in ck.storage.state.ns
+    assert not ck.storage.state.ns
+    out, step = ck.restore({"state": {"a": np.arange(10.0)}})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(out["state"]["a"]),
+                                  np.arange(10.0) + 1.0)
+    # the earlier step still restores the full structure from its manifest
+    out1, step1 = ck.restore({"state": {"a": np.arange(10.0),
+                                        "b": np.ones(5)}}, step=1)
+    assert step1 == 1
+    np.testing.assert_array_equal(np.asarray(out1["state"]["b"]), np.ones(5))
+
+
+def test_checkpoint_chunk_delta_reships_only_changed_chunks(tmp_path):
+    """A 1-element update to a large leaf writes ~one chunk, not the leaf."""
+    ck = Checkpointer(str(tmp_path), codec="zstd", chunk_bytes=16 << 10)
+    big = np.arange(1 << 18, dtype=np.float32)          # 1 MiB, 64 chunks
+    i1 = ck.save(1, {"state": {"big": big}})
+    big2 = big.copy()
+    big2[3] += 1.0
+    i2 = ck.save(2, {"state": {"big": big2}})
+    assert i2.n_leaves_written == 1                     # leaf digest changed
+    assert i2.nbytes < i1.nbytes / 10                   # but ~1 chunk moved
+    out, step = ck.restore({"state": {"big": big}})
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(out["state"]["big"]), big2)
+
+
 def test_restart_mid_chain(tmp_path):
     ck = Checkpointer(str(tmp_path), rebase_every=10)
     for s in range(1, 5):

@@ -1,0 +1,133 @@
+"""Content-addressed chunk store: digests, stores, chunk-level delta."""
+import numpy as np
+import pytest
+
+from repro.core import ExecutionState, StateReducer
+from repro.core.chunkstore import (
+    DiskChunkStore, MemoryChunkStore, array_chunk_digests, decode_chunk,
+    digest_bytes, effective_chunk_bytes, encode_chunk, split_chunks,
+)
+
+CHUNK = 64 << 10
+
+
+# ----------------------------------------------------------------------
+# chunking + digests
+# ----------------------------------------------------------------------
+
+def test_split_and_digests_align():
+    rng = np.random.default_rng(0)
+    for n in (0, 1, 1000, CHUNK, CHUNK + 1, 3 * CHUNK + 777):
+        raw = rng.integers(0, 255, n, np.uint8).tobytes()
+        chunks = split_chunks(raw, CHUNK)
+        digs = array_chunk_digests(raw, CHUNK)
+        assert len(chunks) == len(digs)
+        assert b"".join(chunks) == raw
+
+
+def test_chunk_digest_locality():
+    """Mutating one element changes only the digest of its chunk."""
+    x = np.arange(1 << 18, dtype=np.float32)        # 1 MiB
+    d0 = array_chunk_digests(x.tobytes(), CHUNK)
+    x[5] += 1.0                                     # inside chunk 0
+    d1 = array_chunk_digests(x.tobytes(), CHUNK)
+    assert d0[0] != d1[0]
+    assert d0[1:] == d1[1:]
+
+
+def test_chunk_digests_are_64bit_and_length_salted():
+    digs = array_chunk_digests(np.arange(4096, dtype=np.float32).tobytes())
+    assert any(d > 2**32 for d in digs)
+    # zero payloads of different lengths must not alias (padding salt)
+    a = array_chunk_digests(bytes(1000))
+    b = array_chunk_digests(bytes(1024))
+    assert a != b
+
+
+def test_effective_chunk_bytes_rules():
+    assert effective_chunk_bytes(100, 0) == 100          # whole-payload mode
+    assert effective_chunk_bytes(100, 1 << 20) == 100    # fits in one chunk
+    eff = effective_chunk_bytes(10 << 20, 100_000)
+    assert eff % 1024 == 0 and eff <= 100_000            # block-aligned
+
+
+def test_encode_decode_chunk_roundtrip_all_codecs():
+    raw = np.arange(5000, dtype=np.int32).tobytes()
+    for codec in ("none", "zlib", "zstd"):
+        assert decode_chunk(encode_chunk(raw, codec)) == raw
+
+
+# ----------------------------------------------------------------------
+# stores
+# ----------------------------------------------------------------------
+
+def test_memory_store_dedups():
+    st = MemoryChunkStore()
+    d = digest_bytes(b"hello")
+    st.put(d, b"payload")
+    st.put(d, b"other")            # content-addressed: first write wins
+    assert st.get(d) == b"payload"
+    assert st.has(d) and len(st) == 1
+
+
+def test_memory_store_evicts_least_recent_past_budget():
+    st = MemoryChunkStore(max_bytes=300)
+    d1, d2, d3 = digest_bytes(b"1"), digest_bytes(b"2"), digest_bytes(b"3")
+    st.put(d1, b"a" * 120)
+    st.put(d2, b"b" * 120)
+    assert st.has(d1)                   # touch: d1 is now most recent
+    st.put(d3, b"c" * 120)              # over budget: evicts d2, not d1
+    assert not st.has(d2)
+    assert st.has(d1) and st.has(d3)
+    assert st.nbytes <= 300
+
+
+def test_disk_store_roundtrip_and_persistence(tmp_path):
+    st = DiskChunkStore(str(tmp_path))
+    d = digest_bytes(b"abc")
+    st.put(d, b"chunk-bytes")
+    # a fresh store over the same directory sees the chunk
+    st2 = DiskChunkStore(str(tmp_path))
+    assert st2.has(d)
+    assert st2.get(d) == b"chunk-bytes"
+    assert st2.digests() == {d}
+    st2.remove(d)
+    assert not st2.has(d)
+
+
+def test_disk_store_detects_corruption(tmp_path):
+    import os
+    st = DiskChunkStore(str(tmp_path))
+    d = digest_bytes(b"abc")
+    st.put(d, b"x" * 100)
+    fn = [f for f in os.listdir(tmp_path) if f.endswith(".bin")][0]
+    p = tmp_path / fn
+    data = bytearray(p.read_bytes())
+    data[10] ^= 0xFF
+    p.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        st.get(d)
+
+
+# ----------------------------------------------------------------------
+# reducer integration: chunk dedup within one capture
+# ----------------------------------------------------------------------
+
+def test_serialize_dedups_identical_chunks():
+    red = StateReducer("none", chunk_bytes=CHUNK)
+    big_zeros = np.zeros(1 << 18, np.float32)       # 16 identical chunks
+    ser = red.serialize_names(ExecutionState({"z": big_zeros}), ["z"])
+    assert len(ser.chunks) == 1                     # one unique chunk stored
+    assert ser.nbytes < big_zeros.nbytes / 4
+    out = red.deserialize(ser)
+    np.testing.assert_array_equal(out["z"], big_zeros)
+
+
+def test_wire_nbytes_counts_only_missing_chunks():
+    red = StateReducer("none", chunk_bytes=CHUNK)
+    x = np.arange(1 << 17, dtype=np.float32)
+    ser = red.serialize_names(ExecutionState({"x": x}), ["x"])
+    full = ser.wire_nbytes(set())
+    none = ser.wire_nbytes(set(ser.chunks))
+    assert full > x.nbytes                          # payload + manifest
+    assert none < full / 10                         # manifest + pickle only

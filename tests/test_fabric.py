@@ -211,6 +211,67 @@ def test_pipelined_runtime_beats_synchronous_on_blocks():
 
 
 # ----------------------------------------------------------------------
+# chunk-manifest exchange (CAS state plane)
+# ----------------------------------------------------------------------
+
+def test_small_mutation_ships_one_chunk_not_the_array():
+    reg = EnvironmentRegistry.two_env()
+    l, r = reg["local"], reg["remote"]
+    eng = MigrationEngine(StateReducer("none", chunk_bytes=16 << 10),
+                          registry=reg)
+    l.state["big"] = np.arange(1 << 18, dtype=np.float32)     # 1 MiB
+    first = eng.migrate(l, r, names={"big"})
+    assert first.nbytes > (1 << 20)
+    l.state["big"][7] += 1.0                                  # one element
+    second = eng.migrate(l, r, names={"big"})
+    assert "big" in second.names                              # name is stale
+    assert second.nbytes < first.nbytes / 10                  # ~one chunk
+    np.testing.assert_array_equal(r.state["big"], l.state["big"])
+
+
+def test_receiver_store_dedups_across_names():
+    """The same content under a second name ships only a manifest."""
+    reg = EnvironmentRegistry.two_env()
+    l, r = reg["local"], reg["remote"]
+    eng = MigrationEngine(StateReducer("none", chunk_bytes=16 << 10),
+                          registry=reg)
+    l.state["a"] = np.arange(1 << 16, dtype=np.float64)
+    first = eng.migrate(l, r, names={"a"})
+    l.state["b"] = l.state["a"].copy()                        # same content
+    second = eng.migrate(l, r, names={"b"})
+    assert second.nbytes < first.nbytes / 10
+    np.testing.assert_array_equal(r.state["b"], l.state["a"])
+
+
+def test_sessions_share_dataset_chunks_through_scheduler():
+    def total_bytes(share: bool) -> int:
+        reg = EnvironmentRegistry(default_bandwidth=1e9, default_latency=0.1)
+        reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+        reg.register(ExecutionEnvironment("gpu-cloud", speedup=10.0),
+                     capacity=2)
+        sched = SessionScheduler(reg, share_chunks=share)
+        rts = []
+        for i in range(3):
+            nb = Notebook(f"shared-{i}")
+            nb.add_cell("import numpy as np\n"
+                        "ds = np.arange(100_000, dtype=np.float64)", cost=0.5)
+            nb.add_cell("m = float(ds.sum())", cost=120.0)
+            rts.append(sched.add_notebook(
+                nb, policy="cost", use_knowledge=False,
+                reducer=StateReducer("none", chunk_bytes=16 << 10)))
+        sched.run()
+        for rt in rts:
+            got = (rt.envs["local"].state.get("m")
+                   or rt.envs["gpu-cloud"].state.get("m"))
+            assert got == float(np.arange(100_000, dtype=np.float64).sum())
+        return sum(m.nbytes for rt in rts for m in rt.engine.log)
+
+    isolated, shared = total_bytes(False), total_bytes(True)
+    # 3 sessions move the dataset: isolated pays 3x, shared pays ~1x
+    assert shared < isolated / 2
+
+
+# ----------------------------------------------------------------------
 # scheduler
 # ----------------------------------------------------------------------
 

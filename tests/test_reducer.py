@@ -64,6 +64,24 @@ def test_serialization_failure_raised():
         red.serialize_names(ExecutionState({"bad": threading.Lock()}), ["bad"])
 
 
+def test_on_error_skip_roundtrips_serializable_names():
+    """on_error="skip": unserializable names stay behind, everything else
+    round-trips intact (the return-migration path)."""
+    import threading
+    red = StateReducer(codec="zlib")
+    objs = {"bad": threading.Lock(),
+            "arr": np.arange(100, dtype=np.float32),
+            "note": "still travels"}
+    ser = red.serialize_names(ExecutionState(objs), list(objs),
+                              on_error="skip")
+    assert ser.skipped == ("bad",)
+    assert set(ser.blobs) == {"arr", "note"}
+    assert "bad" not in ser.digests          # skipped names have no digest
+    out = red.deserialize(ser)
+    np.testing.assert_array_equal(out["arr"], objs["arr"])
+    assert out["note"] == "still travels"
+
+
 def test_delta_names_semantics():
     red = StateReducer()
     s = ExecutionState({"a": np.arange(10), "b": np.zeros(5), "c": 1})
@@ -88,6 +106,23 @@ def test_digest_deterministic_and_sensitive(vals):
     b[0] = b[0] + 1.0 if np.isfinite(b[0] + 1.0) else 0.5
     if not np.array_equal(a, b):
         assert red.digest(b) != d1
+
+
+def test_digest_keeps_all_64_bits_of_wide_dtypes():
+    """With x64 disabled jnp.asarray narrows int64/float64; the digest must
+    still see every bit or a high-word change silently skips migration."""
+    red = StateReducer()
+    a = np.array([2**32, 5], dtype=np.int64)
+    b = np.array([2**33, 5], dtype=np.int64)       # differs above bit 32
+    assert red.digest(a) != red.digest(b)
+    f = np.array([1.0, 2.0], dtype=np.float64)
+    g = f.copy()
+    g[0] += 1e-9                                   # lost in a float32 cast
+    assert red.digest(f) != red.digest(g)
+    z = np.array([1 + 2j, 3 + 4j], dtype=np.complex128)
+    w = z.copy()
+    w[1] = 3 + 5j
+    assert red.digest(z) != red.digest(w)
 
 
 @given(st.integers(1, 3), st.integers(1, 2049))
