@@ -21,6 +21,7 @@ MODULES = [
     "fig11_knowledge_policy",     # Fig 11
     "bench_fabric",               # N-env fabric / pipeline / scheduler
     "bench_state_plane",          # CAS chunk delta vs whole-name baseline
+    "bench_context",              # interaction models / prefetch gate
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]

@@ -1,7 +1,7 @@
 # The paper's primary contribution: context-aware execution migration —
 # generalized to an N-environment placement fabric.
 from repro.core.analyzer import (
-    BlockPolicy, CostMatrixPolicy, Decision, KnowledgePolicy,
+    BlockPolicy, CostMatrixPolicy, Decision, HorizonPolicy, KnowledgePolicy,
     MigrationAnalyzer, PerfModel, PlacementPolicy, SingleCellPolicy,
     fit_linear, intersection, substitute_kwarg,
 )
@@ -11,6 +11,10 @@ from repro.core.chunkstore import (
 )
 from repro.core.context import ContextDetector, get_sequences, sequence_stats
 from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment, Link
+from repro.core.interaction import (
+    MODELS, ConfidenceGate, EnsembleModel, FrequencyModel, InteractionModel,
+    MarkovModel, RecencyModel, make_model,
+)
 from repro.core.kb import KnowledgeBase, ParamEstimate, ProvRecord
 from repro.core.migration import (
     HybridRuntime, MigrationEngine, MigrationResult, PipelinedMigrationEngine,
@@ -30,13 +34,17 @@ from repro.core.simulator import (
 from repro.core.state import ExecutionState
 
 __all__ = [
-    "BlockPolicy", "CostMatrixPolicy", "Decision", "KnowledgePolicy",
+    "BlockPolicy", "CostMatrixPolicy", "Decision", "HorizonPolicy",
+    "KnowledgePolicy",
     "MigrationAnalyzer", "PerfModel", "PlacementPolicy", "SingleCellPolicy",
     "fit_linear", "intersection", "substitute_kwarg", "CHUNK_BYTES",
     "DiskChunkStore", "MemoryChunkStore", "array_chunk_digests",
     "digest_bytes", "split_chunks", "ContextDetector",
     "get_sequences", "sequence_stats", "EnvironmentRegistry",
-    "ExecutionEnvironment", "Link", "KnowledgeBase", "ParamEstimate",
+    "ExecutionEnvironment", "Link",
+    "MODELS", "ConfidenceGate", "EnsembleModel", "FrequencyModel",
+    "InteractionModel", "MarkovModel", "RecencyModel", "make_model",
+    "KnowledgeBase", "ParamEstimate",
     "ProvRecord", "HybridRuntime", "MigrationEngine", "MigrationResult",
     "PipelinedMigrationEngine", "Cell", "Notebook", "SerializationFailure",
     "SerializedState", "StateReducer", "CapacityArbiter", "ScheduleReport",

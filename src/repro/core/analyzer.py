@@ -229,6 +229,20 @@ class BlockPolicy(PlacementPolicy):
                         f"<= {cand} {rem_sum:.2f}s + 2x{t_mig:.2f}s", block=block)
 
 
+def _modeled_exec_seconds(an, c: Cell, env_name: str) -> float | None:
+    """Estimated execution time of a cell on an env: measured history first,
+    else home history (or the declared cost) divided by the env speedup."""
+    t = an.perf.estimate(c.cell_id, env_name)
+    if t is not None:
+        return t
+    base = an.perf.estimate(c.cell_id, an.home)
+    if base is None:
+        base = c.cost
+    if base is None:
+        return None
+    return base / an.registry[env_name].speedup
+
+
 class CostMatrixPolicy(PlacementPolicy):
     """Score all N environments per cell/block with per-pair link costs.
 
@@ -248,15 +262,7 @@ class CostMatrixPolicy(PlacementPolicy):
             block = (order,)         # unproven prediction: score the cell alone
 
         def exec_time(c: Cell, env_name: str) -> float | None:
-            t = an.perf.estimate(c.cell_id, env_name)
-            if t is not None:
-                return t
-            base = an.perf.estimate(c.cell_id, an.home)
-            if base is None:
-                base = c.cost
-            if base is None:
-                return None
-            return base / an.registry[env_name].speedup
+            return _modeled_exec_seconds(an, c, env_name)
 
         costs: dict[str, float] = {}
         known_any = False
@@ -289,8 +295,138 @@ class CostMatrixPolicy(PlacementPolicy):
                         policy="cost")
 
 
+class HorizonPolicy(PlacementPolicy):
+    """Expected-cost placement over the next H cells (beyond the paper).
+
+    Generalizes :class:`BlockPolicy`/:class:`CostMatrixPolicy`: instead of
+    committing to the single most probable block, it chains the interaction
+    model's next-cell distribution into per-step cell distributions
+    ``d_t`` and runs a dynamic program over (step, env) against the
+    fabric's cost matrix::
+
+        V[H][e]  = transfer(e -> home, state)          # amortized return
+        V[t][e]  = E_{c ~ d_t}[exec(c | e)]
+                   + min_e' ( transfer(e -> e', state) + V[t+1][e'] )
+
+    The decision is the env minimizing ``transfer(current -> e) + V[0][e]``
+    — i.e. the placement with minimum *expected* cost over the horizon,
+    not just the best response to one predicted path.  Requires a registry
+    (per-pair links + env speedups)."""
+
+    name = "horizon"
+
+    def __init__(self, horizon: int = 4):
+        assert horizon >= 1
+        self.horizon = int(horizon)
+
+    # -- helpers ---------------------------------------------------------
+    def _step_distributions(self, an, nb, order: int) -> list[dict[int, float]]:
+        """d_0 = {current: 1}; d_{t+1} = d_t chained through the model's
+        next-cell distribution, truncated to in-notebook cells."""
+        model = an.context.model
+        dists: list[dict[int, float]] = [{order: 1.0}]
+        d = dists[0]
+        for _ in range(1, self.horizon):
+            nd: dict[int, float] = defaultdict(float)
+            for c, p in d.items():
+                for c2, p2 in model.distribution(nb.name, c).items():
+                    if 0 <= c2 < len(nb.cells):
+                        nd[c2] += p * p2
+            mass = sum(nd.values())
+            if mass <= 1e-9:
+                break
+            d = {c: p / mass for c, p in sorted(nd.items())}
+            dists.append(d)
+        return dists
+
+    def decide(self, an, nb, cell, current_env):
+        assert an.registry is not None, "horizon policy needs a registry"
+        order = nb.order(cell.cell_id)
+        state = an.state_size_estimate[nb.name]
+        dists = self._step_distributions(an, nb, order)
+        envs = [an.home] + an.candidates()
+
+        # expected exec cost per (step, env); a cell missing an estimate on
+        # ANY env contributes to none, keeping the comparison paired like
+        # BlockPolicy (else the only env with evidence would be penalized)
+        known_any = False
+        expected: list[dict[str, float]] = []
+        for d in dists:
+            row: dict[str, float] = {e: 0.0 for e in envs}
+            for c_order, p in d.items():
+                ts = {e: _modeled_exec_seconds(an, nb.cells[c_order], e)
+                      for e in envs}
+                if any(t is None for t in ts.values()):
+                    continue
+                for e, t in ts.items():
+                    row[e] += p * t
+                known_any = True
+            expected.append(row)
+        if not known_any:
+            return Decision(an.home, False,
+                            "horizon: no history or declared costs yet",
+                            policy="horizon")
+
+        # backward DP + argmin successor per (step, env); the terminal V is
+        # the amortized return-home transfer
+        V = {e: an.pair_migration_time(state, e, an.home) for e in envs}
+        succ: list[dict[str, str]] = []
+        for t in range(len(dists) - 1, -1, -1):
+            nv: dict[str, float] = {}
+            ns: dict[str, str] = {}
+            for e in envs:
+                best_e, best_c = None, None
+                for e2 in envs:
+                    c = an.pair_migration_time(state, e, e2) + V[e2]
+                    if best_c is None or c < best_c - 1e-12:
+                        best_e, best_c = e2, c
+                nv[e] = expected[t][e] + best_c
+                ns[e] = best_e
+            succ.append(ns)
+            V = nv
+        succ.reverse()
+
+        costs = {e: an.pair_migration_time(state, current_env, e) + V[e]
+                 for e in envs}
+        best = min(costs, key=lambda e: (costs[e], e != an.home))
+        matrix = ", ".join(f"{e}={t:.2f}s" for e, t in costs.items())
+
+        # block plan: the greedy most-likely cell path for as long as the
+        # DP keeps the placement on the chosen env
+        block = [order]
+        if best != an.home:
+            model = an.context.model
+            e, c = best, order
+            for t in range(1, len(dists)):
+                e = succ[t - 1][e]
+                if e != best:
+                    break
+                step = model.distribution(nb.name, c)
+                step = {c2: p for c2, p in step.items()
+                        if 0 <= c2 < len(nb.cells)}
+                if not step:
+                    break
+                c = max(step.items(), key=lambda kv: (kv[1], -kv[0]))[0]
+                # blocks are non-decreasing runs: a wrap ends the plan
+                if c in block or c < block[-1]:
+                    break
+                block.append(c)
+
+        if best == current_env:
+            return Decision(best, False,
+                            f"horizon(H={len(dists)}): stay on {best} "
+                            f"[{matrix}]",
+                            block=tuple(block) if best != an.home else (),
+                            policy="horizon")
+        return Decision(best, True,
+                        f"horizon(H={len(dists)}): {best} minimizes expected "
+                        f"cost [{matrix}]",
+                        block=tuple(block) if best != an.home else (),
+                        policy="horizon")
+
+
 POLICIES = {"single": SingleCellPolicy, "block": BlockPolicy,
-            "cost": CostMatrixPolicy}
+            "cost": CostMatrixPolicy, "horizon": HorizonPolicy}
 
 
 # ----------------------------------------------------------------------
@@ -300,14 +436,15 @@ POLICIES = {"single": SingleCellPolicy, "block": BlockPolicy,
 class MigrationAnalyzer:
     def __init__(self, kb: KnowledgeBase, context: ContextDetector,
                  perf: PerfModel | None = None, *,
-                 policy: str = "block",            # single | block | cost
+                 policy: str = "block",    # single | block | cost | horizon
                  use_knowledge: bool = True,
                  migration_latency: float = 0.5,
                  migration_bandwidth: float = 1e9,
-                 registry=None):
+                 registry=None,
+                 horizon: int = 4):
         assert policy in POLICIES, policy
-        if policy == "cost" and registry is None:
-            raise ValueError("cost-matrix policy requires a registry")
+        if policy in ("cost", "horizon") and registry is None:
+            raise ValueError(f"{policy} policy requires a registry")
         self.kb = kb
         self.context = context
         self.perf = perf or PerfModel()
@@ -316,11 +453,15 @@ class MigrationAnalyzer:
         self.migration_latency = migration_latency
         self.migration_bandwidth = migration_bandwidth
         self.registry = registry
+        self.horizon = int(horizon)
         self.state_size_estimate: dict[str, float] = defaultdict(lambda: 1e6)
         self._chain: list[PlacementPolicy] = []
         if use_knowledge:
             self._chain.append(KnowledgePolicy())
-        self._chain.append(POLICIES[policy]())
+        if policy == "horizon":
+            self._chain.append(HorizonPolicy(self.horizon))
+        else:
+            self._chain.append(POLICIES[policy]())
 
     # -- fabric views ----------------------------------------------------
     @property

@@ -1,14 +1,21 @@
 """Context detector (paper §II-B, Algorithm 1).
 
-Mines the history of cell-order interactions for non-decreasing sequences,
-scores them by subset-counted frequency, and predicts the block of cells the
-user is about to execute (consumed by the block-cell migration policy)."""
+The detector is now a thin telemetry-bus adapter over a pluggable
+:class:`~repro.core.interaction.InteractionModel` (default:
+:class:`~repro.core.interaction.FrequencyModel`, the incremental Algorithm 1
+— bit-identical decisions to the original per-query rescan).  The module
+keeps the reference implementation of Algorithm 1 (:func:`get_sequences` /
+:func:`sequence_stats`) as pure functions over a history list: they are the
+specification the incremental model is property-tested against.
+"""
 from __future__ import annotations
 
 from collections import defaultdict
-from dataclasses import dataclass, field
 
 from repro.core import telemetry as T
+from repro.core.interaction import (
+    FrequencyModel, InteractionModel, _contiguous_subseq, make_model,
+)
 
 
 def get_sequences(history_order: list[int]) -> list[tuple[int, ...]]:
@@ -28,14 +35,6 @@ def get_sequences(history_order: list[int]) -> list[tuple[int, ...]]:
     return seqs
 
 
-def _contiguous_subseq(a: tuple, b: tuple) -> bool:
-    """a is a contiguous subsequence of b."""
-    n, m = len(a), len(b)
-    if n > m:
-        return False
-    return any(b[i:i + n] == a for i in range(m - n + 1))
-
-
 def sequence_stats(history_order: list[int],
                    current_order: int | None = None) -> dict[tuple[int, ...], float]:
     """Algorithm 1: score sequences by frequency (%), optionally restricted to
@@ -50,7 +49,7 @@ def sequence_stats(history_order: list[int],
     for s in sequences:
         counts[s] += 1  # duplicates removed but counted (lines 7-11)
 
-    stats: dict[tuple[int, ...], int] = {}
+    stats: dict[tuple[int, ...], float] = {}
     total = 0
     for s in sorted(counts, key=len):  # increasing length (line 4)
         subtotal = counts[s]
@@ -63,53 +62,74 @@ def sequence_stats(history_order: list[int],
     return {s: v / total * 100.0 for s, v in stats.items()}  # lines 14-15
 
 
-@dataclass
 class ContextDetector:
-    """Subscribes to the MQ bus; tracks per-notebook interaction history."""
-    history: dict[str, list[int]] = field(default_factory=lambda: defaultdict(list))
-    _cell_order: dict[str, dict[str, int]] = field(default_factory=dict)
+    """Subscribes to the MQ bus; feeds per-notebook interaction history into
+    the pluggable interaction model and answers prediction queries from it.
+
+    ``model`` accepts an :class:`InteractionModel` instance, a registered
+    model name (``frequency`` | ``markov`` | ``recency`` | ``ensemble``) or
+    None for the paper's default."""
+
+    def __init__(self, model: InteractionModel | str | None = None):
+        self.model = make_model(model)
+        self.history: dict[str, list[int]] = defaultdict(list)
+        self._attached: list[tuple[T.MQBus, str]] = []
 
     def attach(self, bus: T.MQBus, topic: str = "telemetry") -> None:
         bus.subscribe(topic, self.on_message)
+        self._attached.append((bus, topic))
+
+    def detach(self) -> None:
+        """Unsubscribe from every bus this detector attached to (sessions
+        must not leak their subscribers into later sessions)."""
+        for bus, topic in self._attached:
+            bus.unsubscribe(topic, self.on_message)
+        self._attached.clear()
 
     def on_message(self, msg: T.TelemetryMessage) -> None:
         if msg.type != T.CELL_EXECUTION_COMPLETED or msg.cell_id is None:
             return
         order = msg.payload.get("order")
         if order is None:
-            order = list(msg.cell_ids).index(msg.cell_id)
-        self.history[msg.notebook].append(int(order))
+            try:
+                order = list(msg.cell_ids).index(msg.cell_id)
+            except ValueError:
+                # the cell was deleted/renamed mid-session: the event no
+                # longer maps onto an order — drop it rather than crash the
+                # whole bus dispatch
+                return
+        self.record(msg.notebook, int(order))
 
     # ------------------------------------------------------------------
     def record(self, notebook: str, order: int) -> None:
-        self.history[notebook].append(order)
+        self.history[notebook].append(int(order))
+        self.model.observe(notebook, int(order))
 
     def stats(self, notebook: str, current_order: int | None = None):
+        """Algorithm-1 sequence scores.  Served incrementally by the
+        frequency model; other models fall back to the reference rescan
+        over the recorded history."""
+        if isinstance(self.model, FrequencyModel):
+            return self.model.stats(notebook, current_order)
         return sequence_stats(self.history[notebook], current_order)
 
+    def distribution(self, notebook: str, current_order: int) -> dict[int, float]:
+        """P(next cell | history, current) from the interaction model."""
+        return self.model.distribution(notebook, current_order)
+
     def predict_block(self, notebook: str, current_order: int) -> tuple[int, ...]:
-        """Most probable previously-seen sequence containing the current cell;
-        returns the cells from the current one onward (the upcoming block)."""
-        return self.predict_block_scored(notebook, current_order)[0]
+        """Most probable upcoming block from the current cell onward."""
+        return self.model.predict_block(notebook, current_order)
 
     def predict_block_scored(
             self, notebook: str, current_order: int,
     ) -> tuple[tuple[int, ...], float, int]:
-        """(block, score%, n_candidates) — score is the Algorithm-1 frequency
-        of the chosen sequence; n_candidates (distinct sequences containing
-        the cell) gauges how much evidence the prediction rests on."""
-        stats = self.stats(notebook, current_order)
-        if not stats:
-            return (current_order,), 0.0, 0
-        best, score = max(stats.items(), key=lambda kv: (kv[1], len(kv[0])))
-        i = best.index(current_order)
-        return best[i:], score, len(stats)
+        """(block, score%, n_candidates) — score is the model's confidence
+        in the chosen block; n_candidates gauges how much evidence the
+        prediction rests on."""
+        return self.model.predict_block_scored(notebook, current_order)
 
     def predict_next(self, notebook: str, current_order: int) -> int | None:
-        """The cell most likely to run *after* the current one (the element
-        following it in the most probable sequence) — used by the pipelined
-        engine to prefetch the next hop's state during execution."""
-        block = self.predict_block(notebook, current_order)
-        if len(block) > 1:
-            return block[1]
-        return None
+        """The cell most likely to run *after* the current one — used by the
+        pipelined engine to prefetch the next hop's state during execution."""
+        return self.model.predict_next(notebook, current_order)

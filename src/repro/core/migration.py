@@ -24,6 +24,7 @@ from repro.core import telemetry as T
 from repro.core.analyzer import Decision, MigrationAnalyzer, PerfModel
 from repro.core.context import ContextDetector
 from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment
+from repro.core.interaction import ConfidenceGate, InteractionModel
 from repro.core.kb import KnowledgeBase, ProvRecord
 from repro.core.notebook import Cell, Notebook
 from repro.core.reducer import SerializationFailure, SerializedState, StateReducer
@@ -47,6 +48,7 @@ class MigrationResult:
     full_bytes: int = 0      # what a full-state migration would have cost
     noop: bool = False       # empty delta: nothing travelled, nothing charged
     prefetched: tuple[str, ...] = ()   # names applied from a pipelined prefetch
+    wasted_prefetch_bytes: int = 0     # speculative bytes streamed but unused
 
 
 @dataclass
@@ -59,6 +61,9 @@ class _PendingPrefetch:
     ready_at: float
     nbytes: int
     held: frozenset = frozenset()   # chunks dst already had at begin time
+    predicted_order: int | None = None   # cell this speculation bets on
+    prob: float | None = None            # predicted probability (None=planned)
+    dst_store: object = None             # receiver's chunk store (for banking)
 
 
 class MigrationEngine:
@@ -214,17 +219,74 @@ class PipelinedMigrationEngine(MigrationEngine):
     * :meth:`begin_prefetch` starts the predicted next hop's transfer in the
       background while the current cell executes — the eventual ``migrate``
       only charges whatever transfer time execution did not already cover.
+
+    Prefetch is *confidence-gated speculation*: callers pass the predicted
+    probability of the hop and the :class:`ConfidenceGate` admits only
+    predictions whose mass clears its (self-calibrating) threshold
+    (``prob=None`` marks a planned, non-speculative transfer — e.g. the
+    next cell of a committed block — which always proceeds).  Stale claims
+    can be cancelled, and every speculative byte that streamed without
+    being applied is accounted in ``prefetch_wasted_bytes`` and on the
+    claiming :class:`MigrationResult`.
     """
 
     def __init__(self, reducer: StateReducer, *,
-                 chunk_bytes: int | None = None, **kw):
+                 chunk_bytes: int | None = None,
+                 gate: ConfidenceGate | None = None,
+                 prefetch_top_k: int = 2, **kw):
         super().__init__(reducer, **kw)
         # stage-overlap granularity defaults to the reducer's CAS chunk size
         # so the pipeline and the store chunk the same way
         self.chunk_bytes = int(chunk_bytes if chunk_bytes is not None
                                else max(reducer.chunk_bytes, 1))
         self._pending: dict[str, _PendingPrefetch] = {}
+        self.gate = gate if gate is not None else ConfidenceGate()
+        self.prefetch_top_k = int(prefetch_top_k)
         self.prefetch_hits = 0
+        self.prefetch_issued = 0
+        self.prefetch_gated = 0          # speculations the gate rejected
+        self.prefetch_cancelled = 0
+        self.prefetch_wasted_bytes = 0
+        self.prefetch_useful_bytes = 0
+
+    # -- speculative accounting ------------------------------------------
+    @staticmethod
+    def _delivered_bytes(p: _PendingPrefetch, now: float | None) -> int:
+        """Bytes of the speculative transfer on the wire by ``now``."""
+        if now is None or now >= p.ready_at:
+            return p.nbytes
+        span = p.ready_at - p.started_at
+        if span <= 0:
+            return p.nbytes
+        frac = max(0.0, min(1.0, (now - p.started_at) / span))
+        return int(p.nbytes * frac)
+
+    def cancel_prefetch(self, dst_name: str,
+                        now: float | None = None) -> int:
+        """Cancel the pending speculative transfer to ``dst_name``; returns
+        the wasted bytes (what already streamed).  Chunks that fully arrived
+        are still banked into the receiver's store — content-addressed
+        chunks are immutable, so they may yet pay off — but the bytes are
+        charged as waste because this speculation did not."""
+        p = self._pending.pop(dst_name, None)
+        if p is None:
+            return 0
+        wasted = self._delivered_bytes(p, now)
+        if now is not None and now >= p.ready_at and p.dst_store is not None:
+            p.dst_store.put_many(p.ser.chunks)
+        self.prefetch_cancelled += 1
+        self.prefetch_wasted_bytes += wasted
+        return wasted
+
+    def cancel_stale(self, keep: set[str],
+                     now: float | None = None) -> list[tuple[str, int, int | None]]:
+        """Cancel every pending speculation whose destination is not in
+        ``keep``; returns (dst, wasted_bytes, predicted_order) tuples."""
+        out = []
+        for dst in [d for d in self._pending if d not in keep]:
+            order = self._pending[dst].predicted_order
+            out.append((dst, self.cancel_prefetch(dst, now), order))
+        return out
 
     # -- cost model ------------------------------------------------------
     def transfer_seconds(self, nbytes: int, src: str | None = None,
@@ -249,11 +311,27 @@ class PipelinedMigrationEngine(MigrationEngine):
                        dst: ExecutionEnvironment,
                        cell_source: str | None = None,
                        names: set[str] | None = None,
-                       now: float = 0.0) -> _PendingPrefetch | None:
+                       now: float = 0.0,
+                       prob: float | None = None,
+                       predicted_order: int | None = None) -> _PendingPrefetch | None:
         """Snapshot the delta ``cell_source`` will need on ``dst`` and start
         its transfer in the background (completes at ``ready_at`` on the sim
-        clock).  Nothing is applied to ``dst`` until ``migrate`` claims it."""
+        clock).  Nothing is applied to ``dst`` until ``migrate`` claims it.
+
+        ``prob`` marks the transfer as *speculative* with that predicted
+        probability: the confidence gate must admit it, and a superseded
+        speculation to the same destination is cancelled (wasted bytes
+        accounted).  ``prob=None`` is a planned transfer and bypasses the
+        gate (the paper's unconditional next-hop prefetch)."""
         import types as _types
+        if prob is not None and self.gate is not None \
+                and not self.gate.allow(prob):
+            self.prefetch_gated += 1
+            self.gate.rejected()
+            return None
+        if dst.name in self._pending:
+            # a newer prediction supersedes the in-flight speculation
+            self.cancel_prefetch(dst.name, now)
         if names is None:
             if cell_source is not None:
                 names, _, _ = self.reducer.reduce(src.state, cell_source)
@@ -275,8 +353,10 @@ class PipelinedMigrationEngine(MigrationEngine):
         pending = _PendingPrefetch(
             src.name, dst.name, ser, started_at=now,
             ready_at=now + self.transfer_seconds(nbytes, src.name, dst.name),
-            nbytes=nbytes, held=held)
+            nbytes=nbytes, held=held, predicted_order=predicted_order,
+            prob=prob, dst_store=dst.chunk_store)
         self._pending[dst.name] = pending
+        self.prefetch_issued += 1
         return pending
 
     def migrate(self, src: ExecutionEnvironment, dst: ExecutionEnvironment,
@@ -311,10 +391,22 @@ class PipelinedMigrationEngine(MigrationEngine):
                      for d in p.ser.blobs[n].chunk_digests()
                      if d in p.ser.chunks})
         if not valid:
+            wasted = 0
             if p is not None and p.src == src.name:
                 del self._pending[dst.name]      # consumed, nothing useful
-            return super().migrate(src, dst, cell_source, names=names,
-                                   strict=strict, now=now)
+                wasted = self._delivered_bytes(p, now)
+                self.prefetch_wasted_bytes += wasted
+                # like cancel_prefetch: chunks that fully arrived are banked
+                # (immutable, content-addressed) so the fallback migration
+                # below doesn't re-ship what already crossed the wire — a
+                # redefined name re-serializes, but its unchanged chunks
+                # collapse to the manifest
+                if now is not None and now >= p.ready_at:
+                    dst.chunk_store.put_many(p.ser.chunks)
+            res = super().migrate(src, dst, cell_source, names=names,
+                                  strict=strict, now=now)
+            res.wasted_prefetch_bytes = wasted
+            return res
 
         # mark the claimed names synced so the base delta skips them, but
         # apply nothing until the residual migration has succeeded — a
@@ -349,11 +441,18 @@ class PipelinedMigrationEngine(MigrationEngine):
                 sub_wire, src.name, dst.name)
             wait = max(0.0, ready - now)
         self.prefetch_hits += 1
+        self.prefetch_useful_bytes += sub_wire
+        # speculative bytes that streamed but were not part of the applied
+        # subset (the snapshot carried names that turned out synced/stale)
+        overshoot = max(0, min(p.nbytes, self._delivered_bytes(p, now))
+                        - sub_wire)
+        self.prefetch_wasted_bytes += overshoot
         res.names = tuple(sorted(set(res.names) | set(valid)))
         res.prefetched = tuple(sorted(valid))
         res.nbytes += sub_wire
         res.seconds += wait
         res.noop = False
+        res.wasted_prefetch_bytes = overshoot
         return res
 
 
@@ -377,7 +476,9 @@ class HybridRuntime:
                  bandwidth: float = 1e9, latency: float = 0.5,
                  delta: bool = True, pipeline: bool = False,
                  engine: MigrationEngine | None = None,
-                 arbiter=None):
+                 arbiter=None,
+                 model: InteractionModel | str | None = None,
+                 horizon: int = 4):
         if registry is None:
             assert envs, "pass envs={...} or registry=EnvironmentRegistry(...)"
             registry = EnvironmentRegistry.from_envs(
@@ -391,7 +492,7 @@ class HybridRuntime:
         self.clock = clock or SimClock()
         self.bus = T.MQBus()
         self.kb = kb or KnowledgeBase()
-        self.context = ContextDetector()
+        self.context = ContextDetector(model)
         self.context.attach(self.bus)
         self.reducer = reducer or StateReducer()
         if engine is not None:
@@ -406,7 +507,8 @@ class HybridRuntime:
         self.analyzer = MigrationAnalyzer(
             self.kb, self.context, PerfModel(), policy=policy,
             use_knowledge=use_knowledge, migration_latency=latency,
-            migration_bandwidth=bandwidth, registry=registry)
+            migration_bandwidth=bandwidth, registry=registry,
+            horizon=horizon)
         self.current_env = self.home
         self.block_plan: list[int] = []
         self.block_env: str | None = None
@@ -414,6 +516,14 @@ class HybridRuntime:
         self.migrations = 0
         self.queue_wait = 0.0
         self.arbiter = arbiter               # shared capacity (SessionScheduler)
+        # prediction scoring: last emitted next-cell distribution + the
+        # speculative prefetches issued on it, scored when the next cell
+        # actually runs (KB provenance + confidence-gate calibration)
+        self.prediction_hits = 0
+        self.prediction_total = 0
+        self._last_pred: dict | None = None
+        self.last_decision: Decision | None = None
+        self._closed = False
         self._emit(T.SESSION_STARTED, None)
 
     # ------------------------------------------------------------------
@@ -449,37 +559,102 @@ class HybridRuntime:
 
     def _maybe_prefetch(self, order: int) -> None:
         """Pipelined engines push the predicted next hop's state while the
-        current cell executes (transfer overlaps execution on the sim clock)."""
+        current cell executes (transfer overlaps execution on the sim clock).
+
+        Inside a committed block the next planned cell is a *planned*
+        transfer (bypasses the gate).  Otherwise the interaction model's
+        next-cell distribution drives *speculation*: the top-k candidates
+        are prefetched, each admitted only if its probability mass clears
+        the engine's confidence gate."""
         if not isinstance(self.engine, PipelinedMigrationEngine):
             return
+        dist = self._last_pred["dist"] if self._last_pred else {}
         if self.block_plan:
             upcoming = [o for o in self.block_plan if o > order]
             nxt = upcoming[0] if upcoming else order + 1
+            candidates: list[tuple[int, float | None]] = [(nxt, None)]
+        elif dist:
+            top = sorted(dist.items(), key=lambda kv: (-kv[1], kv[0]))
+            candidates = top[:self.engine.prefetch_top_k]
         else:
-            predicted = self.context.predict_next(self.nb.name, order)
-            nxt = predicted if predicted is not None else order + 1
-        if nxt >= len(self.nb.cells):
+            # no evidence yet: the paper's unconditional next-cell walk
+            candidates = [(order + 1, None)]
+        issued: list[tuple[int, str, float | None]] = []
+        taken = {self.current_env}
+        gate = self.engine.gate
+        for nxt, prob in candidates:
+            if not 0 <= nxt < len(self.nb.cells):
+                continue
+            if prob is not None and gate is not None and not gate.allow(prob):
+                # pre-gate: don't pay a full peeked placement decision for a
+                # speculation the engine would reject anyway
+                self.engine.prefetch_gated += 1
+                gate.rejected()
+                continue
+            cell = self.nb.cells[nxt]
+            d = self.analyzer.decide(self.nb, cell,
+                                     current_env=self.current_env, peek=True)
+            target = d.env
+            if self.block_plan and self.block_env is not None:
+                target = (self.block_env if nxt in self.block_plan
+                          else self.home)
+            if target in taken:
+                continue
+            p = self.engine.begin_prefetch(
+                self.envs[self.current_env], self.envs[target], cell.source,
+                now=self.clock.now(), prob=prob, predicted_order=nxt)
+            if p is not None:
+                taken.add(target)
+                issued.append((nxt, target, prob))
+                self._emit(T.STATE_PREFETCHED, cell.cell_id, target=target,
+                           nbytes=p.nbytes, ready_at=p.ready_at,
+                           predicted=nxt,
+                           prob=prob if prob is not None else 1.0)
+        if self._last_pred is not None:
+            self._last_pred["issued"] = issued
+
+    def _note_prediction(self, order: int) -> None:
+        """Snapshot the model's next-cell distribution for the cell about to
+        run (before its completion lands in the history) so the realized
+        next cell can score it — every cell, pipelined or not."""
+        self._last_pred = {
+            "notebook": self.nb.name, "order": order,
+            "dist": self.context.distribution(self.nb.name, order),
+            "issued": []}
+
+    def _score_prediction(self, cell: Cell, realized: int) -> None:
+        """Score the previous cell's prediction against the cell that
+        actually ran: KB provenance keeps (predicted distribution, realized)
+        and every *issued* speculation's outcome calibrates the gate."""
+        pred = self._last_pred
+        self._last_pred = None
+        if pred is None or pred["notebook"] != self.nb.name:
             return
-        cell = self.nb.cells[nxt]
-        d = self.analyzer.decide(self.nb, cell, current_env=self.current_env,
-                                 peek=True)
-        target = d.env
-        if self.block_plan and self.block_env is not None:
-            target = self.block_env if nxt in self.block_plan else self.home
-        if target == self.current_env:
-            return
-        p = self.engine.begin_prefetch(self.envs[self.current_env],
-                                       self.envs[target], cell.source,
-                                       now=self.clock.now())
-        if p is not None:
-            self._emit(T.STATE_PREFETCHED, cell.cell_id, target=target,
-                       nbytes=p.nbytes, ready_at=p.ready_at)
+        dist = pred["dist"]
+        if dist:
+            self.prediction_total += 1
+            top = max(dist.items(), key=lambda kv: (kv[1], -kv[0]))[0]
+            self.prediction_hits += int(top == realized)
+            self.kb.record_prediction(cell.cell_id, self.nb.name, dist,
+                                      realized, when=self.clock.now())
+        if isinstance(self.engine, PipelinedMigrationEngine) \
+                and self.engine.gate is not None:
+            for nxt, _target, prob in pred["issued"]:
+                if prob is not None:     # planned transfers don't calibrate
+                    self.engine.gate.observe(nxt == realized)
+
+    @property
+    def prediction_hit_rate(self) -> float:
+        if self.prediction_total == 0:
+            return 0.0
+        return self.prediction_hits / self.prediction_total
 
     def run_cell(self, ref, *, force_env: str | None = None) -> float:
         """Execute one cell under the policies; returns modeled duration."""
         cell = self.nb.cell(ref)
         order = self.nb.order(cell.cell_id)
         self._emit(T.CELL_EXECUTION_REQUESTED, cell.cell_id, order=order)
+        self._score_prediction(cell, order)
 
         if force_env is not None:
             decision = Decision(force_env, force_env != self.current_env,
@@ -496,11 +671,30 @@ class HybridRuntime:
         else:
             decision = self.analyzer.decide(self.nb, cell,
                                             current_env=self.current_env)
+        # exposed so the scheduler's forecast telemetry can reuse the
+        # decision instead of re-running the policy chain per cell
+        self.last_decision = decision
 
         target = decision.env
+        # speculations that bet on a different destination are now stale:
+        # cancel them before the migration below claims its own
+        if isinstance(self.engine, PipelinedMigrationEngine):
+            for dst, wasted, pred_order in self.engine.cancel_stale(
+                    {target}, now=self.clock.now()):
+                self._emit(T.STATE_PREFETCH_CANCELLED, cell.cell_id,
+                           target=dst, wasted_bytes=wasted,
+                           predicted=pred_order)
         if target != self.current_env:
+            # committing to a block moves state once for the WHOLE block
+            # (Fig. 3): later in-block cells run without migrating, so their
+            # inputs must travel now, not just the current cell's
+            move_source = cell.source
+            if decision.block:
+                move_source = "\n".join(
+                    self.nb.cells[o].source for o in decision.block
+                    if order <= o < len(self.nb.cells)) or cell.source
             try:
-                self._do_migration(self.current_env, target, cell.source)
+                self._do_migration(self.current_env, target, move_source)
                 if decision.block:
                     self.block_plan = [o for o in decision.block if o >= order]
                     self.block_env = target
@@ -523,6 +717,7 @@ class HybridRuntime:
                            env=self.current_env, wait=wait)
         self._emit(T.CELL_EXECUTION_STARTED, cell.cell_id, order=order,
                    env=self.current_env)
+        self._note_prediction(order)
         self._maybe_prefetch(order)
         exec_start = self.clock.now()
         duration = env.execute(cell.source, cell.cost)
@@ -555,4 +750,17 @@ class HybridRuntime:
         return duration
 
     def close(self) -> None:
+        """Dispose the session: cancel in-flight speculations (their bytes
+        are waste — nothing will ever claim them), emit the Table-I disposal
+        message, and detach the context detector's bus subscription
+        (idempotent — subscribers must not leak across sessions)."""
+        if self._closed:
+            return
+        self._closed = True
+        if isinstance(self.engine, PipelinedMigrationEngine):
+            for dst, wasted, pred_order in self.engine.cancel_stale(
+                    set(), now=self.clock.now()):
+                self._emit(T.STATE_PREFETCH_CANCELLED, None, target=dst,
+                           wasted_bytes=wasted, predicted=pred_order)
         self._emit(T.SESSION_DISPOSED, None)
+        self.context.detach()

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.analyzer import _modeled_exec_seconds
 from repro.core.fabric import EnvironmentRegistry
 from repro.core.migration import HybridRuntime
 from repro.core.notebook import Notebook
@@ -91,6 +92,14 @@ class SessionReport:
     makespan: float
     queue_wait: float
     migrations: int
+    prediction_hits: int = 0
+    prediction_total: int = 0
+
+    @property
+    def prediction_hit_rate(self) -> float:
+        if self.prediction_total == 0:
+            return 0.0
+        return self.prediction_hits / self.prediction_total
 
 
 @dataclass
@@ -109,10 +118,19 @@ class ScheduleReport:
     env_utilization: dict[str, float]
     queue_events: int
     makespan: float
+    # predicted per-env demand (modeled seconds the scheduler expected each
+    # env to absorb, from peeked placement decisions) next to the realized
+    # busy-seconds — the queue telemetry's forecast-vs-actual pair
+    predicted_env_seconds: dict[str, float] = field(default_factory=dict)
+    actual_env_seconds: dict[str, float] = field(default_factory=dict)
     total_queue_wait: float = field(init=False)
+    prediction_hit_rate: float = field(init=False)
 
     def __post_init__(self):
         self.total_queue_wait = sum(s.queue_wait for s in self.sessions)
+        hits = sum(s.prediction_hits for s in self.sessions)
+        total = sum(s.prediction_total for s in self.sessions)
+        self.prediction_hit_rate = hits / total if total else 0.0
 
 
 class SessionScheduler:
@@ -149,27 +167,55 @@ class SessionScheduler:
         return self.add_session(rt, plan)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _note_predicted_load(s: _Session, cell_ref,
+                             predicted: dict[str, float]) -> None:
+        """Accumulate the env the cell's placement decision chose and its
+        modeled duration into the forecast telemetry.  The decision is the
+        one ``run_cell`` just made (``runtime.last_decision``) — the
+        forecast is free, no second policy evaluation — while the *actual*
+        side of the pair comes from the arbiter's realized busy-seconds
+        (which diverge e.g. when a serialization failure forces home)."""
+        rt = s.runtime
+        d = rt.last_decision
+        if d is None:
+            return
+        cell = rt.nb.cell(cell_ref)
+        est = 0.0
+        if d.env in rt.registry:
+            # measured per-env history first (real .ipynb cells rarely carry
+            # a declared cost), then declared-cost / speedup
+            est = _modeled_exec_seconds(rt.analyzer, cell, d.env) or 0.0
+        predicted[d.env] = predicted.get(d.env, 0.0) + est
+
     def run(self) -> ScheduleReport:
         """Earliest-clock-first interleave until every session drains."""
+        predicted: dict[str, float] = {n: 0.0 for n in self.registry.names()}
         while True:
             ready = [s for s in self._sessions if not s.done()]
             if not ready:
                 break
             s = min(ready, key=lambda s: s.runtime.clock.now())
             s.runtime.run_cell(s.plan[s.cursor])
+            self._note_predicted_load(s, s.plan[s.cursor], predicted)
             s.cursor += 1
         reports = []
         for s in self._sessions:
-            s.runtime.close()
+            s.runtime.close()          # also detaches its bus subscribers
             reports.append(SessionReport(
                 session=s.runtime.session_id,
                 notebook=s.runtime.nb.name,
                 cells_run=s.cursor,
                 makespan=s.runtime.clock.now(),
                 queue_wait=s.runtime.queue_wait,
-                migrations=s.runtime.migrations))
+                migrations=s.runtime.migrations,
+                prediction_hits=s.runtime.prediction_hits,
+                prediction_total=s.runtime.prediction_total))
         util = {n: self.arbiter.utilization(n) for n in self.registry.names()}
         makespan = max((r.makespan for r in reports), default=0.0)
-        return ScheduleReport(sessions=reports, env_utilization=util,
-                              queue_events=len(self.arbiter.queue_events),
-                              makespan=makespan)
+        return ScheduleReport(
+            sessions=reports, env_utilization=util,
+            queue_events=len(self.arbiter.queue_events),
+            makespan=makespan,
+            predicted_env_seconds=predicted,
+            actual_env_seconds=dict(self.arbiter.busy_seconds))

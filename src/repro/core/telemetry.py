@@ -9,9 +9,9 @@ networked broker can be dropped in.
 from __future__ import annotations
 
 import uuid
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 # Table I — telemetry message types
 SESSION_STARTED = "session-started"
@@ -23,10 +23,12 @@ CELL_MODIFIED = "cell-modified"
 # fabric extensions (beyond Table I): multi-session queueing + pipelining
 CELL_EXECUTION_QUEUED = "cell-execution-queued"
 STATE_PREFETCHED = "state-prefetched"
+STATE_PREFETCH_CANCELLED = "state-prefetch-cancelled"
 
 ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
              CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED,
-             CELL_EXECUTION_QUEUED, STATE_PREFETCHED)
+             CELL_EXECUTION_QUEUED, STATE_PREFETCHED,
+             STATE_PREFETCH_CANCELLED)
 
 
 @dataclass(frozen=True)
@@ -47,14 +49,34 @@ class TelemetryMessage:
 
 
 class MQBus:
-    """Synchronous in-process pub/sub with full history (deterministic)."""
+    """Synchronous in-process pub/sub with bounded history (deterministic).
 
-    def __init__(self):
+    ``history`` is a ring buffer (``history_limit`` most recent messages) so
+    long-lived buses don't pin every message ever published; subscribers can
+    ``unsubscribe`` so sessions don't leak their handlers into later ones."""
+
+    def __init__(self, history_limit: int = 10_000):
         self._subs: dict[str, list[Callable[[TelemetryMessage], None]]] = defaultdict(list)
-        self.history: list[tuple[str, TelemetryMessage]] = []
+        self.history: deque[tuple[str, TelemetryMessage]] = deque(
+            maxlen=int(history_limit))
 
     def subscribe(self, topic: str, fn: Callable[[TelemetryMessage], None]) -> None:
         self._subs[topic].append(fn)
+
+    def unsubscribe(self, topic: str,
+                    fn: Callable[[TelemetryMessage], None]) -> bool:
+        """Remove one subscription; returns False if it wasn't registered
+        (idempotent: detaching twice is not an error)."""
+        subs = self._subs.get(topic, [])
+        if fn in subs:
+            subs.remove(fn)
+            return True
+        return False
+
+    def subscriber_count(self, topic: str | None = None) -> int:
+        if topic is not None:
+            return len(self._subs.get(topic, []))
+        return sum(len(v) for v in self._subs.values())
 
     def publish(self, topic: str, msg: TelemetryMessage) -> None:
         self.history.append((topic, msg))

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.notebook path/to/nb.ipynb \
         --sessions 3 --remote-speedup 10 --policy block \
+        [--model frequency|markov|recency|ensemble] \
         [--bandwidth 1e9] [--latency 0.5] [--codec zlib] [--report out.json] \
         [--env tpu-mesh:40:1] [--link local:tpu-mesh:1e8:1.0] [--pipeline] \
         [--fleet 4]
@@ -60,7 +61,8 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  policy: str = "block", use_knowledge: bool = True,
                  bandwidth: float = 1e9, latency: float = 0.5,
                  codec: str = "zlib", extra_envs=(), links=(),
-                 pipeline: bool = False, fleet: int = 0) -> dict:
+                 pipeline: bool = False, fleet: int = 0,
+                 model: str | None = None) -> dict:
     with open(path) as f:
         nb = Notebook.from_ipynb(json.load(f))
     registry = build_registry(remote_speedup=remote_speedup,
@@ -80,27 +82,33 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
             sched.add_notebook(session_nb, plan=plan,
                                reducer=StateReducer(codec=codec),
                                policy=policy, use_knowledge=use_knowledge,
-                               pipeline=pipeline)
+                               pipeline=pipeline, model=model)
         rep = sched.run()
         report = {
             "notebook": nb.name,
             "fleet": fleet,
             "sessions_each": sessions,
             "policy": policy,
+            "model": model or "frequency",
             "makespan": rep.makespan,
             "total_queue_wait": rep.total_queue_wait,
             "queue_events": rep.queue_events,
             "env_utilization": rep.env_utilization,
+            "prediction_hit_rate": rep.prediction_hit_rate,
+            "predicted_env_seconds": rep.predicted_env_seconds,
+            "actual_env_seconds": rep.actual_env_seconds,
             "per_session": [
                 {"session": s.session[:8], "makespan": s.makespan,
-                 "queue_wait": s.queue_wait, "migrations": s.migrations}
+                 "queue_wait": s.queue_wait, "migrations": s.migrations,
+                 "prediction_hit_rate": s.prediction_hit_rate}
                 for s in rep.sessions],
         }
         return report, nb
 
     rt = HybridRuntime(
         nb, registry=registry, reducer=StateReducer(codec=codec),
-        policy=policy, use_knowledge=use_knowledge, pipeline=pipeline)
+        policy=policy, use_knowledge=use_knowledge, pipeline=pipeline,
+        model=model)
 
     for _ in range(sessions):
         for cell in code:
@@ -118,9 +126,13 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         "local_only_seconds": local_only or None,
         "speedup_vs_local": (local_only / rt.clock.now()
                              if local_only and rt.clock.now() else None),
+        "model": rt.context.model.name,
         "migrations": rt.migrations,
         "migrated_bytes": sum(m.nbytes for m in rt.engine.log),
         "prefetch_hits": getattr(rt.engine, "prefetch_hits", 0),
+        "prefetch_wasted_bytes": getattr(rt.engine,
+                                         "prefetch_wasted_bytes", 0),
+        "prediction_hit_rate": rt.prediction_hit_rate,
         "decisions": {c.cell_id: c.annotations[-1] if c.annotations else None
                       for c in code},
         "provenance_records": len(rt.kb.provenance),
@@ -133,8 +145,14 @@ def main():
     ap.add_argument("notebook")
     ap.add_argument("--sessions", type=int, default=3)
     ap.add_argument("--remote-speedup", type=float, default=10.0)
-    ap.add_argument("--policy", choices=["single", "block", "cost"],
+    ap.add_argument("--policy",
+                    choices=["single", "block", "cost", "horizon"],
                     default="block")
+    ap.add_argument("--model",
+                    choices=["frequency", "markov", "recency", "ensemble"],
+                    default=None,
+                    help="interaction model (default: the paper's "
+                         "Algorithm-1 frequency miner)")
     ap.add_argument("--no-knowledge", action="store_true")
     ap.add_argument("--bandwidth", type=float, default=1e9)
     ap.add_argument("--latency", type=float, default=0.5)
@@ -157,7 +175,8 @@ def main():
         remote_speedup=args.remote_speedup, policy=args.policy,
         use_knowledge=not args.no_knowledge, bandwidth=args.bandwidth,
         latency=args.latency, codec=args.codec, extra_envs=args.env,
-        links=args.link, pipeline=args.pipeline, fleet=args.fleet)
+        links=args.link, pipeline=args.pipeline, fleet=args.fleet,
+        model=args.model)
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))

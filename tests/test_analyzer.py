@@ -104,3 +104,68 @@ def test_algorithm2_updates_kb():
     # linear fit sanity
     a, b = fit_linear([1, 2, 3], [51.5, 73.0, 94.5])
     assert abs(a - 21.5) < 1e-6 and abs(b - 30.0) < 1e-6
+
+
+def _horizon_fixture():
+    from repro.core import EnvironmentRegistry
+    reg = EnvironmentRegistry(default_bandwidth=1e9, default_latency=2.0)
+    from repro.core import ExecutionEnvironment
+    reg.register(ExecutionEnvironment("local"), home=True)
+    reg.register(ExecutionEnvironment("remote", speedup=10.0))
+    kb = KnowledgeBase()
+    ctxd = ContextDetector("markov")
+    perf = PerfModel()
+    an = MigrationAnalyzer(kb, ctxd, perf, policy="horizon",
+                           use_knowledge=False, registry=reg, horizon=4)
+    an.observe_state_size("nb", 1.0)
+    nb = Notebook("nb")
+    cells = [nb.add_cell(f"s{i} = work_{i}()", cost=8.0) for i in range(4)]
+    for c in cells:
+        perf.observe(c.cell_id, "local", 8.0)
+        perf.observe(c.cell_id, "remote", 0.8)
+    return an, ctxd, nb, cells
+
+
+def test_horizon_policy_amortizes_over_expected_block():
+    """Each cell alone is NOT worth a round trip (0.8 + 2x2s > 8s is false —
+    make migration heavy enough that a single cell loses but the expected
+    4-cell block wins): the DP must see the predicted continuation."""
+    an, ctxd, nb, cells = _horizon_fixture()
+    # migration latency 2s: single-cell 0.8 + 4.0 < 8.0 still wins, so
+    # raise the bar: latency such that one cell loses, four cells win
+    an.registry.connect("local", "remote", latency=10.0)
+    # history: the 0-1-2-3 loop, strongly predicted by the markov model
+    for _ in range(5):
+        for o in range(4):
+            ctxd.record("nb", o)
+    d = an.decide(nb, cells[0], current_env="local")
+    # expected block cost remote: 4*0.8 + 10 + 10 = 23.2 < local 32
+    assert d.env == "remote" and d.migrate
+    assert d.policy == "horizon"
+    assert 1 in d.block and len(d.block) >= 2
+    assert "horizon" in cells[0].annotations[-1]
+
+    # a single isolated cell (no predicted continuation) must NOT migrate:
+    # 0.8 + 10 + 10 > 8
+    ctxd2 = ContextDetector("markov")
+    an2, _, nb2, cells2 = _horizon_fixture()
+    an2.registry.connect("local", "remote", latency=10.0)
+    an2.context = ctxd2                  # fresh model: no history at all
+    d2 = an2.decide(nb2, cells2[0], current_env="local")
+    assert d2.env == "local" and not d2.migrate
+
+
+def test_horizon_policy_no_history_stays_home():
+    an, ctxd, nb, cells = _horizon_fixture()
+    nb2 = Notebook("nb2")
+    c = nb2.add_cell("q = 1")            # no cost, no perf history
+    d = an.decide(nb2, c, current_env="local")
+    assert d.env == "local" and not d.migrate
+    assert "no history" in d.reason
+
+
+def test_horizon_requires_registry():
+    import pytest
+    with pytest.raises(ValueError):
+        MigrationAnalyzer(KnowledgeBase(), ContextDetector(),
+                          policy="horizon")

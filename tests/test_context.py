@@ -70,3 +70,65 @@ def test_detector_consumes_telemetry():
             notebook="nb", cell_ids=ids, session="s", path="p",
             payload={"order": order}))
     assert det.history["nb"] == [0, 1, 2]
+
+
+def test_detector_drops_event_for_deleted_cell():
+    """A completion event whose cell was deleted/renamed mid-session (and
+    has no explicit order) must be dropped, not crash the bus dispatch."""
+    from repro.core import telemetry as T
+    bus = T.MQBus()
+    det = ContextDetector()
+    det.attach(bus)
+    bus.publish("telemetry", T.TelemetryMessage(
+        datetime=0.0, type=T.CELL_EXECUTION_COMPLETED, cell_id="gone",
+        notebook="nb", cell_ids=("a", "b"), session="s", path="p"))
+    assert det.history["nb"] == []          # dropped gracefully
+    # a well-formed event afterwards still lands
+    bus.publish("telemetry", T.TelemetryMessage(
+        datetime=0.0, type=T.CELL_EXECUTION_COMPLETED, cell_id="a",
+        notebook="nb", cell_ids=("a", "b"), session="s", path="p"))
+    assert det.history["nb"] == [0]
+
+
+def test_bus_unsubscribe_and_detach():
+    from repro.core import telemetry as T
+    bus = T.MQBus()
+    det = ContextDetector()
+    det.attach(bus)
+    assert bus.subscriber_count("telemetry") == 1
+    det.detach()
+    assert bus.subscriber_count("telemetry") == 0
+    bus.publish("telemetry", T.TelemetryMessage(
+        datetime=0.0, type=T.CELL_EXECUTION_COMPLETED, cell_id="a",
+        notebook="nb", cell_ids=("a",), session="s", path="p",
+        payload={"order": 0}))
+    assert det.history["nb"] == []          # detached: no delivery
+    assert det.detach() is None             # idempotent
+    assert bus.unsubscribe("telemetry", det.on_message) is False
+
+
+def test_bus_history_ring_buffer():
+    from repro.core import telemetry as T
+    bus = T.MQBus(history_limit=3)
+    for i in range(10):
+        bus.publish("telemetry", T.TelemetryMessage(
+            datetime=float(i), type=T.CELL_EXECUTION_COMPLETED, cell_id="a",
+            notebook="nb", cell_ids=("a",), session="s", path="p",
+            payload={"order": i}))
+    msgs = bus.messages()
+    assert len(msgs) == 3                   # bounded, not the full 10
+    assert [m.payload["order"] for m in msgs] == [7, 8, 9]
+
+
+def test_detector_with_pluggable_model():
+    det = ContextDetector("markov")
+    for _ in range(4):
+        for o in (0, 1, 2):
+            det.record("nb", o)
+    assert det.model.name == "markov"
+    dist = det.distribution("nb", 1)
+    assert abs(sum(dist.values()) - 1.0) < 1e-9
+    assert det.predict_next("nb", 1) == 2
+    assert det.history["nb"][:3] == [0, 1, 2]   # history still recorded
+    # Algorithm-1 stats stay served (reference rescan for non-freq models)
+    assert det.stats("nb")

@@ -319,3 +319,28 @@ def test_simulator_registry_matches_scalars():
         fabric = simulate(tr, policy, registry=reg)
         assert fabric.total_seconds == pytest.approx(scalar.total_seconds)
         assert fabric.migrations == scalar.migrations
+
+
+# ----------------------------------------------------------------------
+# scheduler prediction telemetry
+# ----------------------------------------------------------------------
+
+def test_scheduler_reports_prediction_telemetry():
+    reg = _three_env_registry()
+    sched = SessionScheduler(reg)
+    for _ in range(2):
+        sched.add_notebook(_heavy_nb(), policy="cost", use_knowledge=False,
+                           pipeline=True)
+    report = sched.run()
+    # per-session hit-rate fields exist and are sane
+    for s in report.sessions:
+        assert s.prediction_total >= 0
+        assert 0.0 <= s.prediction_hit_rate <= 1.0
+    assert 0.0 <= report.prediction_hit_rate <= 1.0
+    # predicted per-env load telemetry sits next to the realized one
+    assert set(report.predicted_env_seconds) == set(reg.names())
+    assert sum(report.predicted_env_seconds.values()) > 0.0
+    assert set(report.actual_env_seconds) == set(reg.names())
+    # sessions were closed -> their bus subscribers were detached
+    for s in sched._sessions:
+        assert s.runtime.bus.subscriber_count("telemetry") == 0

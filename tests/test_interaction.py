@@ -1,0 +1,240 @@
+"""Interaction models (predictive decision-plane subsystem)."""
+from _hyp_compat import given, settings, st
+
+from repro.core.context import sequence_stats
+from repro.core.interaction import (
+    ConfidenceGate, EnsembleModel, FrequencyModel, MarkovModel, RecencyModel,
+    make_model,
+)
+
+
+# ----------------------------------------------------------------------
+# FrequencyModel: incremental Algorithm 1 == reference rescan, bit for bit
+# ----------------------------------------------------------------------
+
+def _legacy_predict(hist, cur):
+    stats = sequence_stats(hist, cur)
+    if not stats:
+        return (cur,), 0.0, 0
+    best, score = max(stats.items(), key=lambda kv: (kv[1], len(kv[0])))
+    i = best.index(cur)
+    return best[i:], score, len(stats)
+
+
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=50))
+@settings(max_examples=150, deadline=None)
+def test_frequency_stats_bit_identical_to_rescan(hist):
+    m = FrequencyModel()
+    seen = []
+    for o in hist:
+        m.observe("nb", o)
+        seen.append(o)
+        for cur in [None] + sorted(set(seen)) + [99]:
+            ref = sequence_stats(seen, cur)
+            got = m.stats("nb", cur)
+            # values AND dict ordering must match: the legacy tie-breaking
+            # in predict_block_scored depends on iteration order
+            assert list(ref.items()) == list(got.items())
+
+
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=40))
+@settings(max_examples=150, deadline=None)
+def test_frequency_predict_bit_identical_to_rescan(hist):
+    m = FrequencyModel()
+    seen = []
+    for o in hist:
+        m.observe("nb", o)
+        seen.append(o)
+        for cur in sorted(set(seen)):
+            assert m.predict_block_scored("nb", cur) == _legacy_predict(seen, cur)
+
+
+@given(st.lists(st.integers(0, 9), min_size=2, max_size=60))
+@settings(max_examples=150, deadline=None)
+def test_frequency_subset_count_invariants(hist):
+    """Subset-count invariants of Algorithm 1: scores normalize to 100, are
+    positive, and a contiguous subsequence never scores below a sequence
+    that contains it (its subtotal includes every container's count)."""
+    m = FrequencyModel()
+    for o in hist:
+        m.observe("nb", o)
+    stats = m.stats("nb")
+    assert stats, "non-empty history must yield stats"
+    assert abs(sum(stats.values()) - 100.0) < 1e-6
+    assert all(v > 0 for v in stats.values())
+    seqs = list(stats)
+    for a in seqs:
+        for b in seqs:
+            if a != b and len(a) <= len(b):
+                n, mlen = len(a), len(b)
+                if any(b[i:i + n] == a for i in range(mlen - n + 1)):
+                    assert stats[a] >= stats[b]
+
+
+def test_frequency_per_notebook_isolation_and_reset():
+    m = FrequencyModel()
+    for o in (0, 1, 2, 0, 1, 2):
+        m.observe("a", o)
+    assert m.stats("a") and not m.stats("b")
+    m.reset("a")
+    assert not m.stats("a")
+
+
+# ----------------------------------------------------------------------
+# MarkovModel
+# ----------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 8), min_size=2, max_size=60))
+@settings(max_examples=150, deadline=None)
+def test_markov_distribution_normalizes(hist):
+    m = MarkovModel(order=2)
+    for o in hist:
+        m.observe("nb", o)
+    for cur in set(hist) | {42}:
+        dist = m.distribution("nb", cur)
+        assert dist, "seen vocabulary must always yield a distribution"
+        assert abs(sum(dist.values()) - 1.0) < 1e-9
+        assert all(p > 0 for p in dist.values())  # Laplace smoothing
+
+
+def test_markov_uses_higher_order_context():
+    # 0 -> 1 after 5, but 0 -> 2 after 7: order-2 disambiguates
+    m = MarkovModel(order=2, alpha=0.1)
+    for _ in range(5):
+        for o in (5, 0, 1, 7, 0, 2):
+            m.observe("nb", o)
+    # tail ends ...,0,2 — simulate context (7, 0):
+    m.observe("nb", 7)
+    assert m.predict_next("nb", 0) == 2
+    m.observe("nb", 0)
+    m.observe("nb", 2)
+    m.observe("nb", 5)
+    assert m.predict_next("nb", 0) == 1
+
+
+def test_markov_block_rollout():
+    m = MarkovModel(order=1)
+    for _ in range(6):
+        for o in (0, 1, 2, 3):
+            m.observe("nb", o)
+    block, score, ncand = m.predict_block_scored("nb", 1)
+    assert block[0] == 1 and 2 in block
+    assert score > 50.0 and ncand >= 1
+
+
+# ----------------------------------------------------------------------
+# RecencyModel: drift does not fossilize
+# ----------------------------------------------------------------------
+
+def test_recency_adapts_to_drift():
+    m = RecencyModel(decay=0.8)
+    for _ in range(50):
+        m.observe("nb", 0)
+        m.observe("nb", 1)          # regime A: 0 -> 1
+    for _ in range(6):
+        m.observe("nb", 0)
+        m.observe("nb", 2)          # regime B: 0 -> 2
+    assert m.predict_next("nb", 0) == 2
+
+    # an undecayed counter would still say 1 (50 vs 6 observations)
+    counts = MarkovModel(order=1, alpha=0.0)
+    for _ in range(50):
+        counts.observe("nb", 0)
+        counts.observe("nb", 1)
+    for _ in range(6):
+        counts.observe("nb", 0)
+        counts.observe("nb", 2)
+    assert counts.predict_next("nb", 0) == 1
+
+
+def test_recency_distribution_normalizes():
+    m = RecencyModel()
+    for o in (0, 1, 0, 2, 0, 1):
+        m.observe("nb", o)
+    dist = m.distribution("nb", 0)
+    assert abs(sum(dist.values()) - 1.0) < 1e-9
+    assert set(dist) == {1, 2}
+
+
+# ----------------------------------------------------------------------
+# EnsembleModel
+# ----------------------------------------------------------------------
+
+def test_ensemble_reweights_toward_better_member():
+    m = EnsembleModel()
+    w0 = dict(zip((mm.name for mm in m.models), m.weights))
+    # drifting trace: recency should gain weight over raw frequency
+    for _ in range(30):
+        for o in (0, 1, 2, 3):
+            m.observe("nb", o)
+    for _ in range(30):
+        for o in (0, 3, 1, 2):
+            m.observe("nb", o)
+    w1 = dict(zip((mm.name for mm in m.models), m.weights))
+    assert abs(sum(m.weights) - 1.0) < 1e-9
+    assert w1["recency"] > w0["recency"]
+    dist = m.distribution("nb", 0)
+    assert abs(sum(dist.values()) - 1.0) < 1e-9
+
+
+# ----------------------------------------------------------------------
+# ConfidenceGate
+# ----------------------------------------------------------------------
+
+def test_gate_tightens_on_misses_and_relaxes_on_hits():
+    g = ConfidenceGate(threshold=0.5)
+    t0 = g.threshold
+    for _ in range(30):
+        g.observe(False)
+    assert g.threshold > t0            # misses -> stricter admission
+    t_miss = g.threshold
+    for _ in range(60):
+        g.observe(True)
+    assert g.threshold < t_miss        # hits -> relaxed admission
+    lo, hi = g.bounds
+    assert lo <= g.threshold <= hi
+    assert g.issued == 90 and g.hits == 60
+    assert g.allow(0.99) and not g.allow(0.0)
+
+
+def test_make_model_registry():
+    assert make_model(None).name == "frequency"
+    assert make_model("markov").name == "markov"
+    inst = RecencyModel()
+    assert make_model(inst) is inst
+    try:
+        make_model("nope")
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("unknown model name must raise")
+
+
+def test_block_rollout_stops_at_wraparound():
+    """Blocks are non-decreasing runs (paper §II-B): on a loop trace the
+    rollout must end at the loop restart instead of promising a wrapped
+    block the runtime's plan bookkeeping would silently truncate."""
+    for model in (MarkovModel(order=1), RecencyModel()):
+        for _ in range(8):
+            for o in (0, 1, 2, 3):
+                model.observe("nb", o)
+        block, _score, _n = model.predict_block_scored("nb", 3)
+        assert block == (3,), model.name          # not (3, 0, 1, 2)
+        block, _score, _n = model.predict_block_scored("nb", 1)
+        assert block[0] == 1 and list(block) == sorted(block), model.name
+
+
+def test_gate_recovers_after_latching_high():
+    """The threshold only rises on issued outcomes; rejections must decay a
+    latched-high threshold back toward its initial value, or a miss storm
+    would disable speculation permanently."""
+    g = ConfidenceGate(threshold=0.35)
+    for _ in range(200):
+        g.observe(False)                    # miss storm: latches high
+    assert g.threshold > 0.9
+    assert not g.allow(0.8)
+    for _ in range(200):
+        g.rejected()                        # nothing admitted -> decay
+    assert abs(g.threshold - 0.35) < 0.01   # back to the baseline gate
+    assert g.allow(0.8)
+    assert g.rejections == 200

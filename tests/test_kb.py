@@ -1,0 +1,79 @@
+"""Knowledge base: EWMA thresholds, bounded provenance export, predictions."""
+import json
+
+from repro.core import KnowledgeBase, ParamEstimate, ProvRecord
+
+
+def test_param_update_overwrite_by_default():
+    kb = KnowledgeBase()
+    kb.seed("epochs", 50.0)
+    kb.update("epochs", 7.0)
+    kb.update("epochs", 9.0)
+    assert kb.get("epochs").threshold == 9.0      # paper behaviour preserved
+    assert kb.get("epochs").source == "learned"
+
+
+def test_param_update_ewma_smoothing():
+    kb = KnowledgeBase()
+    kb.seed("epochs", 50.0, smoothing=0.5)
+    kb.update("epochs", 10.0)     # first learned value replaces the prior
+    assert kb.get("epochs").threshold == 10.0
+    kb.update("epochs", 20.0)     # then updates blend: 0.5*20 + 0.5*10
+    assert abs(kb.get("epochs").threshold - 15.0) < 1e-9
+    kb.update("epochs", 15.0)
+    assert abs(kb.get("epochs").threshold - 15.0) < 1e-9
+    assert kb.get("epochs").history == [10.0, 15.0, 15.0]
+
+
+def test_ewma_respects_valid_range():
+    est = ParamEstimate("p", 5.0, valid_range=(1.0, 10.0), smoothing=0.9)
+    est.update(100.0)             # clamped before and after blending
+    assert est.threshold <= 10.0
+    est.update(-50.0)
+    assert est.threshold >= 1.0
+
+
+def test_export_json_bounded_and_serializable():
+    kb = KnowledgeBase()
+    kb.seed("epochs", 50.0)
+    for i in range(40):
+        kb.record(ProvRecord("cell-run", f"c{i}", "local", float(i),
+                             float(i) + 1.0,
+                             params={"obj": object()}))   # non-JSON value
+    out = json.loads(kb.export_json(max_records=5))
+    assert out["exported_records"] == 5
+    assert out["total_records"] == 40
+    assert [r["cell_id"] for r in out["records"]] == \
+        [f"c{i}" for i in range(35, 40)]                  # most recent last
+    assert "epochs" in out["params"]
+    assert out["params"]["epochs"]["threshold"] == 50.0
+
+
+def test_export_json_kind_filter():
+    kb = KnowledgeBase()
+    kb.record(ProvRecord("cell-run", "c0", "local", 0.0, 1.0))
+    kb.record(ProvRecord("migration", None, "remote", 1.0, 2.0))
+    out = json.loads(kb.export_json(kind="migration"))
+    assert len(out["records"]) == 1
+    assert out["records"][0]["kind"] == "migration"
+
+
+def test_record_prediction_provenance():
+    kb = KnowledgeBase()
+    rec = kb.record_prediction("c1", "nb", {2: 0.7, 3: 0.2, 4: 0.1},
+                               realized=2, when=5.0)
+    assert rec.kind == "prediction"
+    assert rec.params["hit"] is True
+    assert rec.params["prob_realized"] == 0.7
+    assert rec.params["predicted"][0] == [2, 0.7]
+    miss = kb.record_prediction("c2", "nb", {2: 0.7, 3: 0.3}, realized=3)
+    assert miss.params["hit"] is False
+    assert len(kb.records("prediction")) == 2
+
+
+def test_export_json_zero_records():
+    kb = KnowledgeBase()
+    kb.record(ProvRecord("cell-run", "c0", "local", 0.0, 1.0))
+    out = json.loads(kb.export_json(max_records=0))
+    assert out["records"] == [] and out["exported_records"] == 0
+    assert out["total_records"] == 1

@@ -155,3 +155,159 @@ def test_forced_env_and_provenance():
     assert "z" in rt.envs["remote"].state.ns
     migs = rt.kb.records("migration")
     assert migs and migs[0].env == "remote"
+
+
+# ----------------------------------------------------------------------
+# confidence-gated speculative prefetch (decision plane over the pipeline)
+# ----------------------------------------------------------------------
+
+def _prefetch_pair():
+    from repro.core import EnvironmentRegistry
+    reg = EnvironmentRegistry(default_bandwidth=1e6, default_latency=1.0)
+    l = reg.register(ExecutionEnvironment("local"), home=True)
+    r = reg.register(ExecutionEnvironment("remote", speedup=10.0))
+    l.execute("import numpy as np\n"
+              "data = np.arange(250_000, dtype=np.float64)\n"
+              "def use(x):\n    return float(x.sum())\n")
+    return reg, l, r
+
+
+def test_prefetch_gate_rejects_low_confidence():
+    from repro.core import ConfidenceGate, PipelinedMigrationEngine
+    reg, l, r = _prefetch_pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg,
+                                   gate=ConfidenceGate(threshold=0.5))
+    assert eng.begin_prefetch(l, r, "out = use(data)", now=0.0,
+                              prob=0.2) is None
+    assert eng.prefetch_gated == 1 and eng.prefetch_issued == 0
+    # clearing the threshold admits the speculation
+    p = eng.begin_prefetch(l, r, "out = use(data)", now=0.0, prob=0.9)
+    assert p is not None and eng.prefetch_issued == 1
+    # planned transfers (prob=None) always bypass the gate
+    eng2 = PipelinedMigrationEngine(StateReducer("none"), registry=reg,
+                                    gate=ConfidenceGate(threshold=0.99))
+    assert eng2.begin_prefetch(l, r, "out = use(data)", now=0.0) is not None
+
+
+def test_cancelled_prefetch_accounts_wasted_bytes():
+    from repro.core import PipelinedMigrationEngine
+    reg, l, r = _prefetch_pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    p = eng.begin_prefetch(l, r, "out = use(data)", now=0.0, prob=0.9,
+                           predicted_order=2)
+    assert p is not None
+    # cancel after the transfer fully completed: every byte was wasted
+    stale = eng.cancel_stale(keep=set(), now=p.ready_at + 1.0)
+    assert stale == [("remote", p.nbytes, 2)]
+    assert eng.prefetch_cancelled == 1
+    assert eng.prefetch_wasted_bytes == p.nbytes
+    # the pending claim is gone: a later migrate pays synchronously...
+    res = eng.migrate(l, r, "out = use(data)", now=p.ready_at + 1.0)
+    assert res.prefetched == ()
+    # ...but completed chunks were banked into the receiver's CAS, so the
+    # wire bytes collapse to the manifest (waste is time, not a re-send)
+    assert res.nbytes < p.nbytes / 10
+
+
+def test_partial_cancel_wastes_only_delivered_fraction():
+    from repro.core import PipelinedMigrationEngine
+    reg, l, r = _prefetch_pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    p = eng.begin_prefetch(l, r, "out = use(data)", now=0.0, prob=0.9)
+    mid = p.started_at + (p.ready_at - p.started_at) / 2.0
+    wasted = eng.cancel_prefetch("remote", now=mid)
+    assert 0 < wasted < p.nbytes            # only what already streamed
+    assert eng.prefetch_wasted_bytes == wasted
+
+
+def test_stale_claim_sets_wasted_bytes_on_result():
+    from repro.core import PipelinedMigrationEngine
+    reg, l, r = _prefetch_pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    p = eng.begin_prefetch(l, r, "out = use(data)", now=0.0, prob=0.9)
+    # the overlapped cell redefines the array the speculation carried: its
+    # bytes (nearly all of the snapshot) streamed for nothing
+    l.execute("data = np.ones(10)")
+    eng.invalidate("local", {"data"})
+    res = eng.migrate(l, r, "out = use(data)", now=p.ready_at + 1.0)
+    assert "data" in res.names and "data" not in res.prefetched
+    assert res.wasted_prefetch_bytes > p.nbytes * 0.9
+    assert eng.prefetch_wasted_bytes == res.wasted_prefetch_bytes
+
+
+def test_superseded_speculation_cancelled_on_reissue():
+    from repro.core import PipelinedMigrationEngine
+    reg, l, r = _prefetch_pair()
+    eng = PipelinedMigrationEngine(StateReducer("none"), registry=reg)
+    p1 = eng.begin_prefetch(l, r, "out = use(data)", now=0.0, prob=0.9)
+    l.execute("data = np.arange(9.0)")
+    eng.invalidate("local", {"data"})
+    p2 = eng.begin_prefetch(l, r, "out = use(data)", now=1.0, prob=0.9)
+    assert p2 is not None and eng.prefetch_cancelled == 1
+    assert eng.prefetch_wasted_bytes > 0        # p1's delivered fraction
+
+
+def test_runtime_prediction_provenance_and_hit_rate():
+    nb, rt = _runtime(pipeline=True)
+    for _ in range(3):
+        for i in range(4):
+            rt.run_cell(i)
+    rt.close()
+    assert rt.prediction_total > 0
+    assert 0.0 <= rt.prediction_hit_rate <= 1.0
+    preds = rt.kb.records("prediction")
+    assert preds
+    p = preds[-1].params
+    assert "predicted" in p and "realized" in p and "hit" in p
+    # close() detached the context detector from the bus
+    assert rt.bus.subscriber_count("telemetry") == 0
+
+
+def test_block_migration_ships_whole_block_state():
+    """Regression: committing to a block must move the state every in-block
+    cell needs — later block cells run without migrating, so an input used
+    only by a later cell (xs below) has to travel with the block commit."""
+    nb = Notebook("block-state")
+    nb.add_cell("import numpy as np\nxs = np.arange(100.0)", cost=0.1)
+    nb.add_cell("ys = xs * 2", cost=0.2)
+    nb.add_cell("z = float((ys ** 2).sum())", cost=40.0)
+    nb.add_cell("m = z / xs.size", cost=25.0)   # needs xs, not just z
+    nb.add_cell("out = m + 1", cost=0.1)
+    rt = HybridRuntime(
+        nb, envs={"local": ExecutionEnvironment("local"),
+                  "remote": ExecutionEnvironment("remote", speedup=10.0)},
+        policy="block", use_knowledge=False, latency=0.5, bandwidth=1e8)
+    for _ in range(3):
+        for i in range(len(nb.cells)):
+            rt.run_cell(i)       # raised NameError('xs') before the fix
+    rt.close()
+    assert rt.migrations > 0
+    assert rt.envs["local"].state["out"] == rt.envs["local"].state["m"] + 1
+
+
+def test_close_cancels_inflight_speculations():
+    """A session's final prefetch is never claimed: close() must cancel it
+    so its bytes land in the waste accounting (and telemetry)."""
+    from repro.core import PipelinedMigrationEngine
+    nb, rt = _runtime(pipeline=True)
+    for _ in range(2):
+        for i in range(4):
+            rt.run_cell(i)
+    eng = rt.engine
+    assert isinstance(eng, PipelinedMigrationEngine)
+    # force a dangling speculation of never-synced state, let the transfer
+    # stream for a while, then close mid-flight
+    rt.envs["local"].execute("import numpy as _np\n"
+                             "bulk = _np.arange(50_000, dtype=_np.float64)")
+    p = eng.begin_prefetch(rt.envs["local"], rt.envs["remote"],
+                           "q = float(bulk.sum())", now=rt.clock.now(),
+                           prob=0.9)
+    assert p is not None and p.nbytes > 0
+    rt.clock.advance(p.ready_at - p.started_at)      # fully streamed
+    wasted_before = eng.prefetch_wasted_bytes
+    rt.close()
+    assert eng._pending == {}
+    assert eng.prefetch_wasted_bytes > wasted_before
+    types = [m.type for m in rt.bus.messages()]
+    assert T.STATE_PREFETCH_CANCELLED in types
+    assert types[-1] == T.SESSION_DISPOSED
