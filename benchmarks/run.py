@@ -22,6 +22,7 @@ MODULES = [
     "bench_fabric",               # N-env fabric / pipeline / scheduler
     "bench_state_plane",          # CAS chunk delta vs whole-name baseline
     "bench_context",              # interaction models / prefetch gate
+    "bench_fleet",                # event-driven fleet: arrivals/failures/scaling
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]

@@ -10,21 +10,26 @@ from repro.core.chunkstore import (
     digest_bytes, split_chunks,
 )
 from repro.core.context import ContextDetector, get_sequences, sequence_stats
-from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment, Link
+from repro.core.events import Event, EventLoop
+from repro.core.fabric import (
+    LIFECYCLE, EnvironmentRegistry, ExecutionEnvironment, Link,
+)
 from repro.core.interaction import (
     MODELS, ConfidenceGate, EnsembleModel, FrequencyModel, InteractionModel,
     MarkovModel, RecencyModel, make_model,
 )
 from repro.core.kb import KnowledgeBase, ParamEstimate, ProvRecord
 from repro.core.migration import (
-    HybridRuntime, MigrationEngine, MigrationResult, PipelinedMigrationEngine,
+    EnvFailure, HybridRuntime, MigrationEngine, MigrationResult,
+    PipelinedMigrationEngine,
 )
 from repro.core.notebook import Cell, Notebook
 from repro.core.reducer import (
     SerializationFailure, SerializedState, StateReducer,
 )
 from repro.core.scheduler import (
-    CapacityArbiter, ScheduleReport, SessionReport, SessionScheduler,
+    AutoscalePolicy, CapacityArbiter, ScheduleReport, SessionCheckpointer,
+    SessionReport, SessionScheduler, WorkloadTrace,
 )
 from repro.core.simclock import SimClock, WallClock
 from repro.core.simulator import (
@@ -40,15 +45,18 @@ __all__ = [
     "fit_linear", "intersection", "substitute_kwarg", "CHUNK_BYTES",
     "DiskChunkStore", "MemoryChunkStore", "array_chunk_digests",
     "digest_bytes", "split_chunks", "ContextDetector",
-    "get_sequences", "sequence_stats", "EnvironmentRegistry",
-    "ExecutionEnvironment", "Link",
+    "get_sequences", "sequence_stats", "Event", "EventLoop", "LIFECYCLE",
+    "EnvironmentRegistry", "ExecutionEnvironment", "Link",
     "MODELS", "ConfidenceGate", "EnsembleModel", "FrequencyModel",
     "InteractionModel", "MarkovModel", "RecencyModel", "make_model",
     "KnowledgeBase", "ParamEstimate",
-    "ProvRecord", "HybridRuntime", "MigrationEngine", "MigrationResult",
+    "ProvRecord", "EnvFailure", "HybridRuntime", "MigrationEngine",
+    "MigrationResult",
     "PipelinedMigrationEngine", "Cell", "Notebook", "SerializationFailure",
-    "SerializedState", "StateReducer", "CapacityArbiter", "ScheduleReport",
-    "SessionReport", "SessionScheduler", "SimClock", "WallClock", "Trace",
+    "SerializedState", "StateReducer", "AutoscalePolicy", "CapacityArbiter",
+    "ScheduleReport", "SessionCheckpointer",
+    "SessionReport", "SessionScheduler", "WorkloadTrace", "SimClock",
+    "WallClock", "Trace",
     "TRACES", "cell_frequency", "policy_grid", "simulate",
     "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",
 ]

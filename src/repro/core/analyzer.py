@@ -268,6 +268,10 @@ class CostMatrixPolicy(PlacementPolicy):
         known_any = False
         for env_name in [an.home] + an.candidates():
             total = an.pair_migration_time(state, current_env, env_name)
+            # fleet overhead: a still-provisioning env pays its remaining
+            # cold start, a saturated one its expected queue wait — so a
+            # cold env is not chosen for a short cell (0 without a fleet)
+            total += an.env_overhead(env_name)
             if env_name != an.home:
                 total += an.pair_migration_time(state, env_name, an.home)
             for o in block:
@@ -387,6 +391,7 @@ class HorizonPolicy(PlacementPolicy):
         succ.reverse()
 
         costs = {e: an.pair_migration_time(state, current_env, e) + V[e]
+                 + an.env_overhead(e)
                  for e in envs}
         best = min(costs, key=lambda e: (costs[e], e != an.home))
         matrix = ", ".join(f"{e}={t:.2f}s" for e, t in costs.items())
@@ -454,6 +459,10 @@ class MigrationAnalyzer:
         self.migration_bandwidth = migration_bandwidth
         self.registry = registry
         self.horizon = int(horizon)
+        # fleet plane attaches an object with overhead_seconds(env) here so
+        # cost/horizon placement prices provisioning delay + queue depth;
+        # None (the default) keeps the paper's decisions bit-identical
+        self.fleet_view = None
         self.state_size_estimate: dict[str, float] = defaultdict(lambda: 1e6)
         self._chain: list[PlacementPolicy] = []
         if use_knowledge:
@@ -498,6 +507,14 @@ class MigrationAnalyzer:
 
     def observe_state_size(self, notebook: str, nbytes: float) -> None:
         self.state_size_estimate[notebook] = float(nbytes)
+
+    def env_overhead(self, env_name: str) -> float:
+        """Fleet-plane surcharge for targeting ``env_name`` right now:
+        remaining provisioning cold-start + expected queue wait.  Zero
+        without an attached fleet view (the paper's always-on dyad)."""
+        if self.fleet_view is None:
+            return 0.0
+        return float(self.fleet_view.overhead_seconds(env_name))
 
     # ------------------------------------------------------------------
     def decide(self, nb: Notebook, cell: Cell, *,

@@ -23,6 +23,18 @@ from repro.core.chunkstore import DiskChunkStore, MemoryChunkStore
 from repro.core.state import ExecutionState
 
 
+# lifecycle state machine: which transitions an environment may take.
+# ``up`` is the default (and the paper's implicit state — its two envs are
+# always on); everything else is fleet-plane machinery.
+LIFECYCLE = {
+    "provisioning": {"up", "failed", "down"},
+    "up": {"draining", "failed", "down"},
+    "draining": {"down", "failed", "up"},   # draining can be cancelled
+    "down": {"provisioning"},
+    "failed": {"provisioning"},
+}
+
+
 class ExecutionEnvironment:
     """A place code can run with its own namespace (§II): the user's machine,
     a cloud node, a JAX mesh (``DistContext``) — or a non-compute target such
@@ -31,22 +43,58 @@ class ExecutionEnvironment:
     Every environment fronts a content-addressed chunk store — the state
     plane's substrate: migration ships only chunks the target store lacks.
     ``kind="storage"`` environments back theirs with an on-disk CAS
-    directory (``storage_dir``), which is how checkpointing *is* migration."""
+    directory (``storage_dir``), which is how checkpointing *is* migration.
+
+    Fleet lifecycle: ``status`` walks the :data:`LIFECYCLE` state machine
+    (``provisioning → up → draining → down/failed``).  ``cold_start`` is the
+    modeled seconds a provision takes before the env is usable; the fleet
+    scheduler records ``ready_at`` when it starts one.  ``idle_timeout``
+    (None = never) is how long the env may sit idle before the autoscaler
+    culls it.  The default status is ``up``, so a registry that never
+    touches the lifecycle behaves exactly as before."""
 
     def __init__(self, name: str, *, speedup: float = 1.0,
                  mesh_ctx=None, globals_seed: dict | None = None,
                  kind: str = "compute", chunk_store=None,
-                 storage_dir: str | None = None):
+                 storage_dir: str | None = None, status: str = "up",
+                 cold_start: float = 0.0, idle_timeout: float | None = None):
+        assert status in LIFECYCLE, status
         self.name = name
         self.speedup = float(speedup)
         self.mesh_ctx = mesh_ctx
         self.kind = kind                 # compute | storage
         self.storage_dir = storage_dir
+        self.status = status
+        self.cold_start = float(cold_start)
+        self.idle_timeout = idle_timeout
+        self.ready_at = 0.0              # when a provisioning env comes up
         if chunk_store is None:
             chunk_store = (DiskChunkStore(storage_dir) if storage_dir
                            else MemoryChunkStore())
         self.chunk_store = chunk_store
         self.state = ExecutionState(dict(globals_seed or {}))
+
+    # -- lifecycle -------------------------------------------------------
+    def set_status(self, status: str, *, now: float = 0.0) -> str:
+        """Transition the lifecycle state machine; returns the old status.
+        Illegal transitions raise (e.g. ``down`` cannot jump to ``up``
+        without provisioning)."""
+        if status == self.status:
+            return status
+        allowed = LIFECYCLE[self.status]
+        if status not in allowed:
+            raise ValueError(
+                f"env {self.name!r}: illegal lifecycle transition "
+                f"{self.status!r} -> {status!r} (allowed: {sorted(allowed)})")
+        old, self.status = self.status, status
+        if status == "provisioning":
+            self.ready_at = now + self.cold_start
+        return old
+
+    def placeable_now(self) -> bool:
+        """Whether new work may target this env: up, or provisioning (the
+        cold-start wait is then priced into placement)."""
+        return self.status in ("up", "provisioning")
 
     def execute(self, source: str, cost: float | None = None) -> float:
         """Run real code against this env's namespace; return modeled seconds."""
@@ -88,6 +136,8 @@ class EnvironmentRegistry:
         self._placeable: dict[str, bool] = {}
         self.default_link = Link(default_bandwidth, default_latency)
         self.home: str | None = None
+        # fleet-plane audit trail: (time, env, old_status, new_status)
+        self.lifecycle_log: list[tuple[float, str, str, str]] = []
 
     # -- membership ----------------------------------------------------
     def register(self, env: ExecutionEnvironment, *, home: bool = False,
@@ -103,6 +153,27 @@ class EnvironmentRegistry:
         if home or self.home is None:
             self.home = env.name
         return env
+
+    def retire(self, name: str) -> ExecutionEnvironment:
+        """Remove an environment from the live registry (dynamic fleet
+        membership): its links, capacity and placement eligibility go with
+        it.  The home env cannot be retired — sessions start and return
+        there."""
+        if name == self.home:
+            raise ValueError(f"cannot retire the home environment {name!r}")
+        env = self._envs.pop(name)
+        self._capacity.pop(name, None)
+        self._placeable.pop(name, None)
+        self._links = {pair: link for pair, link in self._links.items()
+                       if name not in pair}
+        return env
+
+    def set_status(self, name: str, status: str, *,
+                   now: float = 0.0) -> None:
+        """Lifecycle transition with an audit-log entry (fleet plane)."""
+        old = self._envs[name].set_status(status, now=now)
+        if old != status:
+            self.lifecycle_log.append((now, name, old, status))
 
     def __getitem__(self, name: str) -> ExecutionEnvironment:
         return self._envs[name]
@@ -123,8 +194,11 @@ class EnvironmentRegistry:
         return dict(self._envs)
 
     def compute_envs(self) -> dict[str, ExecutionEnvironment]:
-        """Environments cells may be *placed* on (excludes storage targets)."""
-        return {n: e for n, e in self._envs.items() if self._placeable[n]}
+        """Environments cells may be *placed* on: excludes storage targets
+        and envs whose lifecycle state is not placeable (down / failed /
+        draining)."""
+        return {n: e for n, e in self._envs.items()
+                if self._placeable[n] and e.placeable_now()}
 
     def candidates(self) -> list[str]:
         """Placement candidates other than home, registration order."""
@@ -175,12 +249,18 @@ class EnvironmentRegistry:
             default_bandwidth=self.default_link.bandwidth,
             default_latency=self.default_link.latency)
         for name, env in self._envs.items():
+            clone = ExecutionEnvironment(
+                name, speedup=env.speedup, mesh_ctx=env.mesh_ctx,
+                kind=env.kind, storage_dir=env.storage_dir,
+                cold_start=env.cold_start, idle_timeout=env.idle_timeout,
+                chunk_store=env.chunk_store if share_chunk_stores
+                else None)
+            # lifecycle state carries over verbatim (the clone stands for
+            # the same physical env); bypass the transition checker
+            clone.status = env.status
+            clone.ready_at = env.ready_at
             reg.register(
-                ExecutionEnvironment(
-                    name, speedup=env.speedup, mesh_ctx=env.mesh_ctx,
-                    kind=env.kind, storage_dir=env.storage_dir,
-                    chunk_store=env.chunk_store if share_chunk_stores
-                    else None),
+                clone,
                 home=(name == self.home), capacity=self._capacity[name],
                 placeable=self._placeable[name])
         reg._links = dict(self._links)

@@ -32,9 +32,27 @@ from repro.core.simclock import SimClock
 from repro.core.state import ExecutionState
 
 __all__ = [
-    "ExecutionEnvironment", "MigrationResult", "MigrationEngine",
-    "PipelinedMigrationEngine", "HybridRuntime",
+    "EnvFailure", "ExecutionEnvironment", "MigrationResult",
+    "MigrationEngine", "PipelinedMigrationEngine", "HybridRuntime",
 ]
+
+
+class EnvFailure(Exception):
+    """An environment died while a cell (or a migration into it) was in
+    flight.  The clock has been advanced to the failure instant — the work
+    up to then is charged and lost; the fleet scheduler owns recovery
+    (checkpoint restore or rerun-from-home)."""
+
+    def __init__(self, env: str, at: float, order: int | None = None, *,
+                 during: str = "execute", wasted: float = 0.0):
+        super().__init__(f"environment {env!r} failed at t={at:.3f} "
+                         f"during {during} (cell order={order}, "
+                         f"{wasted:.3f}s of work lost)")
+        self.env = env
+        self.at = at
+        self.order = order
+        self.during = during
+        self.wasted = wasted
 
 
 @dataclass
@@ -478,7 +496,7 @@ class HybridRuntime:
                  engine: MigrationEngine | None = None,
                  arbiter=None,
                  model: InteractionModel | str | None = None,
-                 horizon: int = 4):
+                 horizon: int = 4, session_id: str | None = None):
         if registry is None:
             assert envs, "pass envs={...} or registry=EnvironmentRegistry(...)"
             registry = EnvironmentRegistry.from_envs(
@@ -512,10 +530,17 @@ class HybridRuntime:
         self.current_env = self.home
         self.block_plan: list[int] = []
         self.block_env: str | None = None
-        self.session_id = T.new_session_id()
+        # deterministic ids opt-in (seeded fleet runs must reproduce their
+        # ScheduleReport bit-for-bit; uuid4 would break that)
+        self.session_id = session_id or T.new_session_id()
         self.migrations = 0
         self.queue_wait = 0.0
         self.arbiter = arbiter               # shared capacity (SessionScheduler)
+        # fleet failure injection: fault_check(env, start, end) -> failure
+        # instant inside [start, end) or None.  When set, executions and
+        # migrations become *interruptible*: the clock stops at the failure
+        # instant and EnvFailure propagates to the fleet scheduler.
+        self.fault_check = None
         # prediction scoring: last emitted next-cell distribution + the
         # speculative prefetches issued on it, scored when the next cell
         # actually runs (KB provenance + confidence-gate calibration)
@@ -543,11 +568,24 @@ class HybridRuntime:
     # ------------------------------------------------------------------
     def _do_migration(self, src: str, dst: str, cell_source: str | None) -> float:
         # return trips (no cell source) skip unserializable objects in place
+        start = self.clock.now()
         res = self.engine.migrate(self.envs[src], self.envs[dst], cell_source,
                                   strict=cell_source is not None,
-                                  now=self.clock.now())
+                                  now=start)
         if res.noop:          # empty delta: free, and not a migration at all
             return 0.0
+        if self.fault_check is not None:
+            tf = self.fault_check(dst, start, start + res.seconds)
+            if tf is not None:
+                # the transfer dies with its destination: charge the partial
+                # stream, forget the receiver's content view (what landed
+                # there is gone) and hand recovery to the fleet scheduler
+                self.clock.advance(max(0.0, tf - start))
+                self.engine.synced.pop(dst, None)
+                self._emit(T.ENV_FAILED, None, env=dst, at=tf,
+                           during="migration", wasted=tf - start)
+                raise EnvFailure(dst, tf, during="migration",
+                                 wasted=tf - start)
         self.clock.advance(res.seconds)
         self.migrations += 1
         self.analyzer.observe_state_size(self.nb.name, max(res.nbytes, 1))
@@ -704,6 +742,17 @@ class HybridRuntime:
                 target = self.home
 
         env = self.envs[self.current_env]
+        # cold-start gate: a provisioning env accepts state (migration can
+        # stream while it boots) but cannot execute before it is ready —
+        # the wait is queue time, exactly what placement priced in
+        ready_at = getattr(env, "ready_at", 0.0)
+        if getattr(env, "status", "up") == "provisioning" \
+                and ready_at > self.clock.now():
+            wait = ready_at - self.clock.now()
+            self.clock.advance(wait)
+            self.queue_wait += wait
+            self._emit(T.CELL_EXECUTION_QUEUED, cell.cell_id, order=order,
+                       env=self.current_env, wait=wait, cold_start=True)
         # shared-capacity gate: queue when the target env is saturated
         if self.arbiter is not None:
             now = self.clock.now()
@@ -721,6 +770,21 @@ class HybridRuntime:
         self._maybe_prefetch(order)
         exec_start = self.clock.now()
         duration = env.execute(cell.source, cell.cost)
+        if self.fault_check is not None:
+            tf = self.fault_check(self.current_env, exec_start,
+                                  exec_start + duration)
+            if tf is not None:
+                # mid-cell env failure: the cell did NOT complete — charge
+                # only the work up to the failure instant, free the slot,
+                # and let the fleet scheduler drive recovery
+                self.clock.advance(max(0.0, tf - exec_start))
+                if self.arbiter is not None:
+                    self.arbiter.release(self.current_env, exec_start, tf)
+                self._emit(T.ENV_FAILED, cell.cell_id, env=self.current_env,
+                           at=tf, during="execute", order=order,
+                           wasted=tf - exec_start)
+                raise EnvFailure(self.current_env, tf, order,
+                                 wasted=tf - exec_start)
         self.clock.advance(duration)
         if self.arbiter is not None:
             self.arbiter.release(self.current_env, exec_start, self.clock.now())
@@ -748,6 +812,39 @@ class HybridRuntime:
             self.current_env = self.home
 
         return duration
+
+    def recover_from_failure(self, failed_env: str) -> None:
+        """Reset session placement state after ``failed_env`` died: the
+        session falls back to home, any committed block is abandoned, the
+        engine forgets what the dead env held (its namespace is gone), and
+        in-flight speculations targeting it are cancelled.  State *content*
+        recovery (checkpoint restore or rerun) is the fleet scheduler's
+        job — this only makes the runtime consistent again."""
+        self.block_plan = []
+        self.block_env = None
+        if self.current_env == failed_env:
+            self.current_env = self.home
+        self.engine.synced.pop(failed_env, None)
+        if isinstance(self.engine, PipelinedMigrationEngine):
+            wasted = self.engine.cancel_prefetch(failed_env, self.clock.now())
+            if wasted:
+                self._emit(T.STATE_PREFETCH_CANCELLED, None, target=failed_env,
+                           wasted_bytes=wasted, predicted=None)
+        self._emit(T.SESSION_RECOVERED, None, failed_env=failed_env,
+                   env=self.current_env)
+
+    def reset_for_replay(self) -> None:
+        """Rerun-from-home recovery: replaying the plan must not see the
+        previous attempt's state, so every compute env gets a fresh
+        namespace and the engine forgets all content views.  Chunk stores
+        are untouched — content-addressed chunks are immutable, so the
+        replay's migrations re-ship manifests, not bytes."""
+        if isinstance(self.engine, PipelinedMigrationEngine):
+            self.engine.cancel_stale(set(), now=self.clock.now())
+        for env in self.envs.values():
+            if env.kind == "compute":
+                env.state = ExecutionState({})
+        self.engine.synced.clear()
 
     def close(self) -> None:
         """Dispose the session: cancel in-flight speculations (their bytes

@@ -1,25 +1,41 @@
-"""Multi-session scheduler: many concurrent notebook sessions on one fabric.
+"""Event-driven fleet scheduler: many notebook sessions on one live fabric.
 
-The paper serves a single user on a single cloud node.  At fleet scale
-(NotebookOS-style) many sessions contend for a shared pool of accelerator
-environments, so placement decisions meet *capacity*: when a session's
-target env is saturated, the session queues and the wait is telemetry.
+The paper serves a single user on a single cloud node; its §II-B insight is
+that *think-time gaps* between cell executions are what make migration free.
+This module puts those gaps (and everything else a fleet has: arrivals,
+cold starts, idle culls, failures, autoscaling) on a discrete-event loop
+(:mod:`repro.core.events`):
 
-Design: each session owns a private :class:`HybridRuntime` over a
-``registry.clone_topology()`` (its own kernel namespaces, its own sim
-clock), while one shared :class:`CapacityArbiter` — keyed by env *name* —
-models the physical hardware all the clones stand for.  The scheduler
-interleaves sessions earliest-clock-first, which keeps the global event
-order consistent across the independent per-session clocks.
+* **sessions** arrive from a :class:`WorkloadTrace` (Poisson or recorded)
+  and think between cells; each session still owns a private
+  :class:`HybridRuntime` over a ``registry.clone_topology()`` while one
+  shared :class:`CapacityArbiter` models the physical pool;
+* **env lifecycle** rides the loop: provisioning (cold start), idle culls
+  and failure injection transition the shared registry's state machine and
+  mirror into every session clone;
+* **failure recovery** goes through the state plane: periodic background
+  checkpoints (:class:`SessionCheckpointer` — migration into a storage env's
+  CAS) let a session restore and replay only the cells since the last
+  checkpoint instead of rerunning from scratch;
+* **autoscaling** (:class:`AutoscalePolicy`) watches queue-wait/idle
+  telemetry and provisions or culls pool environments.
+
+The paper's setup is the degenerate instance: zero arrival gaps, zero
+think-time, no failures, a static always-up fleet — then the event loop
+replays the historical earliest-clock-first interleave exactly (session
+index breaks ties, as ``min()`` over the session list used to).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core import telemetry as T
 from repro.core.analyzer import _modeled_exec_seconds
+from repro.core.events import EventLoop
 from repro.core.fabric import EnvironmentRegistry
-from repro.core.migration import HybridRuntime
+from repro.core.migration import EnvFailure, HybridRuntime
 from repro.core.notebook import Notebook
+from repro.core.reducer import SerializedState
 
 
 class CapacityArbiter:
@@ -31,17 +47,22 @@ class CapacityArbiter:
 
     def __init__(self, registry: EnvironmentRegistry):
         self._cap = {n: registry.capacity(n) for n in registry.names()}
-        # full interval history per env: acquire times are NOT monotone
-        # across sessions (migrations advance a session's clock between the
-        # scheduler's min-clock pick and the gate), so freed slots can't be
-        # popped destructively — admission is computed against all intervals.
+        # interval history per env: acquire times are NOT monotone across
+        # sessions (migrations advance a session's clock between the
+        # scheduler's earliest-first pick and the gate), so freed slots
+        # can't be popped destructively — admission is computed against the
+        # retained intervals.  ``prune`` drops intervals that end before the
+        # fleet's minimum session clock (no later acquire can see them),
+        # which keeps this scan from growing O(total-history).
         self._busy: dict[str, list[tuple[float, float]]] = {
             n: [] for n in registry.names()}
         self.busy_seconds: dict[str, float] = {n: 0.0 for n in registry.names()}
+        self.last_release: dict[str, float] = {}
         self.queue_events: list[tuple[str, float, float]] = []  # env, asked, got
         self.horizon = 0.0
+        self.pruned_intervals = 0
 
-    def acquire(self, env: str, now: float, duration: float = 0.0) -> float:
+    def _earliest(self, env: str, now: float, duration: float) -> float:
         """Earliest start ≥ ``now`` with a free slot for all of ``duration``.
 
         Checking only the start instant would let a session slip in ahead of
@@ -50,6 +71,9 @@ class CapacityArbiter:
         inside the candidate window keeps utilization ≤ 1 whenever declared
         cell costs match actual durations."""
         cap = self._cap.get(env, 1)
+        if cap <= 0:
+            raise ValueError(f"acquire on env {env!r} with capacity {cap}: "
+                             f"placement should never target it")
         intervals = self._busy.setdefault(env, [])
 
         def running_at(t: float) -> list[float]:
@@ -68,21 +92,226 @@ class CapacityArbiter:
             if blocked is None:
                 break
             t = min(blocked)         # earliest slot to free while saturated
+        return t
+
+    def acquire(self, env: str, now: float, duration: float = 0.0) -> float:
+        t = self._earliest(env, now, duration)
         if t > now:
             self.queue_events.append((env, now, t))
         return t
 
+    def expected_wait(self, env: str, now: float) -> float:
+        """Peek the current queue wait without recording a queue event —
+        the fleet view's placement-pricing probe."""
+        if self._cap.get(env, 1) <= 0:
+            return float("inf")
+        return self._earliest(env, now, 0.0) - now
+
     def release(self, env: str, start: float, end: float) -> None:
         self._busy.setdefault(env, []).append((start, end))
         self.busy_seconds[env] = self.busy_seconds.get(env, 0.0) + (end - start)
+        self.last_release[env] = max(self.last_release.get(env, 0.0), end)
         self.horizon = max(self.horizon, end)
+
+    def prune(self, before: float) -> int:
+        """Drop intervals that ended at or before ``before`` (the fleet's
+        minimum session clock): every future ``acquire`` passes ``now >=
+        before``, and an interval with ``end <= now`` can never block a
+        probe at ``q >= now`` — so the scan stays bounded by the number of
+        *live* intervals instead of the whole history."""
+        dropped = 0
+        for env, intervals in self._busy.items():
+            keep = [iv for iv in intervals if iv[1] > before]
+            dropped += len(intervals) - len(keep)
+            self._busy[env] = keep
+        self.pruned_intervals += dropped
+        return dropped
+
+    def set_capacity(self, env: str, cap: int) -> None:
+        self._cap[env] = int(cap)
+
+    def capacity(self, env: str) -> int:
+        return self._cap.get(env, 1)
 
     def utilization(self, env: str) -> float:
         if self.horizon <= 0:
             return 0.0
         return self.busy_seconds.get(env, 0.0) / (
-            self._cap.get(env, 1) * self.horizon)
+            max(self._cap.get(env, 1), 1) * self.horizon)
 
+
+# ----------------------------------------------------------------------
+# workload traces: arrivals + think-time
+# ----------------------------------------------------------------------
+
+@dataclass
+class WorkloadTrace:
+    """Session arrival offsets and per-cell think-time gaps.
+
+    ``arrivals[i]`` is when session *i* starts; ``think[i][k]`` is the idle
+    gap the user leaves after that session's *k*-th executed cell (§II-B —
+    these gaps are what migration and prefetch hide inside).  Recorded
+    traces pass the lists directly; :meth:`poisson` draws both from a
+    seeded generator so runs are reproducible."""
+
+    arrivals: list[float]
+    think: list[list[float]]
+
+    @classmethod
+    def static(cls, n_sessions: int) -> "WorkloadTrace":
+        """The paper's degenerate instance: everyone at t=0, no gaps."""
+        return cls([0.0] * n_sessions, [[] for _ in range(n_sessions)])
+
+    @classmethod
+    def poisson(cls, n_sessions: int, *, rate: float, think_mean: float,
+                cells_per_session: int, seed: int = 0) -> "WorkloadTrace":
+        """Poisson arrivals at ``rate``/s, exponential think-times with mean
+        ``think_mean`` s — both pre-drawn from ``seed`` (determinism)."""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        if rate > 0:
+            gaps = rng.exponential(1.0 / rate, n_sessions)
+            arrivals = [float(t) for t in np.cumsum(gaps) - gaps[0]]
+        else:
+            arrivals = [0.0] * n_sessions
+        think = []
+        for _ in range(n_sessions):
+            if think_mean > 0:
+                think.append([float(x) for x in
+                              rng.exponential(think_mean, cells_per_session)])
+            else:
+                think.append([])
+        return cls(arrivals, think)
+
+
+# ----------------------------------------------------------------------
+# autoscaling
+# ----------------------------------------------------------------------
+
+class AutoscalePolicy:
+    """Provision/cull pool environments from queue + idle telemetry.
+
+    ``pool`` names registry envs the policy may scale (they must exist in
+    the registry — registered ``status="down"`` for burst capacity the
+    policy can bring up).  Every ``check_interval`` seconds of sim time:
+
+    * if any up compute env's expected queue wait exceeds
+      ``scale_up_wait``, the first down pool env is provisioned (it comes
+      up after its ``cold_start``);
+    * an up pool env idle longer than its ``idle_timeout`` — with no
+      session currently placed on it — is culled (``draining → down``).
+    """
+
+    def __init__(self, pool: list[str], *, check_interval: float = 5.0,
+                 scale_up_wait: float = 1.0):
+        assert pool, "autoscale needs at least one pool env"
+        self.pool = list(pool)
+        self.check_interval = float(check_interval)
+        self.scale_up_wait = float(scale_up_wait)
+
+    def decide(self, stats: dict) -> list[tuple[str, str]]:
+        """``stats``: {env: {status, expected_wait, idle_for, idle_timeout,
+        occupied}}.  Returns [(action, env)] with action provision|cull."""
+        actions: list[tuple[str, str]] = []
+        pressure = max((s["expected_wait"] for s in stats.values()
+                        if s["status"] == "up"), default=0.0)
+        if pressure > self.scale_up_wait:
+            for name in self.pool:
+                if stats.get(name, {}).get("status") == "down":
+                    actions.append(("provision", name))
+                    break
+        for name in self.pool:
+            s = stats.get(name)
+            if (s and s["status"] == "up" and not s["occupied"]
+                    and s["idle_timeout"] is not None
+                    and s["idle_for"] > s["idle_timeout"]):
+                actions.append(("cull", name))
+        return actions
+
+
+# ----------------------------------------------------------------------
+# checkpoint/restore through the state plane
+# ----------------------------------------------------------------------
+
+class SessionCheckpointer:
+    """Periodic background checkpoints of one session into a storage env.
+
+    A save *is* a migration: the session's engine moves the current env's
+    namespace into the storage env's content-addressed chunk store (delta
+    against the previous save — unchanged names cost a manifest entry,
+    unchanged chunks nothing) and the cumulative per-name manifests are
+    kept so every checkpoint is self-contained.  ``restore`` deserializes
+    the manifest into the home namespace and charges only the chunks home's
+    store doesn't already hold — usually a small fraction, because the
+    session's own earlier migrations banked most of them."""
+
+    def __init__(self, runtime: HybridRuntime, storage_env):
+        self.rt = runtime
+        self.storage = storage_env
+        self._blobs: dict[str, object] = {}    # name -> SerializedName
+        self._digests: dict[str, int] = {}
+        self._skipped: set[str] = set()        # unserializable: never captured
+        self.cursor = 0                        # plan cursor the save captured
+        self.saves = 0
+        self.bytes_written = 0
+
+    def save(self, cursor: int, now: float) -> int:
+        src = self.rt.envs[self.rt.current_env]
+        res = self.rt.engine.migrate(src, self.storage, names=None,
+                                     strict=False, now=now)
+        for n in res.deleted:
+            self._blobs.pop(n, None)
+            self._digests.pop(n, None)
+        ser = self.rt.engine.last_ser
+        if ser is not None:
+            self._blobs.update(ser.blobs)
+            self._digests.update(ser.digests)
+            self._skipped |= set(ser.skipped)
+        self.cursor = cursor
+        self.saves += 1
+        self.bytes_written += res.nbytes
+        return res.nbytes
+
+    def restore(self, now: float) -> tuple[int, float]:
+        """Rebuild the checkpointed namespace on home; returns (wire bytes,
+        modeled seconds).  Chunks already in home's CAS never re-travel."""
+        rt = self.rt
+        home = rt.envs[rt.home]
+        ser = SerializedState(codec=rt.reducer.codec, blobs=dict(self._blobs),
+                              digests=dict(self._digests))
+        held: set[int] = set()
+        for blob in ser.blobs.values():
+            for d in blob.chunk_digests():
+                if home.chunk_store.has(d):
+                    held.add(d)
+                elif d not in ser.chunks and self.storage.chunk_store.has(d):
+                    ser.chunks[d] = self.storage.chunk_store.get(d)
+        wire = ser.wire_nbytes(held)
+        seconds = rt.registry.transfer_seconds(self.storage.name, rt.home,
+                                               wire)
+        objs = rt.reducer.deserialize(ser, target_ns=home.state.ns,
+                                      chunk_store=self.storage.chunk_store)
+        home.state.update(objs)
+        home.chunk_store.put_many(ser.chunks)
+        # roll back names the session defined *after* this checkpoint —
+        # replay must not see them.  Module aliases survive (never
+        # serialized; re-imports are free) and so do names the save had to
+        # skip as unserializable (dropping those would lose state replay
+        # cannot rebuild from the checkpointed cells).
+        import types as _types
+        keep = set(self._blobs) | self._skipped
+        extra = [n for n in home.state.names()
+                 if n not in keep
+                 and not isinstance(home.state.get(n), _types.ModuleType)]
+        home.state.drop(extra)
+        # restored content supersedes whatever any peer thought it held
+        rt.engine.invalidate(rt.home, list(objs) + extra)
+        return wire, seconds
+
+
+# ----------------------------------------------------------------------
+# reports
+# ----------------------------------------------------------------------
 
 @dataclass
 class SessionReport:
@@ -94,6 +323,9 @@ class SessionReport:
     migrations: int
     prediction_hits: int = 0
     prediction_total: int = 0
+    arrival: float = 0.0
+    think_time: float = 0.0
+    recoveries: int = 0
 
     @property
     def prediction_hit_rate(self) -> float:
@@ -107,9 +339,22 @@ class _Session:
     runtime: HybridRuntime
     plan: list
     cursor: int = 0
+    arrival: float = 0.0
+    think: list[float] = field(default_factory=list)
+    think_used: int = 0
+    think_total: float = 0.0
+    recoveries: int = 0
+    ckpt: SessionCheckpointer | None = None
 
     def done(self) -> bool:
         return self.cursor >= len(self.plan)
+
+    def next_think(self) -> float:
+        if self.think_used < len(self.think):
+            t = self.think[self.think_used]
+            self.think_used += 1
+            return float(t)
+        return 0.0
 
 
 @dataclass
@@ -123,14 +368,50 @@ class ScheduleReport:
     # busy-seconds — the queue telemetry's forecast-vs-actual pair
     predicted_env_seconds: dict[str, float] = field(default_factory=dict)
     actual_env_seconds: dict[str, float] = field(default_factory=dict)
+    # fleet plane: lifecycle + failure + recovery + autoscale telemetry
+    failures: list[tuple[str, float]] = field(default_factory=list)
+    recoveries: int = 0
+    checkpoints: int = 0
+    checkpoint_bytes: int = 0
+    restored_bytes: int = 0
+    scale_events: list[tuple[float, str, str]] = field(default_factory=list)
+    lifecycle_events: list[tuple[float, str, str, str]] = field(
+        default_factory=list)
+    fault_events: list[tuple[float, str, str, str]] = field(
+        default_factory=list)
+    pruned_intervals: int = 0
     total_queue_wait: float = field(init=False)
+    total_think_time: float = field(init=False)
     prediction_hit_rate: float = field(init=False)
 
     def __post_init__(self):
         self.total_queue_wait = sum(s.queue_wait for s in self.sessions)
+        self.total_think_time = sum(s.think_time for s in self.sessions)
         hits = sum(s.prediction_hits for s in self.sessions)
         total = sum(s.prediction_total for s in self.sessions)
         self.prediction_hit_rate = hits / total if total else 0.0
+
+
+class _FleetView:
+    """What placement policies see of the live fleet: per-env overhead =
+    remaining provisioning cold-start + current expected queue wait."""
+
+    def __init__(self, sched: "SessionScheduler"):
+        self.sched = sched
+
+    def overhead_seconds(self, env: str) -> float:
+        sched = self.sched
+        if env not in sched.registry:
+            return 0.0
+        e = sched.registry[env]
+        now = sched._loop.now() if sched._loop is not None else 0.0
+        overhead = 0.0
+        if e.status == "provisioning":
+            overhead += max(0.0, e.ready_at - now)
+        wait = sched.arbiter.expected_wait(env, now)
+        if wait == float("inf"):
+            return wait
+        return overhead + wait
 
 
 class SessionScheduler:
@@ -140,31 +421,113 @@ class SessionScheduler:
     clone fronts the registry-level chunk store of the physical env it
     stands for, so when N sessions load the same dataset its chunks cross
     the wire once and every later session ships only a manifest
-    (``share_chunks=False`` isolates the stores instead)."""
+    (``share_chunks=False`` isolates the stores instead).
+
+    ``run()`` drives everything on a discrete-event loop.  With the default
+    knobs (no workload trace, no failures, no autoscaling) the event order
+    is exactly the historical earliest-clock-first interleave; the fleet
+    features are strictly additive:
+
+    * ``add_notebook(..., arrival=, think=)`` / ``set_workload(trace)``
+      give sessions arrival offsets and per-cell think-time gaps;
+    * ``inject_failure(env, at)`` kills an env mid-flight; sessions on it
+      recover via checkpoint restore (``enable_recovery("checkpoint")``)
+      or by rerunning their plan from the start (``"rerun"``);
+    * ``enable_autoscale(policy)`` provisions/culls pool envs from queue
+      telemetry and attaches a fleet view so cost/horizon placement prices
+      cold starts and queue depth.
+    """
 
     def __init__(self, registry: EnvironmentRegistry, *,
-                 share_chunks: bool = True):
+                 share_chunks: bool = True,
+                 beat_interval: float = 1.0, miss_threshold: int = 3):
         self.registry = registry
         self.share_chunks = share_chunks
         self.arbiter = CapacityArbiter(registry)
+        self.beat_interval = float(beat_interval)
+        self.miss_threshold = int(miss_threshold)
         self._sessions: list[_Session] = []
+        self._failures: list[tuple[str, float, float | None]] = []
+        self._env_failures: dict[str, list[float]] = {}
+        self.autoscale: AutoscalePolicy | None = None
+        self.recovery: str | None = None       # checkpoint | rerun | None
+        self.checkpoint_interval = 30.0
+        self.ckpt_storage_name: str | None = None
+        self.scale_events: list[tuple[float, str, str]] = []
+        self._loop: EventLoop | None = None
+        self._coord = None
+
+    # -- fleet configuration -------------------------------------------
+    @property
+    def detect_delay(self) -> float:
+        """Failure-detection latency: the heartbeat protocol's miss window
+        (``distributed/fault.py``: a worker missing ``miss_threshold``
+        beats is declared dead)."""
+        if self._coord is not None:
+            return self._coord.detection_delay
+        return self.beat_interval * self.miss_threshold
+
+    def inject_failure(self, env: str, at: float,
+                       recover_after: float | None = None) -> None:
+        """Schedule env death at sim time ``at``; with ``recover_after`` the
+        env re-provisions that many seconds later (cold start applies)."""
+        if env == self.registry.home:
+            raise ValueError("cannot fail the home environment")
+        if env not in self.registry:
+            raise KeyError(env)
+        self._failures.append((env, float(at), recover_after))
+        self._env_failures.setdefault(env, []).append(float(at))
+
+    def enable_recovery(self, mode: str = "checkpoint", *,
+                        interval: float = 30.0,
+                        storage: str = "fleet-ckpt") -> None:
+        """``checkpoint``: periodic background saves into a storage env's
+        CAS, restore + replay-since-checkpoint on failure.  ``rerun``:
+        no checkpoints — a failed session replays its whole plan."""
+        assert mode in ("checkpoint", "rerun"), mode
+        self.recovery = mode
+        self.checkpoint_interval = float(interval)
+        if mode == "checkpoint":
+            from repro.core.fabric import ExecutionEnvironment
+            if storage not in self.registry:
+                self.registry.register(
+                    ExecutionEnvironment(storage, kind="storage"))
+            self.ckpt_storage_name = storage
+
+    def enable_autoscale(self, policy: AutoscalePolicy) -> None:
+        self.autoscale = policy
 
     # ------------------------------------------------------------------
-    def add_session(self, runtime: HybridRuntime, plan) -> HybridRuntime:
+    def add_session(self, runtime: HybridRuntime, plan, *,
+                    arrival: float = 0.0,
+                    think: list[float] | None = None) -> HybridRuntime:
         """Attach an existing runtime (it must gate through our arbiter)."""
         runtime.arbiter = self.arbiter
-        self._sessions.append(_Session(runtime, list(plan)))
+        self._sessions.append(_Session(runtime, list(plan), arrival=arrival,
+                                       think=list(think or [])))
         return runtime
 
-    def add_notebook(self, notebook: Notebook, plan=None,
+    def add_notebook(self, notebook: Notebook, plan=None, *,
+                     arrival: float = 0.0, think: list[float] | None = None,
                      **runtime_kw) -> HybridRuntime:
         """Spawn a session on a private clone of the shared fabric topology."""
         reg = self.registry.clone_topology(
             share_chunk_stores=self.share_chunks)
+        runtime_kw.setdefault(
+            "session_id",
+            f"s{len(self._sessions):03d}-{notebook.name}")
         rt = HybridRuntime(notebook, registry=reg, **runtime_kw)
         if plan is None:
             plan = list(range(len(notebook.cells)))
-        return self.add_session(rt, plan)
+        return self.add_session(rt, plan, arrival=arrival, think=think)
+
+    def set_workload(self, trace: WorkloadTrace) -> None:
+        """Apply a workload trace to the sessions added so far, by index."""
+        for i, s in enumerate(self._sessions):
+            if i < len(trace.arrivals):
+                s.arrival = float(trace.arrivals[i])
+            if i < len(trace.think):
+                s.think = list(trace.think[i])
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -188,20 +551,238 @@ class SessionScheduler:
             est = _modeled_exec_seconds(rt.analyzer, cell, d.env) or 0.0
         predicted[d.env] = predicted.get(d.env, 0.0) + est
 
-    def run(self) -> ScheduleReport:
-        """Earliest-clock-first interleave until every session drains."""
-        predicted: dict[str, float] = {n: 0.0 for n in self.registry.names()}
-        while True:
-            ready = [s for s in self._sessions if not s.done()]
-            if not ready:
-                break
-            s = min(ready, key=lambda s: s.runtime.clock.now())
+    # -- lifecycle plumbing ---------------------------------------------
+    def _set_status(self, name: str, status: str, now: float) -> None:
+        """Transition the shared registry (audit-logged) and mirror the new
+        state into every session's clone — the clones stand for the same
+        physical environment."""
+        self.registry.set_status(name, status, now=now)
+        for s in self._sessions:
+            if name in s.runtime.registry:
+                clone = s.runtime.registry[name]
+                clone.status = self.registry[name].status
+                clone.ready_at = self.registry[name].ready_at
+
+    def _fault_check(self, env: str, start: float, end: float) -> float | None:
+        """Fault hook handed to every runtime: a failure instant inside the
+        work window, or the window start when the env is already dead."""
+        if env in self.registry and self.registry[env].status == "failed":
+            return start
+        for tf in self._env_failures.get(env, ()):
+            if start <= tf < end:
+                return tf
+        return None
+
+    def _fail_env(self, env: str, at: float, recover_after: float | None):
+        if env not in self.registry:
+            return
+        if self.registry[env].status in ("failed", "down"):
+            return
+        self._set_status(env, "failed", at)
+        if recover_after is not None:
+            self._loop.call_at(at + recover_after, self._reprovision, env,
+                               priority=-10)
+
+    def _reprovision(self, env: str) -> None:
+        now = self._loop.now()
+        if env not in self.registry:
+            return
+        if self.registry[env].status not in ("failed", "down"):
+            return
+        self._set_status(env, "provisioning", now)
+        # stale failure times at/before the re-provision can no longer
+        # interrupt new work (windows always start at now or later)
+        self._env_failures[env] = [
+            t for t in self._env_failures.get(env, ()) if t > now]
+        ready = self.registry[env].ready_at
+        self._loop.call_at(ready, self._mark_up, env, priority=-10)
+
+    def _mark_up(self, env: str) -> None:
+        if env not in self.registry:
+            return
+        e = self.registry[env]
+        now = self._loop.now()
+        # a provision cycle interrupted by a failure leaves this event
+        # stale: the re-provision pushed ready_at later, so only the event
+        # that fires at (or after) the *current* ready_at may transition
+        if e.status == "provisioning" and now >= e.ready_at - 1e-9:
+            self._set_status(env, "up", now)
+            # a fresh env's idle clock starts at readiness, not at t=0 —
+            # otherwise it could be culled before it ever ran a cell
+            self.arbiter.last_release[env] = max(
+                self.arbiter.last_release.get(env, 0.0), now)
+
+    # -- autoscale -------------------------------------------------------
+    def _occupied(self, env: str) -> bool:
+        return any(not s.done() and s.runtime.current_env == env
+                   for s in self._sessions)
+
+    def _autoscale_tick(self):
+        if all(s.done() for s in self._sessions):
+            # fleet drained: reclaim whatever burst capacity is still up
+            # (idle-kernel reclamation), then stop the timer
+            now = self._loop.now()
+            for env in self.autoscale.pool:
+                if env in self.registry \
+                        and self.registry[env].status == "up":
+                    self._set_status(env, "draining", now)
+                    self._set_status(env, "down", now)
+                    self.scale_events.append((now, "cull", env))
+            return False
+        now = self._loop.now()
+        stats = {}
+        for name, e in self.registry.envs().items():
+            if e.kind != "compute":
+                continue
+            wait = (self.arbiter.expected_wait(name, now)
+                    if e.status == "up" else 0.0)
+            stats[name] = {
+                "status": e.status,
+                "expected_wait": wait,
+                "idle_for": now - self.arbiter.last_release.get(name, 0.0),
+                "idle_timeout": e.idle_timeout,
+                "occupied": self._occupied(name),
+            }
+        for action, env in self.autoscale.decide(stats):
+            if action == "provision":
+                self._set_status(env, "provisioning", now)
+                self._loop.call_at(self.registry[env].ready_at,
+                                   self._mark_up, env, priority=-10)
+            elif action == "cull":
+                self._set_status(env, "draining", now)
+                self._set_status(env, "down", now)
+            self.scale_events.append((now, action, env))
+
+    # -- heartbeats (audit trail via distributed/fault.py) ---------------
+    def _beat(self):
+        if all(s.done() for s in self._sessions):
+            return False                  # fleet drained: stop the timer
+        for name, e in self.registry.envs().items():
+            if name in self._coord.workers and e.status not in ("failed",
+                                                                "down"):
+                self._coord.heartbeat(name)
+        self._coord.check_failures()
+
+    # -- checkpoints ------------------------------------------------------
+    def _checkpoint_tick(self, s: _Session):
+        if s.done():
+            return False                  # stop this session's timer series
+        if self._loop.now() < s.arrival:
+            return None
+        rt = s.runtime
+        env = rt.registry[rt.current_env] if rt.current_env in rt.registry \
+            else None
+        if env is None or not env.placeable_now():
+            return None                   # nothing trustworthy to capture
+        nbytes = s.ckpt.save(s.cursor, self._loop.now())
+        rt._emit(T.SESSION_CHECKPOINTED, None, cursor=s.cursor,
+                 nbytes=nbytes, env=rt.current_env)
+        return None
+
+    # -- the session step process ----------------------------------------
+    def _prune_arbiter(self) -> None:
+        active = [max(s.runtime.clock.now(), s.arrival)
+                  for s in self._sessions if not s.done()]
+        if active:
+            self.arbiter.prune(min(active))
+
+    def _step(self, s: _Session, idx: int, predicted: dict[str, float]):
+        if s.done():
+            return
+        gap = self._loop.now() - s.runtime.clock.now()
+        if gap > 0:
+            # arrival offset or think-time: the user was idle, the session
+            # clock absorbs the gap (queue wait is tracked separately)
+            s.runtime.clock.advance_to(self._loop.now())
+            if s.cursor > 0:
+                s.think_total += gap
+        self._prune_arbiter()
+        try:
             s.runtime.run_cell(s.plan[s.cursor])
-            self._note_predicted_load(s, s.plan[s.cursor], predicted)
-            s.cursor += 1
+        except EnvFailure as e:
+            self._recover(s, idx, e, predicted)
+            return
+        self._note_predicted_load(s, s.plan[s.cursor], predicted)
+        s.cursor += 1
+        if s.done():
+            return
+        t_next = s.runtime.clock.now() + s.next_think()
+        self._loop.call_at(t_next, self._step, s, idx, predicted,
+                           priority=idx)
+
+    def _recover(self, s: _Session, idx: int, e: EnvFailure,
+                 predicted: dict[str, float]) -> None:
+        """Failure recovery: detection (heartbeat miss window), then either
+        checkpoint restore + replay-since-checkpoint or rerun-from-home."""
+        s.recoveries += 1
+        rt = s.runtime
+        rt.recover_from_failure(e.env)
+        rt.clock.advance(self.detect_delay)
+        if self.recovery == "checkpoint" and s.ckpt is not None \
+                and s.ckpt.saves > 0:
+            wire, seconds = s.ckpt.restore(rt.clock.now())
+            rt.clock.advance(seconds)
+            s.cursor = min(s.ckpt.cursor, s.cursor)
+            self._restored_bytes += wire
+        else:
+            s.cursor = 0               # rerun the whole plan from home
+            rt.reset_for_replay()      # fresh namespaces: no double-exec state
+        self._loop.call_at(rt.clock.now(), self._step, s, idx, predicted,
+                           priority=idx)
+
+    # ------------------------------------------------------------------
+    def run(self) -> ScheduleReport:
+        """Drive arrivals, cells, think-time, lifecycle, failures,
+        checkpoints and autoscaling to completion on the event loop."""
+        from repro.distributed.fault import Coordinator
+
+        loop = self._loop = EventLoop()
+        self._restored_bytes = 0
+        predicted: dict[str, float] = {n: 0.0 for n in self.registry.names()}
+        dynamic = bool(self._failures or self.autoscale is not None
+                       or any(s.arrival or s.think for s in self._sessions))
+        if dynamic:
+            for s in self._sessions:
+                s.runtime.fault_check = self._fault_check
+            self._coord = Coordinator(
+                [n for n, e in self.registry.envs().items()
+                 if e.kind == "compute"],
+                clock=loop.clock, beat_interval=self.beat_interval,
+                miss_threshold=self.miss_threshold)
+            loop.every(self.beat_interval, self._beat, priority=-5)
+        if dynamic:
+            # live-fleet placement pricing: cost/horizon policies see the
+            # remaining cold start of a provisioning env and each env's
+            # current expected queue wait (the degenerate static fleet
+            # stays unpriced — decisions bit-identical to the paper's)
+            view = _FleetView(self)
+            for s in self._sessions:
+                s.runtime.analyzer.fleet_view = view
+        if self.autoscale is not None:
+            loop.every(self.autoscale.check_interval, self._autoscale_tick,
+                       priority=-5)
+        if self.recovery == "checkpoint":
+            storage = self.registry[self.ckpt_storage_name]
+            for s in self._sessions:
+                s.ckpt = SessionCheckpointer(s.runtime, storage)
+                loop.every(self.checkpoint_interval, self._checkpoint_tick, s,
+                           priority=-1, start_after=max(
+                               s.arrival, self.checkpoint_interval))
+        for env, at, recover_after in self._failures:
+            loop.call_at(at, self._fail_env, env, at, recover_after,
+                         priority=-10)
+        for idx, s in enumerate(self._sessions):
+            loop.call_at(s.arrival, self._step, s, idx, predicted,
+                         priority=idx)
+        try:
+            loop.run()
+        finally:
+            # every runtime closes — and its speculations cancel — even when
+            # a cell raises mid-drain (bus subscribers must not leak)
+            for s in self._sessions:
+                s.runtime.close()
         reports = []
         for s in self._sessions:
-            s.runtime.close()          # also detaches its bus subscribers
             reports.append(SessionReport(
                 session=s.runtime.session_id,
                 notebook=s.runtime.nb.name,
@@ -210,7 +791,10 @@ class SessionScheduler:
                 queue_wait=s.runtime.queue_wait,
                 migrations=s.runtime.migrations,
                 prediction_hits=s.runtime.prediction_hits,
-                prediction_total=s.runtime.prediction_total))
+                prediction_total=s.runtime.prediction_total,
+                arrival=s.arrival,
+                think_time=s.think_total,
+                recoveries=s.recoveries))
         util = {n: self.arbiter.utilization(n) for n in self.registry.names()}
         makespan = max((r.makespan for r in reports), default=0.0)
         return ScheduleReport(
@@ -218,4 +802,16 @@ class SessionScheduler:
             queue_events=len(self.arbiter.queue_events),
             makespan=makespan,
             predicted_env_seconds=predicted,
-            actual_env_seconds=dict(self.arbiter.busy_seconds))
+            actual_env_seconds=dict(self.arbiter.busy_seconds),
+            failures=[(env, at) for env, at, _ in self._failures],
+            recoveries=sum(s.recoveries for s in self._sessions),
+            checkpoints=sum(s.ckpt.saves for s in self._sessions if s.ckpt),
+            checkpoint_bytes=sum(s.ckpt.bytes_written
+                                 for s in self._sessions if s.ckpt),
+            restored_bytes=self._restored_bytes,
+            scale_events=list(self.scale_events),
+            lifecycle_events=list(self.registry.lifecycle_log),
+            fault_events=[(ev.time, ev.kind, ev.worker, ev.detail)
+                          for ev in (self._coord.events if self._coord
+                                     else [])],
+            pruned_intervals=self.arbiter.pruned_intervals)

@@ -24,11 +24,17 @@ CELL_MODIFIED = "cell-modified"
 CELL_EXECUTION_QUEUED = "cell-execution-queued"
 STATE_PREFETCHED = "state-prefetched"
 STATE_PREFETCH_CANCELLED = "state-prefetch-cancelled"
+# fleet-plane extensions: env lifecycle, failures, checkpoint recovery
+ENV_LIFECYCLE = "env-lifecycle"
+ENV_FAILED = "env-failed"
+SESSION_CHECKPOINTED = "session-checkpointed"
+SESSION_RECOVERED = "session-recovered"
 
 ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
              CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED,
              CELL_EXECUTION_QUEUED, STATE_PREFETCHED,
-             STATE_PREFETCH_CANCELLED)
+             STATE_PREFETCH_CANCELLED, ENV_LIFECYCLE, ENV_FAILED,
+             SESSION_CHECKPOINTED, SESSION_RECOVERED)
 
 
 @dataclass(frozen=True)

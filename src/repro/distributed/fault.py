@@ -52,6 +52,13 @@ class Coordinator:
         self._strag_count: dict[str, int] = {w: 0 for w in workers}
         self.events: list[FaultEvent] = []
 
+    @property
+    def detection_delay(self) -> float:
+        """Worst-case lag between a death and its detection: the miss
+        window.  The fleet scheduler charges this to a recovering session
+        (same protocol, session-level instead of training-step-level)."""
+        return self.beat_interval * self.miss_threshold
+
     # ------------------------------------------------------------------
     def heartbeat(self, worker: str) -> None:
         ws = self.workers[worker]

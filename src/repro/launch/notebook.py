@@ -5,17 +5,23 @@
         [--model frequency|markov|recency|ensemble] \
         [--bandwidth 1e9] [--latency 0.5] [--codec zlib] [--report out.json] \
         [--env tpu-mesh:40:1] [--link local:tpu-mesh:1e8:1.0] [--pipeline] \
-        [--fleet 4]
+        [--fleet 4] [--arrivals 0.2] [--think-time 5] [--seed 0] \
+        [--fail-env remote:30] [--autoscale] [--recovery checkpoint]
 
 Cells execute for real (exec against the session namespace); timing follows
 the paper's forced-speedup protocol when cells carry a
 ``metadata.repro.cost``, else measured wall time scaled by the env speedup.
 
-By default this is the paper's local/remote dyad.  ``--env name:speedup[:cap]``
-(repeatable) registers extra environments and ``--link a:b:bw:lat`` gives a
-pair its own transfer cost; ``--policy cost`` scores every env per cell.
-``--fleet N`` replays N concurrent sessions of the notebook through the
-SessionScheduler over the shared fabric (per-env capacity, queueing stats).
+By default this is the paper's local/remote dyad.  ``--env
+name:speedup[:capacity[:down]]`` (repeatable) registers extra environments
+(``down`` marks burst capacity the autoscaler may bring up) and ``--link
+a:b:bw:lat`` gives a pair its own transfer cost; ``--policy cost`` scores
+every env per cell.  ``--fleet N`` replays N concurrent sessions of the
+notebook through the event-driven SessionScheduler over the shared fabric;
+``--arrivals``/``--think-time`` draw a seeded Poisson workload trace,
+``--fail-env name:time[:recover_after]`` kills an env mid-run (recovery via
+``--recovery checkpoint|rerun``), and ``--autoscale`` lets the fleet
+provision/cull the ``down`` envs from queue telemetry.
 
 Prints the decision/migration report and writes the annotated notebook back
 (explainability annotations land in ``metadata.repro.annotations``).
@@ -26,34 +32,105 @@ import argparse
 import json
 
 from repro.core import (
-    EnvironmentRegistry, ExecutionEnvironment, HybridRuntime, Notebook,
-    SessionScheduler, StateReducer,
+    AutoscalePolicy, EnvironmentRegistry, ExecutionEnvironment, HybridRuntime,
+    Notebook, SessionScheduler, StateReducer, WorkloadTrace,
 )
 
 
+def parse_env_spec(spec: str) -> tuple[str, float, int, str]:
+    """``name:speedup[:capacity[:down]]`` -> (name, speedup, capacity,
+    status); raises ValueError with a user-facing message on bad input."""
+    parts = spec.split(":")
+    name = parts[0]
+    if not name:
+        raise ValueError(f"--env {spec!r}: empty environment name")
+    try:
+        speedup = float(parts[1]) if len(parts) > 1 else 1.0
+    except ValueError:
+        raise ValueError(
+            f"--env {spec!r}: speedup {parts[1]!r} is not a number "
+            f"(expected name:speedup[:capacity[:down]])") from None
+    try:
+        cap = int(parts[2]) if len(parts) > 2 else 1
+    except ValueError:
+        raise ValueError(
+            f"--env {spec!r}: capacity {parts[2]!r} is not an integer "
+            f"(expected name:speedup[:capacity[:down]])") from None
+    status = "up"
+    if len(parts) > 3:
+        if parts[3] not in ("up", "down"):
+            raise ValueError(
+                f"--env {spec!r}: status {parts[3]!r} must be 'up' or "
+                f"'down' (down = burst capacity for --autoscale)")
+        status = parts[3]
+    return name, speedup, cap, status
+
+
+def parse_link_spec(spec: str) -> tuple[str, str, float, float]:
+    """``a:b:bandwidth:latency`` -> parts; friendly errors on bad shape."""
+    parts = spec.split(":")
+    if len(parts) != 4:
+        raise ValueError(
+            f"--link {spec!r}: expected a:b:bandwidth:latency "
+            f"(got {len(parts)} field(s))")
+    a, b, bw, lat = parts
+    try:
+        return a, b, float(bw), float(lat)
+    except ValueError:
+        raise ValueError(
+            f"--link {spec!r}: bandwidth/latency must be numbers "
+            f"(got {bw!r}, {lat!r})") from None
+
+
+def parse_fail_spec(spec: str) -> tuple[str, float, float | None]:
+    """``env:time[:recover_after]`` -> (env, at, recover_after|None)."""
+    parts = spec.split(":")
+    if len(parts) not in (2, 3):
+        raise ValueError(
+            f"--fail-env {spec!r}: expected env:time[:recover_after]")
+    try:
+        at = float(parts[1])
+        rec = float(parts[2]) if len(parts) == 3 else None
+    except ValueError:
+        raise ValueError(
+            f"--fail-env {spec!r}: time/recover_after must be numbers") \
+            from None
+    return parts[0], at, rec
+
+
 def build_registry(*, remote_speedup: float = 10.0, bandwidth: float = 1e9,
-                   latency: float = 0.5, extra_envs=(), links=()) -> EnvironmentRegistry:
-    """Two-env default plus any ``name:speedup[:capacity]`` extras and
-    ``a:b:bandwidth:latency`` link overrides."""
+                   latency: float = 0.5, extra_envs=(), links=(),
+                   cold_start: float = 5.0,
+                   idle_timeout: float = 60.0) -> EnvironmentRegistry:
+    """Two-env default plus any ``name:speedup[:capacity[:down]]`` extras
+    and ``a:b:bandwidth:latency`` link overrides.  ``down`` envs get the
+    fleet ``cold_start``/``idle_timeout`` knobs — they're the autoscaler's
+    burst pool."""
     reg = EnvironmentRegistry(default_bandwidth=bandwidth,
                               default_latency=latency)
     reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
     reg.register(ExecutionEnvironment("remote", speedup=remote_speedup),
                  capacity=4)
     for spec in extra_envs:
-        parts = spec.split(":")
-        name = parts[0]
-        speedup = float(parts[1]) if len(parts) > 1 else 1.0
-        cap = int(parts[2]) if len(parts) > 2 else 1
-        reg.register(ExecutionEnvironment(name, speedup=speedup), capacity=cap)
+        name, speedup, cap, status = parse_env_spec(spec)
+        if name in reg:
+            raise ValueError(
+                f"--env {spec!r}: duplicate environment name {name!r} "
+                f"(registered: {', '.join(reg.names())})")
+        kw = {}
+        if status == "down":
+            kw = {"status": "down", "cold_start": cold_start,
+                  "idle_timeout": idle_timeout}
+        reg.register(ExecutionEnvironment(name, speedup=speedup, **kw),
+                     capacity=cap)
     for spec in links:
-        a, b, bw, lat = spec.split(":")
+        a, b, bw, lat = parse_link_spec(spec)
         for end in (a, b):
             if end not in reg:
                 raise ValueError(
                     f"--link {spec!r}: unknown environment {end!r} "
                     f"(registered: {', '.join(reg.names())})")
-        reg.connect(a, b, bandwidth=float(bw), latency=float(lat))
+        reg.connect(a, b, bandwidth=bw, latency=lat)
     return reg
 
 
@@ -62,7 +139,11 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  bandwidth: float = 1e9, latency: float = 0.5,
                  codec: str = "zlib", extra_envs=(), links=(),
                  pipeline: bool = False, fleet: int = 0,
-                 model: str | None = None) -> dict:
+                 model: str | None = None,
+                 arrivals: float = 0.0, think_time: float = 0.0,
+                 seed: int = 0, fail_envs=(), autoscale: bool = False,
+                 recovery: str | None = None,
+                 checkpoint_interval: float = 30.0) -> dict:
     with open(path) as f:
         nb = Notebook.from_ipynb(json.load(f))
     registry = build_registry(remote_speedup=remote_speedup,
@@ -72,6 +153,18 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
 
     if fleet:
         sched = SessionScheduler(registry)
+        if recovery:
+            sched.enable_recovery(recovery, interval=checkpoint_interval)
+        if autoscale:
+            pool = [n for n, e in registry.envs().items()
+                    if e.status == "down"]
+            if not pool:
+                raise ValueError(
+                    "--autoscale needs at least one burst env "
+                    "(--env name:speedup:capacity:down)")
+            sched.enable_autoscale(AutoscalePolicy(pool))
+        for env, at, rec in fail_envs:
+            sched.inject_failure(env, at, recover_after=rec)
         # plan by index: re-parsed notebooks regenerate ids for cells that
         # have none in the file, so cell_ids don't survive a second parse
         plan = [i for i, c in enumerate(nb.cells)
@@ -83,6 +176,10 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                                reducer=StateReducer(codec=codec),
                                policy=policy, use_knowledge=use_knowledge,
                                pipeline=pipeline, model=model)
+        if arrivals or think_time:
+            sched.set_workload(WorkloadTrace.poisson(
+                fleet, rate=arrivals, think_mean=think_time,
+                cells_per_session=len(plan), seed=seed))
         rep = sched.run()
         report = {
             "notebook": nb.name,
@@ -92,14 +189,24 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
             "model": model or "frequency",
             "makespan": rep.makespan,
             "total_queue_wait": rep.total_queue_wait,
+            "total_think_time": rep.total_think_time,
             "queue_events": rep.queue_events,
             "env_utilization": rep.env_utilization,
             "prediction_hit_rate": rep.prediction_hit_rate,
             "predicted_env_seconds": rep.predicted_env_seconds,
             "actual_env_seconds": rep.actual_env_seconds,
+            "failures": rep.failures,
+            "recoveries": rep.recoveries,
+            "checkpoints": rep.checkpoints,
+            "checkpoint_bytes": rep.checkpoint_bytes,
+            "restored_bytes": rep.restored_bytes,
+            "scale_events": rep.scale_events,
+            "lifecycle_events": rep.lifecycle_events,
             "per_session": [
-                {"session": s.session[:8], "makespan": s.makespan,
+                {"session": s.session[:12], "makespan": s.makespan,
+                 "arrival": s.arrival, "think_time": s.think_time,
                  "queue_wait": s.queue_wait, "migrations": s.migrations,
+                 "recoveries": s.recoveries,
                  "prediction_hit_rate": s.prediction_hit_rate}
                 for s in rep.sessions],
         }
@@ -158,17 +265,55 @@ def main():
     ap.add_argument("--latency", type=float, default=0.5)
     ap.add_argument("--codec", default="zlib")
     ap.add_argument("--env", action="append", default=[],
-                    help="extra environment: name:speedup[:capacity]")
+                    help="extra environment: name:speedup[:capacity[:down]] "
+                         "(down = burst pool for --autoscale)")
     ap.add_argument("--link", action="append", default=[],
                     help="pair link override: a:b:bandwidth:latency")
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined engine (prefetch overlaps execution)")
     ap.add_argument("--fleet", type=int, default=0,
                     help="run N concurrent sessions through the scheduler")
+    ap.add_argument("--arrivals", type=float, default=0.0,
+                    help="fleet: Poisson session-arrival rate per second")
+    ap.add_argument("--think-time", type=float, default=0.0,
+                    help="fleet: mean think-time gap between cells (s)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fleet: workload-trace seed (determinism)")
+    ap.add_argument("--fail-env", action="append", default=[],
+                    help="fleet: kill env mid-run: env:time[:recover_after]")
+    ap.add_argument("--recovery", choices=["checkpoint", "rerun"],
+                    default=None,
+                    help="fleet: failure-recovery mode (checkpoint = "
+                         "periodic CAS checkpoints + restore)")
+    ap.add_argument("--checkpoint-interval", type=float, default=30.0)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="fleet: provision/cull 'down' burst envs from "
+                         "queue telemetry")
     ap.add_argument("--report", default=None)
     ap.add_argument("--write-annotated", default=None,
                     help="write the notebook back with decision annotations")
     args = ap.parse_args()
+
+    try:
+        # validate every spec up front (duplicate env names, malformed
+        # floats, unknown envs) so mistakes die as friendly argparse
+        # errors — runtime failures below keep their real tracebacks
+        fail_envs = [parse_fail_spec(s) for s in args.fail_env]
+        reg = build_registry(remote_speedup=args.remote_speedup,
+                             bandwidth=args.bandwidth, latency=args.latency,
+                             extra_envs=args.env, links=args.link)
+        for env, _at, _rec in fail_envs:
+            if env not in reg:
+                raise ValueError(
+                    f"--fail-env: unknown environment {env!r} "
+                    f"(registered: {', '.join(reg.names())})")
+        if args.autoscale and args.fleet \
+                and not any(e.status == "down" for e in reg.envs().values()):
+            raise ValueError(
+                "--autoscale needs at least one burst env "
+                "(--env name:speedup:capacity:down)")
+    except ValueError as e:
+        ap.error(str(e))
 
     report, nb = run_notebook(
         args.notebook, sessions=args.sessions,
@@ -176,7 +321,10 @@ def main():
         use_knowledge=not args.no_knowledge, bandwidth=args.bandwidth,
         latency=args.latency, codec=args.codec, extra_envs=args.env,
         links=args.link, pipeline=args.pipeline, fleet=args.fleet,
-        model=args.model)
+        model=args.model, arrivals=args.arrivals,
+        think_time=args.think_time, seed=args.seed, fail_envs=fail_envs,
+        autoscale=args.autoscale, recovery=args.recovery,
+        checkpoint_interval=args.checkpoint_interval)
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))

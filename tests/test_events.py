@@ -1,0 +1,169 @@
+"""Event loop + clock protocol conformance (tests both SimClock and
+WallClock under the same suite: monotonicity, timer ordering, zero-delay
+events — the contract the fleet plane is built on)."""
+import pytest
+
+from repro.core import EventLoop, SimClock, WallClock
+
+# WallClock tests sleep for real: keep the delays tiny
+SCALE = {"sim": 1.0, "wall": 0.005}
+
+
+def make_clock(kind: str):
+    return SimClock() if kind == "sim" else WallClock()
+
+
+# ----------------------------------------------------------------------
+# clock conformance suite (shared across both implementations)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["sim", "wall"])
+def test_clock_now_monotone_under_loop(kind):
+    loop = EventLoop(make_clock(kind))
+    seen = []
+    for d in (3, 1, 2, 0):
+        loop.call_later(d * SCALE[kind], lambda: seen.append(loop.now()))
+    loop.run()
+    assert seen == sorted(seen)
+    assert len(seen) == 4
+
+
+@pytest.mark.parametrize("kind", ["sim", "wall"])
+def test_clock_timer_ordering(kind):
+    """Timers scheduled out of order fire in due-time order."""
+    loop = EventLoop(make_clock(kind))
+    fired = []
+    loop.call_later(3 * SCALE[kind], lambda: fired.append("c"))
+    loop.call_later(1 * SCALE[kind], lambda: fired.append("a"))
+    loop.call_later(2 * SCALE[kind], lambda: fired.append("b"))
+    loop.run()
+    assert fired == ["a", "b", "c"]
+
+
+@pytest.mark.parametrize("kind", ["sim", "wall"])
+def test_clock_zero_delay_events_fifo(kind):
+    """Same-instant events fire in scheduling order (seq breaks the tie)."""
+    loop = EventLoop(make_clock(kind))
+    fired = []
+    for i in range(5):
+        loop.call_later(0.0, lambda i=i: fired.append(i))
+    t0 = loop.now()
+    loop.run()
+    assert fired == [0, 1, 2, 3, 4]
+    if kind == "sim":
+        assert loop.now() == t0          # zero delay advances nothing
+
+
+@pytest.mark.parametrize("kind", ["sim", "wall"])
+def test_clock_advance_protocol(kind):
+    """advance() returns a time >= the pre-call now; a real clock refuses
+    to skip ahead (that no-op is how the event loop knows to sleep)."""
+    clock = make_clock(kind)
+    before = clock.now()
+    after = clock.advance(0.01 if kind == "wall" else 5.0)
+    assert after >= before
+    if kind == "sim":
+        assert after == before + 5.0
+    else:
+        assert after < before + 0.01     # no actual sleep happened
+
+
+# ----------------------------------------------------------------------
+# event loop semantics (simulated clock: fully deterministic)
+# ----------------------------------------------------------------------
+
+def test_priority_breaks_same_time_ties():
+    loop = EventLoop()
+    fired = []
+    loop.call_at(1.0, lambda: fired.append("low"), priority=5)
+    loop.call_at(1.0, lambda: fired.append("high"), priority=-5)
+    loop.call_at(1.0, lambda: fired.append("mid"), priority=0)
+    loop.run()
+    assert fired == ["high", "mid", "low"]
+
+
+def test_cancelled_events_are_skipped():
+    loop = EventLoop()
+    fired = []
+    ev = loop.call_later(1.0, lambda: fired.append("cancelled"))
+    loop.call_later(2.0, lambda: fired.append("kept"))
+    ev.cancel()
+    loop.run()
+    assert fired == ["kept"]
+    assert loop.pending() == 0
+
+
+def test_events_scheduled_during_run_fire():
+    loop = EventLoop()
+    fired = []
+
+    def first():
+        fired.append("first")
+        loop.call_later(1.0, lambda: fired.append("nested"))
+
+    loop.call_later(1.0, first)
+    end = loop.run()
+    assert fired == ["first", "nested"]
+    assert end == 2.0
+
+
+def test_run_until_stops_and_advances():
+    loop = EventLoop()
+    fired = []
+    loop.call_at(1.0, lambda: fired.append(1))
+    loop.call_at(10.0, lambda: fired.append(10))
+    t = loop.run(until=5.0)
+    assert fired == [1]
+    assert t == 5.0
+    loop.run()
+    assert fired == [1, 10]
+
+
+def test_recurring_timer_stops_on_false_and_cancel():
+    loop = EventLoop()
+    ticks = []
+    loop.every(1.0, lambda: ticks.append(loop.now()) or
+               (None if len(ticks) < 3 else False))
+    loop.run()
+    assert ticks == [1.0, 2.0, 3.0]
+
+    loop2 = EventLoop()
+    ticks2 = []
+    handle = loop2.every(1.0, lambda: ticks2.append(loop2.now()))
+    loop2.call_at(2.5, handle.cancel)
+    loop2.run()
+    assert ticks2 == [1.0, 2.0]
+
+
+def test_generator_process_yields_delays():
+    loop = EventLoop()
+    trace = []
+
+    def proc(tag, pause):
+        trace.append((tag, loop.now()))
+        yield pause
+        trace.append((tag, loop.now()))
+        yield pause
+        trace.append((tag, loop.now()))
+
+    loop.process(proc("a", 2.0))
+    loop.process(proc("b", 3.0), delay=1.0)
+    loop.run()
+    assert trace == [("a", 0.0), ("b", 1.0), ("a", 2.0), ("b", 4.0),
+                     ("a", 4.0), ("b", 7.0)]
+
+
+def test_loop_is_deterministic():
+    """Two identical schedules produce the identical firing sequence."""
+
+    def run_once():
+        loop = EventLoop()
+        fired = []
+        for i, (t, p) in enumerate([(2.0, 0), (1.0, 3), (1.0, -1),
+                                    (2.0, 0), (0.5, 9)]):
+            loop.call_at(t, lambda i=i: fired.append((i, loop.now())),
+                         priority=p)
+        loop.run()
+        return fired
+
+    assert run_once() == run_once()

@@ -1,0 +1,380 @@
+"""Fleet plane: env lifecycle, arrivals/think-time, failure recovery via
+CAS checkpoints, autoscaling, arbiter pruning, and deterministic replay."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoscalePolicy, CapacityArbiter, EnvironmentRegistry,
+    ExecutionEnvironment, Notebook, SessionScheduler, WorkloadTrace,
+)
+from repro.distributed.fault import Coordinator
+
+
+def make_nb(tag="", heavy=100.0):
+    nb = Notebook(f"fleet{tag}")
+    nb.add_cell("import numpy as np\n"
+                "data = np.arange(50_000, dtype=np.float64)", cost=4.0)
+    nb.add_cell("a = float(data.sum())", cost=heavy)
+    nb.add_cell("b = a * 2", cost=heavy)
+    nb.add_cell("report = b + a", cost=0.2)
+    return nb
+
+
+def make_reg(*, burst=False):
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.3)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment("gpu", speedup=10.0), capacity=1)
+    if burst:
+        reg.register(ExecutionEnvironment(
+            "burst", speedup=10.0, status="down", cold_start=5.0,
+            idle_timeout=10.0), capacity=1)
+    return reg
+
+
+# ----------------------------------------------------------------------
+# lifecycle state machine
+# ----------------------------------------------------------------------
+
+def test_lifecycle_transitions_and_audit_log():
+    reg = make_reg()
+    reg.set_status("gpu", "draining", now=1.0)
+    reg.set_status("gpu", "down", now=2.0)
+    reg.set_status("gpu", "provisioning", now=3.0)
+    reg.set_status("gpu", "up", now=4.0)
+    assert [(e[1], e[3]) for e in reg.lifecycle_log] == [
+        ("gpu", "draining"), ("gpu", "down"), ("gpu", "provisioning"),
+        ("gpu", "up")]
+
+
+def test_lifecycle_illegal_transition_raises():
+    env = ExecutionEnvironment("x", status="down")
+    with pytest.raises(ValueError, match="illegal lifecycle transition"):
+        env.set_status("up")          # down must re-provision first
+
+
+def test_cold_start_sets_ready_at():
+    env = ExecutionEnvironment("x", status="down", cold_start=7.5)
+    env.set_status("provisioning", now=10.0)
+    assert env.ready_at == 17.5
+    assert env.placeable_now()        # provisioning is placeable (priced)
+
+
+def test_down_and_failed_envs_are_not_placement_candidates():
+    reg = make_reg(burst=True)
+    assert "burst" not in reg.compute_envs()
+    assert reg.candidates() == ["gpu"]
+    reg.set_status("gpu", "failed")
+    assert reg.candidates() == []
+
+
+def test_retire_removes_env_and_links():
+    reg = make_reg(burst=True)
+    reg.connect("local", "burst", bandwidth=1e9, latency=0.1)
+    reg.retire("burst")
+    assert "burst" not in reg
+    assert ("local", "burst") not in reg._links
+    with pytest.raises(ValueError, match="cannot retire the home"):
+        reg.retire("local")
+
+
+def test_clone_topology_preserves_lifecycle_state():
+    reg = make_reg(burst=True)
+    reg.set_status("burst", "provisioning", now=3.0)
+    clone = reg.clone_topology()
+    assert clone["burst"].status == "provisioning"
+    assert clone["burst"].ready_at == reg["burst"].ready_at
+    assert clone["burst"].cold_start == 5.0
+    assert clone["burst"].idle_timeout == 10.0
+
+
+# ----------------------------------------------------------------------
+# arrivals + think-time
+# ----------------------------------------------------------------------
+
+def test_arrivals_and_think_time_show_in_report():
+    sched = SessionScheduler(make_reg())
+    sched.add_notebook(make_nb("-0"), policy="cost", use_knowledge=False)
+    sched.add_notebook(make_nb("-1"), policy="cost", use_knowledge=False,
+                       arrival=50.0, think=[2.0, 3.0, 4.0])
+    rep = sched.run()
+    s0, s1 = rep.sessions
+    assert s0.arrival == 0.0 and s0.think_time == 0.0
+    assert s1.arrival == 50.0
+    assert s1.makespan >= 50.0            # clock absorbed the arrival offset
+    assert s1.think_time == pytest.approx(9.0)
+    assert rep.total_think_time == pytest.approx(9.0)
+
+
+def test_workload_trace_poisson_is_seeded():
+    a = WorkloadTrace.poisson(4, rate=0.2, think_mean=3.0,
+                              cells_per_session=5, seed=42)
+    b = WorkloadTrace.poisson(4, rate=0.2, think_mean=3.0,
+                              cells_per_session=5, seed=42)
+    c = WorkloadTrace.poisson(4, rate=0.2, think_mean=3.0,
+                              cells_per_session=5, seed=43)
+    assert a == b
+    assert a != c
+    assert a.arrivals[0] == 0.0 and a.arrivals == sorted(a.arrivals)
+
+
+def test_static_trace_is_the_degenerate_instance():
+    """Zero arrivals gap + zero think-time must reproduce the plain run."""
+
+    def run(workload):
+        sched = SessionScheduler(make_reg())
+        for i in range(3):
+            sched.add_notebook(make_nb(f"-{i}"), policy="cost",
+                               use_knowledge=False)
+        if workload is not None:
+            sched.set_workload(workload)
+        return sched.run()
+
+    assert run(None) == run(WorkloadTrace.static(3))
+
+
+# ----------------------------------------------------------------------
+# failure recovery
+# ----------------------------------------------------------------------
+
+def _failure_run(mode, fail_at=15.0):
+    sched = SessionScheduler(make_reg())
+    sched.enable_recovery(mode, interval=5.0)
+    rt = sched.add_notebook(make_nb(f"-{mode}"), policy="cost",
+                            use_knowledge=False, think=[1.0] * 4)
+    # cell 2 runs on gpu roughly [13, 23): t=15 is mid-cell, and the t=5
+    # checkpoint tick has already captured the state through cell 1
+    sched.inject_failure("gpu", at=fail_at, recover_after=10.0)
+    rep = sched.run()
+    return sched, rt, rep
+
+
+def test_mid_cell_failure_triggers_recovery_and_completes():
+    sched, rt, rep = _failure_run("rerun")
+    assert rep.recoveries == 1
+    assert rep.failures == [("gpu", 15.0)]
+    s = rep.sessions[0]
+    assert s.cells_run == 4
+    # the plan replayed end-to-end: final state is correct on home
+    want = float(np.arange(50_000, dtype=np.float64).sum()) * 3
+    assert rt.envs["local"].state.get("report") == want
+    # heartbeat audit trail detected the death (fault.py Coordinator)
+    assert any(kind == "failure" and worker == "gpu"
+               for _, kind, worker, _ in rep.fault_events)
+
+
+def test_checkpoint_recovery_beats_rerun_on_makespan():
+    _, rt_r, rep_rerun = _failure_run("rerun")
+    _, rt_c, rep_ckpt = _failure_run("checkpoint")
+    assert rep_ckpt.recoveries == 1 and rep_rerun.recoveries == 1
+    assert rep_ckpt.checkpoints > 0
+    assert rep_ckpt.makespan < rep_rerun.makespan
+    want = float(np.arange(50_000, dtype=np.float64).sum()) * 3
+    assert rt_c.envs["local"].state.get("report") == want
+
+
+def test_failure_before_first_checkpoint_falls_back_to_rerun():
+    """A failure that lands before any checkpoint tick restores nothing —
+    the session replays its whole plan and still finishes correctly."""
+    # cell 1's step fires at ~t=1.7 and simulates through ~t=11.7: the
+    # failure at t=8 interrupts it before the first checkpoint tick (t=5,
+    # which only fires after the in-flight step) has anything to capture
+    _, rt, rep = _failure_run("checkpoint", fail_at=8.0)
+    assert rep.recoveries == 1
+    assert rep.sessions[0].cells_run == 4
+    want = float(np.arange(50_000, dtype=np.float64).sum()) * 3
+    assert rt.envs["local"].state.get("report") == want
+
+
+def test_failed_env_recovers_after_reprovision():
+    sched, _, rep = _failure_run("rerun")
+    # recover_after=10 + cold start: the env came back up
+    assert sched.registry["gpu"].status == "up"
+    transitions = [(e[1], e[3]) for e in rep.lifecycle_events]
+    assert ("gpu", "failed") in transitions
+    assert ("gpu", "provisioning") in transitions
+    assert ("gpu", "up") in transitions
+
+
+def test_rerun_recovery_does_not_double_execute_state():
+    """Replay must start from fresh namespaces: a non-idempotent cell
+    (append/increment) run twice against surviving state would corrupt the
+    result."""
+    nb = Notebook("nonidem")
+    nb.add_cell("acc = []", cost=2.0)
+    nb.add_cell("acc.append(1)", cost=100.0)
+    nb.add_cell("acc.append(2)", cost=100.0)
+    nb.add_cell("total = len(acc)", cost=0.2)
+    sched = SessionScheduler(make_reg())
+    sched.enable_recovery("rerun")
+    rt = sched.add_notebook(nb, policy="cost", use_knowledge=False)
+    sched.inject_failure("gpu", at=5.0, recover_after=10.0)
+    rep = sched.run()
+    assert rep.recoveries >= 1
+    ns_total = (rt.envs["local"].state.get("total")
+                or rt.envs["gpu"].state.get("total"))
+    assert ns_total == 2                  # not 3/4 from double-appends
+
+
+def test_provisioning_env_waits_for_cold_start():
+    """Placement may target a provisioning env, but execution must not
+    start before ready_at — the wait is charged as queue time."""
+    from repro.core import HybridRuntime
+    reg = EnvironmentRegistry()
+    reg.register(ExecutionEnvironment("local"), home=True)
+    cold = ExecutionEnvironment("cold-gpu", speedup=10.0,
+                                status="provisioning", cold_start=25.0)
+    cold.ready_at = 25.0
+    reg.register(cold)
+    nb = Notebook("cold")
+    nb.add_cell("x = 1", cost=1.0)
+    rt = HybridRuntime(nb, registry=reg, use_knowledge=False)
+    rt.run_cell(0, force_env="cold-gpu")
+    assert rt.clock.now() >= 25.0
+    assert rt.queue_wait > 0.0
+    rt.close()
+
+
+def test_stale_mark_up_event_respects_new_ready_at():
+    """A provision cycle interrupted by a failure must not come up at the
+    old ready_at — only the re-provision's own cold start counts."""
+    from repro.core import EventLoop
+    sched = SessionScheduler(make_reg(burst=True))   # burst cold_start=5
+    loop = sched._loop = EventLoop()
+    sched._set_status("burst", "provisioning", 10.0)       # ready_at 15
+    loop.call_at(15.0, sched._mark_up, "burst")
+    loop.call_at(12.0, sched._fail_env, "burst", 12.0, 1.0)  # reprovision @13
+    loop.run()
+    ups = [(t, e) for t, e, _o, new in sched.registry.lifecycle_log
+           if new == "up" and e == "burst"]
+    assert ups == [(18.0, "burst")]       # 13 + cold_start, not the stale 15
+
+
+def test_detection_delay_follows_heartbeat_protocol():
+    sched = SessionScheduler(make_reg(), beat_interval=2.0, miss_threshold=4)
+    assert sched.detect_delay == 8.0
+    coord = Coordinator(["a"], beat_interval=2.0, miss_threshold=4)
+    assert coord.detection_delay == 8.0
+
+
+# ----------------------------------------------------------------------
+# autoscaling
+# ----------------------------------------------------------------------
+
+def test_autoscale_provisions_and_culls_burst_env():
+    sched = SessionScheduler(make_reg(burst=True))
+    sched.enable_autoscale(AutoscalePolicy(["burst"], check_interval=3.0,
+                                           scale_up_wait=1.0))
+    for i in range(4):
+        sched.add_notebook(make_nb(f"-{i}"), policy="cost",
+                           use_knowledge=False)
+    sched.set_workload(WorkloadTrace.poisson(
+        4, rate=0.2, think_mean=2.0, cells_per_session=4, seed=5))
+    rep = sched.run()
+    actions = [a for _, a, _ in rep.scale_events]
+    assert "provision" in actions
+    assert "cull" in actions              # idle_timeout reclaimed it
+    assert rep.actual_env_seconds.get("burst", 0.0) > 0.0
+
+
+def test_autoscale_reduces_queue_wait_vs_static():
+    def run(burst):
+        sched = SessionScheduler(make_reg(burst=burst))
+        if burst:
+            sched.enable_autoscale(AutoscalePolicy(
+                ["burst"], check_interval=3.0, scale_up_wait=1.0))
+        for i in range(4):
+            sched.add_notebook(make_nb(f"-{i}"), policy="cost",
+                               use_knowledge=False)
+        sched.set_workload(WorkloadTrace.poisson(
+            4, rate=0.2, think_mean=2.0, cells_per_session=4, seed=5))
+        return sched.run()
+
+    assert run(True).total_queue_wait < run(False).total_queue_wait
+
+
+# ----------------------------------------------------------------------
+# determinism (acceptance: same trace + seed => identical ScheduleReport)
+# ----------------------------------------------------------------------
+
+def test_seeded_fleet_runs_are_deterministic():
+    def run_once():
+        sched = SessionScheduler(make_reg(burst=True))
+        sched.enable_recovery("checkpoint", interval=5.0)
+        sched.enable_autoscale(AutoscalePolicy(["burst"]))
+        for i in range(3):
+            sched.add_notebook(make_nb(f"-{i}"), policy="cost",
+                               use_knowledge=False)
+        sched.set_workload(WorkloadTrace.poisson(
+            3, rate=0.15, think_mean=3.0, cells_per_session=4, seed=99))
+        sched.inject_failure("gpu", at=8.0, recover_after=12.0)
+        return sched.run()
+
+    assert run_once() == run_once()
+
+
+# ----------------------------------------------------------------------
+# satellite: run() must close every session even when a cell raises
+# ----------------------------------------------------------------------
+
+def test_run_closes_sessions_when_a_cell_raises():
+    sched = SessionScheduler(make_reg())
+    good = sched.add_notebook(make_nb("-ok"), policy="cost",
+                              use_knowledge=False, pipeline=True)
+    bad_nb = Notebook("bad")
+    bad_nb.add_cell("x = 1", cost=0.1)
+    bad_nb.add_cell("raise RuntimeError('boom')", cost=0.1)
+    bad = sched.add_notebook(bad_nb, policy="cost", use_knowledge=False,
+                             pipeline=True)
+    with pytest.raises(RuntimeError, match="boom"):
+        sched.run()
+    # every runtime closed: bus subscribers detached, speculations cancelled
+    for rt in (good, bad):
+        assert rt.bus.subscriber_count("telemetry") == 0
+        assert not rt.engine._pending
+
+
+# ----------------------------------------------------------------------
+# satellite: arbiter interval pruning
+# ----------------------------------------------------------------------
+
+def test_arbiter_prune_preserves_admission_decisions():
+    def replay(prune):
+        reg = make_reg()
+        arb = CapacityArbiter(reg)
+        starts = []
+        now = 0.0
+        for i in range(200):
+            start = arb.acquire("gpu", now, 1.0)
+            arb.release("gpu", start, start + 1.0)
+            starts.append(start)
+            now = start + 0.25
+            if prune and i % 16 == 0:
+                arb.prune(now)
+        return starts, arb
+
+    plain, _ = replay(False)
+    pruned, arb = replay(True)
+    assert plain == pruned                 # same admissions, fewer intervals
+    assert arb.pruned_intervals > 0
+    assert sum(len(v) for v in arb._busy.values()) < 200
+
+
+def test_arbiter_prune_never_drops_live_intervals():
+    reg = make_reg()
+    arb = CapacityArbiter(reg)
+    arb.release("gpu", 0.0, 10.0)
+    arb.release("gpu", 5.0, 20.0)
+    arb.prune(10.0)                       # [0,10] ends at the bound: droppable
+    assert arb._busy["gpu"] == [(5.0, 20.0)]
+    # the surviving interval still gates admission (capacity 1)
+    assert arb.acquire("gpu", 12.0, 1.0) == 20.0
+
+
+def test_expected_wait_peeks_without_recording_queue_events():
+    reg = make_reg()
+    arb = CapacityArbiter(reg)
+    arb.release("gpu", 0.0, 10.0)
+    assert arb.expected_wait("gpu", 2.0) == 8.0
+    assert arb.queue_events == []
+    assert arb.acquire("gpu", 2.0) == 10.0
+    assert len(arb.queue_events) == 1

@@ -1,8 +1,14 @@
 """The notebook-file runner (paper's tool as a CLI): ipynb in, decisions out."""
 import json
+import sys
+
+import pytest
 
 from repro.core.notebook import Notebook
-from repro.launch.notebook import run_notebook
+from repro.launch.notebook import (
+    build_registry, main, parse_env_spec, parse_fail_spec, parse_link_spec,
+    run_notebook,
+)
 
 
 def _demo_ipynb(tmp_path):
@@ -66,3 +72,87 @@ def test_run_notebook_pipelined_not_slower(tmp_path):
     pipe, _ = run_notebook(path, sessions=3, remote_speedup=10.0,
                            pipeline=True)
     assert pipe["modeled_seconds"] <= sync["modeled_seconds"]
+
+
+def test_run_notebook_fleet_with_workload_and_recovery(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    report, _ = run_notebook(
+        path, sessions=2, policy="cost", use_knowledge=False, fleet=3,
+        arrivals=0.1, think_time=2.0, seed=7,
+        fail_envs=[("remote", 10.0, 20.0)], recovery="checkpoint",
+        checkpoint_interval=5.0)
+    assert report["failures"] == [("remote", 10.0)]
+    assert report["recoveries"] >= 0
+    assert report["total_think_time"] > 0.0
+    assert any(s["arrival"] > 0.0 for s in report["per_session"])
+    assert report["lifecycle_events"]
+
+
+# ----------------------------------------------------------------------
+# spec parsing: friendly errors, not bare tracebacks
+# ----------------------------------------------------------------------
+
+def test_parse_env_spec_accepts_full_form():
+    assert parse_env_spec("tpu:40:2:down") == ("tpu", 40.0, 2, "down")
+    assert parse_env_spec("gpu") == ("gpu", 1.0, 1, "up")
+
+
+def test_parse_env_spec_rejects_malformed_numbers():
+    with pytest.raises(ValueError, match="speedup 'fast' is not a number"):
+        parse_env_spec("gpu:fast")
+    with pytest.raises(ValueError, match="capacity 'two' is not an integer"):
+        parse_env_spec("gpu:2:two")
+    with pytest.raises(ValueError, match="must be 'up' or 'down'"):
+        parse_env_spec("gpu:2:1:sideways")
+
+
+def test_parse_link_spec_rejects_malformed_input():
+    with pytest.raises(ValueError, match="expected a:b:bandwidth:latency"):
+        parse_link_spec("a:b:1e9")
+    with pytest.raises(ValueError, match="must be numbers"):
+        parse_link_spec("a:b:fast:0.5")
+
+
+def test_parse_fail_spec():
+    assert parse_fail_spec("remote:30") == ("remote", 30.0, None)
+    assert parse_fail_spec("remote:30:60") == ("remote", 30.0, 60.0)
+    with pytest.raises(ValueError, match="expected env:time"):
+        parse_fail_spec("remote")
+    with pytest.raises(ValueError, match="must be numbers"):
+        parse_fail_spec("remote:soon")
+
+
+def test_build_registry_rejects_duplicate_env_names():
+    with pytest.raises(ValueError, match="duplicate environment name"):
+        build_registry(extra_envs=["remote:5"])
+    with pytest.raises(ValueError, match="duplicate environment name"):
+        build_registry(extra_envs=["tpu:40", "tpu:20"])
+
+
+def test_main_reports_spec_errors_as_argparse_errors(tmp_path, capsys,
+                                                     monkeypatch):
+    path = _demo_ipynb(tmp_path)
+    for bad in (["--env", "remote:5"], ["--env", "foo:abc"],
+                ["--link", "a:b:xx:1"], ["--fail-env", "remote:soon"],
+                ["--fail-env", "nosuch:5", "--fleet", "2"]):
+        monkeypatch.setattr(sys, "argv", ["notebook", path] + bad)
+        with pytest.raises(SystemExit) as exc:
+            main()
+        assert exc.value.code == 2        # argparse usage error, not a crash
+        err = capsys.readouterr().err
+        assert "error:" in err and "Traceback" not in err
+
+
+def test_main_keeps_real_tracebacks_for_notebook_errors(tmp_path,
+                                                        monkeypatch):
+    """Only spec mistakes become argparse errors — a ValueError raised by
+    the user's own notebook code must propagate as itself."""
+    nb = {"nbformat": 4, "nbformat_minor": 5, "metadata": {"name": "boom"},
+          "cells": [{"id": "c0", "cell_type": "code",
+                     "metadata": {"repro": {"cost": 0.1}},
+                     "source": "int('not-a-number')"}]}
+    p = tmp_path / "boom.ipynb"
+    p.write_text(json.dumps(nb))
+    monkeypatch.setattr(sys, "argv", ["notebook", str(p)])
+    with pytest.raises(ValueError, match="not-a-number"):
+        main()
