@@ -1,0 +1,155 @@
+"""Benchmark regression gate.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--baselines benchmarks/baselines] [--current .] [--update]
+
+Compares the fresh smoke-run ``BENCH_*.json`` reports against committed
+baselines with per-metric tolerances and exits non-zero on any regression
+— CI runs it right after the benchmark smoke, so a PR that quietly makes
+the transport ship more bytes, the CAS dedup less effective, or the
+predictor less accurate fails its build instead of landing.
+
+Rules live in ``<baselines>/tolerances.json``:
+
+    {"BENCH_transport.json": [
+        {"metric": "small_mutation.socket.wire_bytes",
+         "cmp": "max", "tol": 0.10}, ...], ...}
+
+``metric`` is a dotted path into the report.  ``cmp: "max"`` gates a
+lower-is-better metric (fresh must stay <= baseline * (1 + tol));
+``cmp: "min"`` gates higher-is-better (fresh >= baseline * (1 - tol)).
+Only *deterministic* metrics belong here (byte counts, frame counts,
+seeded ratios) — wall-clock seconds vary by machine and would flake.
+
+``--update`` rewrites the baseline files from the current reports (run a
+fresh ``--smoke`` first); tolerances are never auto-updated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def lookup(doc, dotted: str):
+    """Dotted path into a report; integer parts index into lists
+    (``arrivals.0.queue_wait.static``)."""
+    cur = doc
+    for part in dotted.split("."):
+        if isinstance(cur, list):
+            if not part.isdigit() or int(part) >= len(cur):
+                raise KeyError(dotted)
+            cur = cur[int(part)]
+        elif isinstance(cur, dict) and part in cur:
+            cur = cur[part]
+        else:
+            raise KeyError(dotted)
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        raise TypeError(f"{dotted} is {type(cur).__name__}, not a number")
+    return float(cur)
+
+
+def check_file(rules: list[dict], baseline: dict, current: dict,
+               fname: str) -> list[str]:
+    """Apply one file's rules; returns human-readable failure lines."""
+    failures = []
+    for rule in rules:
+        metric, cmp_, tol = rule["metric"], rule["cmp"], float(rule["tol"])
+        try:
+            base = lookup(baseline, metric)
+        except (KeyError, TypeError) as e:
+            failures.append(f"{fname}:{metric}: missing in baseline ({e})")
+            continue
+        try:
+            cur = lookup(current, metric)
+        except (KeyError, TypeError) as e:
+            failures.append(f"{fname}:{metric}: missing in fresh report "
+                            f"({e}) — did the benchmark stop emitting it?")
+            continue
+        if cmp_ == "max":
+            bound = base * (1.0 + tol)
+            if cur > bound:
+                failures.append(
+                    f"{fname}:{metric}: REGRESSION {cur:g} > {bound:g} "
+                    f"(baseline {base:g}, tol +{tol:.0%})")
+        elif cmp_ == "min":
+            bound = base * (1.0 - tol)
+            if cur < bound:
+                failures.append(
+                    f"{fname}:{metric}: REGRESSION {cur:g} < {bound:g} "
+                    f"(baseline {base:g}, tol -{tol:.0%})")
+        else:
+            failures.append(f"{fname}:{metric}: unknown cmp {cmp_!r}")
+    return failures
+
+
+def check_all(baselines_dir: str, current_dir: str) -> list[str]:
+    tol_path = os.path.join(baselines_dir, "tolerances.json")
+    with open(tol_path) as f:
+        spec = json.load(f)
+    failures: list[str] = []
+    for fname, rules in sorted(spec.items()):
+        base_path = os.path.join(baselines_dir, fname)
+        cur_path = os.path.join(current_dir, fname)
+        if not os.path.exists(base_path):
+            failures.append(f"{fname}: no committed baseline at {base_path} "
+                            f"(run with --update to create it)")
+            continue
+        if not os.path.exists(cur_path):
+            failures.append(f"{fname}: fresh report missing at {cur_path} "
+                            f"(did the benchmark smoke run?)")
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        failures.extend(check_file(rules, baseline, current, fname))
+    return failures
+
+
+def update_baselines(baselines_dir: str, current_dir: str) -> list[str]:
+    tol_path = os.path.join(baselines_dir, "tolerances.json")
+    with open(tol_path) as f:
+        spec = json.load(f)
+    written = []
+    for fname in spec:
+        cur_path = os.path.join(current_dir, fname)
+        if not os.path.exists(cur_path):
+            raise SystemExit(f"--update: {cur_path} missing — run the "
+                             f"benchmark smoke first")
+        with open(cur_path) as f:
+            doc = json.load(f)
+        out = os.path.join(baselines_dir, fname)
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        written.append(out)
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES)
+    ap.add_argument("--current", default=".")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from the current reports")
+    args = ap.parse_args(argv)
+    if args.update:
+        for path in update_baselines(args.baselines, args.current):
+            print(f"baseline updated: {path}")
+        return 0
+    failures = check_all(args.baselines, args.current)
+    if failures:
+        print("benchmark regression gate FAILED:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("benchmark regression gate: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

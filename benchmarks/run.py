@@ -3,12 +3,19 @@
     PYTHONPATH=src python -m benchmarks.run [--only table2] [--smoke]
 
 ``--smoke`` runs every module for one tiny iteration (CI-friendly).
-Prints ``name,value,derived`` CSV rows.
+Prints ``name,value,derived`` CSV rows, then a per-benchmark PASS/FAIL
+summary on stderr; exits non-zero if any benchmark raised.
+
+Benchmarks that emit a ``BENCH_*.json`` artifact have it *deleted before
+they run*: a benchmark that dies mid-list must leave no stale artifact
+behind for CI to upload as if it were fresh (the upload step then fails on
+the missing file instead).
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import os
 import sys
 import time
 import traceback
@@ -23,9 +30,18 @@ MODULES = [
     "bench_state_plane",          # CAS chunk delta vs whole-name baseline
     "bench_context",              # interaction models / prefetch gate
     "bench_fleet",                # event-driven fleet: arrivals/failures/scaling
+    "bench_transport",            # wire protocol: loopback vs socket vs shaped
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
+
+# module -> the JSON artifact it (re)writes; used for stale-artifact removal
+ARTIFACTS = {
+    "bench_state_plane": "BENCH_state_plane.json",
+    "bench_context": "BENCH_context.json",
+    "bench_fleet": "BENCH_fleet.json",
+    "bench_transport": "BENCH_transport.json",
+}
 
 
 def main() -> None:
@@ -34,12 +50,16 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny iteration per benchmark")
     args = ap.parse_args()
-    failures = 0
+    results: list[tuple[str, bool, float]] = []
     print("name,value,derived")
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
+        artifact = ARTIFACTS.get(modname)
+        if artifact and os.path.exists(artifact):
+            os.remove(artifact)          # never upload a stale report
         t0 = time.perf_counter()
+        ok = True
         try:
             mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
             kw = {}
@@ -48,11 +68,16 @@ def main() -> None:
             for name, val, note in mod.run(**kw):
                 print(f"{name},{val},{note}")
         except Exception:  # noqa: BLE001
-            failures += 1
+            ok = False
             traceback.print_exc()
-            print(f"{modname},ERROR,", file=sys.stderr)
-        print(f"# {modname}: {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+        results.append((modname, ok, time.perf_counter() - t0))
+    print("#\n# summary:", file=sys.stderr)
+    for modname, ok, secs in results:
+        print(f"#   {modname:<28} {'PASS' if ok else 'FAIL':<4} {secs:6.1f}s",
+              file=sys.stderr)
+    failures = sum(1 for _, ok, _ in results if not ok)
     if failures:
+        print(f"# {failures} benchmark(s) failed", file=sys.stderr)
         sys.exit(1)
 
 

@@ -37,6 +37,12 @@ from repro.core.simulator import (
     synthetic_loops_trace, tf_guide_trace,
 )
 from repro.core.state import ExecutionState
+from repro.core.transport import (
+    TRANSPORTS, DigestMirrorStore, LoopbackTransport, MigrationPeer,
+    SocketTransport, SubprocessEnv, TokenBucket, Transport, WireReceiver,
+    attach_peer,
+)
+from repro.core.wire import Frame, FrameDecoder, WireError
 
 __all__ = [
     "BlockPolicy", "CostMatrixPolicy", "Decision", "HorizonPolicy",
@@ -59,4 +65,7 @@ __all__ = [
     "WallClock", "Trace",
     "TRACES", "cell_frequency", "policy_grid", "simulate",
     "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",
+    "TRANSPORTS", "DigestMirrorStore", "LoopbackTransport", "MigrationPeer",
+    "SocketTransport", "SubprocessEnv", "TokenBucket", "Transport",
+    "WireReceiver", "attach_peer", "Frame", "FrameDecoder", "WireError",
 ]

@@ -203,6 +203,30 @@ class MemoryChunkStore:
         for d, c in chunks.items():
             self.put(d, c)
 
+    # -- wire ingestion --------------------------------------------------
+    def ingest_frame(self, frame) -> int:
+        """Ingest one CHUNK wire frame incrementally (transport plane):
+        the frame's store-encoded body lands under its digest.  A payload
+        whose codec tag is unknown is rejected as a WireError before it can
+        poison the store."""
+        from repro.core.wire import WireError, parse_chunk
+        d, encoded = parse_chunk(frame)
+        if not encoded or encoded[0] not in _CODEC_NAMES:
+            raise WireError(
+                f"chunk {d:016x}: unknown codec tag "
+                f"{encoded[0] if encoded else None!r}")
+        self.put(d, encoded)
+        return d
+
+    def ingest_frames(self, frames) -> tuple[int, int]:
+        """Ingest a CHUNK-frame iterable; returns (chunks, encoded bytes)."""
+        count = nbytes = 0
+        for f in frames:
+            d = self.ingest_frame(f)
+            count += 1
+            nbytes += len(f.payload) - 8      # minus the digest prefix
+        return count, nbytes
+
     def digests(self) -> set[int]:
         return set(self._chunks)
 

@@ -57,7 +57,8 @@ class ExecutionEnvironment:
                  mesh_ctx=None, globals_seed: dict | None = None,
                  kind: str = "compute", chunk_store=None,
                  storage_dir: str | None = None, status: str = "up",
-                 cold_start: float = 0.0, idle_timeout: float | None = None):
+                 cold_start: float = 0.0, idle_timeout: float | None = None,
+                 transport: str = "loopback"):
         assert status in LIFECYCLE, status
         self.name = name
         self.speedup = float(speedup)
@@ -68,6 +69,13 @@ class ExecutionEnvironment:
         self.cold_start = float(cold_start)
         self.idle_timeout = idle_timeout
         self.ready_at = 0.0              # when a provisioning env comes up
+        # transport plane: how migration traffic reaches this env.
+        # "loopback" (default) = in-process, zero-copy, simulated timing —
+        # the paper's setup.  "socket"/"subprocess" envs additionally carry
+        # a ``peer`` (a transport.MigrationPeer) once one is attached; the
+        # engine streams real wire frames through it.
+        self.transport = transport
+        self.peer = None
         if chunk_store is None:
             chunk_store = (DiskChunkStore(storage_dir) if storage_dir
                            else MemoryChunkStore())
@@ -110,9 +118,14 @@ class ExecutionEnvironment:
 
 @dataclass(frozen=True)
 class Link:
-    """Directed transfer cost between two environments."""
+    """Directed transfer cost between two environments.  ``transport``
+    names which transport binding the pair's migration traffic rides
+    (loopback = in-process simulated movement; socket = real framed TCP,
+    optionally shaped).  The *cost model* is the same either way — real
+    transports record measured wall time alongside the modeled seconds."""
     bandwidth: float = 1e9          # bytes/second
     latency: float = 0.5            # seconds per transfer
+    transport: str = "loopback"
 
     def transfer_seconds(self, nbytes: int | float) -> float:
         return self.latency + nbytes / self.bandwidth
@@ -175,6 +188,21 @@ class EnvironmentRegistry:
         if old != status:
             self.lifecycle_log.append((now, name, old, status))
 
+    def set_transport(self, name: str, kind: str, *,
+                      now: float = 0.0) -> None:
+        """Mark which transport carries migration traffic to ``name``
+        (fleet plane); audit-logged like a lifecycle transition."""
+        from repro.core.transport import TRANSPORTS
+        if kind not in TRANSPORTS:
+            raise ValueError(f"unknown transport {kind!r} "
+                             f"(expected one of {TRANSPORTS})")
+        env = self._envs[name]
+        old = getattr(env, "transport", "loopback")
+        env.transport = kind
+        if old != kind:
+            self.lifecycle_log.append(
+                (now, name, f"transport:{old}", f"transport:{kind}"))
+
     def __getitem__(self, name: str) -> ExecutionEnvironment:
         return self._envs[name]
 
@@ -209,11 +237,14 @@ class EnvironmentRegistry:
 
     # -- links ----------------------------------------------------------
     def connect(self, a: str, b: str, *, bandwidth: float | None = None,
-                latency: float | None = None, symmetric: bool = True) -> Link:
+                latency: float | None = None, symmetric: bool = True,
+                transport: str | None = None) -> Link:
         link = Link(bandwidth if bandwidth is not None
                     else self.default_link.bandwidth,
                     latency if latency is not None
-                    else self.default_link.latency)
+                    else self.default_link.latency,
+                    transport if transport is not None
+                    else self.default_link.transport)
         self._links[(a, b)] = link
         if symmetric:
             self._links[(b, a)] = link
@@ -253,6 +284,7 @@ class EnvironmentRegistry:
                 name, speedup=env.speedup, mesh_ctx=env.mesh_ctx,
                 kind=env.kind, storage_dir=env.storage_dir,
                 cold_start=env.cold_start, idle_timeout=env.idle_timeout,
+                transport=getattr(env, "transport", "loopback"),
                 chunk_store=env.chunk_store if share_chunk_stores
                 else None)
             # lifecycle state carries over verbatim (the clone stands for

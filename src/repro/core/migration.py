@@ -67,6 +67,12 @@ class MigrationResult:
     noop: bool = False       # empty delta: nothing travelled, nothing charged
     prefetched: tuple[str, ...] = ()   # names applied from a pipelined prefetch
     wasted_prefetch_bytes: int = 0     # speculative bytes streamed but unused
+    # transport plane: what the migration actually cost on a real transport.
+    # ``seconds`` above stays the *modeled* charge (placement decisions and
+    # the sim clock run on it); these record reality when frames moved.
+    transport: str = "loopback"
+    wire_frames: int = 0               # frames that crossed the transport
+    wall_seconds: float = 0.0          # measured transfer wall time
 
 
 @dataclass
@@ -82,6 +88,7 @@ class _PendingPrefetch:
     predicted_order: int | None = None   # cell this speculation bets on
     prob: float | None = None            # predicted probability (None=planned)
     dst_store: object = None             # receiver's chunk store (for banking)
+    peer: object = None                  # transport peer when dst is remote
 
 
 class MigrationEngine:
@@ -135,7 +142,15 @@ class MigrationEngine:
                 names: set[str] | None = None,
                 strict: bool = True, now: float | None = None) -> MigrationResult:
         """Move the state ``cell_source`` needs (or explicit ``names``) from
-        src to dst; only new/changed names are serialized when delta is on."""
+        src to dst; only new/changed names are serialized when delta is on.
+
+        When either end carries a transport ``peer`` (socket / subprocess),
+        the migration genuinely streams wire frames — chunk-manifest
+        exchange, chunk payloads, tombstones — instead of moving objects in
+        process; the modeled ``seconds`` are unchanged, and the real frame
+        count and wall time land on the result."""
+        if getattr(src, "peer", None) is not None:
+            return self._migrate_pull(src, dst, cell_source, names, strict)
         import types as _types
         modules: set[str] = set()
         if names is None:
@@ -143,10 +158,17 @@ class MigrationEngine:
                 names, modules, _ = self.reducer.reduce(src.state, cell_source)
             else:
                 names = set(src.state.names())
-        # re-import module aliases on the destination (paper: preamble/deps)
+        # re-import module aliases on the destination (paper: preamble/deps);
+        # for a transport-bound destination the alias specs ride the
+        # manifest instead and the receiver imports them itself
+        dst_peer = getattr(dst, "peer", None)
+        mod_aliases: list[str] = []
         for alias, val in list(src.state.ns.items()):
             if isinstance(val, _types.ModuleType) and (
                     alias in names or val.__name__.split(".")[0] in modules):
+                mod_aliases.append(f"{alias}={val.__name__}")
+                if dst_peer is not None:
+                    continue
                 try:
                     dst.state.ns[alias] = __import__(val.__name__)
                     if "." in val.__name__:  # alias points at a submodule
@@ -171,18 +193,34 @@ class MigrationEngine:
         # its store already holds; only missing chunks cross the wire, so a
         # small in-place update to a large array moves one chunk, not the
         # array, and a dataset shared across sessions moves once.
-        dst_store = dst.chunk_store
-        held = {d for d in ser.chunks if dst_store.has(d)}
-        wire_bytes = ser.wire_nbytes(held)
-        dst_store.put_many(ser.missing_chunks(held))
-        src.chunk_store.put_many(ser.chunks)   # sender holds its own content
-        if dst.kind != "storage":
-            # storage envs are manifest+CAS only: restore reads the store,
-            # so materializing leaves into the namespace would just pin a
-            # second in-RAM copy of every checkpoint
-            objs = self.reducer.deserialize(ser, target_ns=dst.state.ns,
-                                            chunk_store=dst_store)
-            dst.state.update(objs)
+        wire_frames, wall_seconds = 0, 0.0
+        if dst_peer is not None and (send or dead or mod_aliases):
+            # transport-bound destination: the manifest exchange happens
+            # over real frames — the receiver's need-ack IS the held set.
+            # Module aliases ride the manifest, so they must stream even
+            # when the state delta is empty (the loopback path re-imports
+            # them unconditionally; an alias-only stream keeps parity)
+            stats = dst_peer.send_state(ser, deleted=dead,
+                                        modules=mod_aliases)
+            held = {d for d in ser.chunks if d in stats.held}
+            wire_bytes = ser.wire_nbytes(held)
+            # the mirror records what the remote store now holds
+            dst.chunk_store.put_many(ser.chunks)
+            src.chunk_store.put_many(ser.chunks)
+            wire_frames, wall_seconds = stats.frames, stats.wall_seconds
+        else:
+            dst_store = dst.chunk_store
+            held = {d for d in ser.chunks if dst_store.has(d)}
+            wire_bytes = ser.wire_nbytes(held)
+            dst_store.put_many(ser.missing_chunks(held))
+            src.chunk_store.put_many(ser.chunks)  # sender holds its own content
+            if dst.kind != "storage" and dst_peer is None:
+                # storage envs are manifest+CAS only: restore reads the
+                # store, so materializing leaves into the namespace would
+                # just pin a second in-RAM copy of every checkpoint
+                objs = self.reducer.deserialize(ser, target_ns=dst.state.ns,
+                                                chunk_store=dst_store)
+                dst.state.update(objs)
         dst.state.drop(dead)
 
         known.update(ser.digests)
@@ -200,7 +238,56 @@ class MigrationEngine:
             wire_bytes, src.name, dst.name)
         res = MigrationResult(src.name, dst.name, tuple(sorted(send)),
                               tuple(sorted(dead)), 0 if noop else wire_bytes,
-                              seconds, noop=noop)
+                              seconds, noop=noop,
+                              transport=(getattr(dst, "transport", "socket")
+                                         if dst_peer is not None
+                                         else "loopback"),
+                              wire_frames=wire_frames,
+                              wall_seconds=wall_seconds)
+        self.last_ser = ser
+        self.log.append(res)
+        return res
+
+    def _migrate_pull(self, src: ExecutionEnvironment,
+                      dst: ExecutionEnvironment,
+                      cell_source: str | None, names: set[str] | None,
+                      strict: bool) -> MigrationResult:
+        """``src``'s namespace lives behind a transport peer (a subprocess
+        or socket-served env): the remote side reduces, computes the delta
+        against our content view, serializes, and streams the state home.
+        Chunks ``dst``'s store already holds are not re-requested."""
+        from repro.core.transport import import_alias_specs
+        known = self.synced.setdefault(dst.name, {})
+        ser, dead, modules, stats = src.peer.fetch_state(
+            names=set(names) if names is not None else None,
+            cell_source=cell_source,
+            known=known if self.delta else {},
+            strict=strict, delta=self.delta, store=dst.chunk_store)
+        # module aliases re-import on the destination (paper: preamble/deps)
+        import_alias_specs(dst.state.ns, modules)
+        wire_bytes = ser.wire_nbytes(set(stats.held))
+        dst.chunk_store.put_many(ser.chunks)
+        if dst.kind != "storage":
+            objs = self.reducer.deserialize(ser, target_ns=dst.state.ns,
+                                            chunk_store=dst.chunk_store)
+            dst.state.update(objs)
+        dst.state.drop(dead)
+        known.update(ser.digests)
+        for n in dead:
+            known.pop(n, None)
+        self.synced.setdefault(src.name, {}).update(ser.digests)
+        if dead:
+            self._propagate_tombstones(dead, exclude=(dst.name,))
+        send = set(ser.blobs)
+        noop = not send and not dead
+        seconds = 0.0 if noop else self.transfer_seconds(
+            wire_bytes, src.name, dst.name)
+        res = MigrationResult(src.name, dst.name, tuple(sorted(send)),
+                              tuple(sorted(dead)), 0 if noop else wire_bytes,
+                              seconds, noop=noop,
+                              transport=getattr(src, "transport", "socket"),
+                              wire_frames=stats.frames,
+                              wall_seconds=stats.wall_seconds)
         self.last_ser = ser
         self.log.append(res)
         return res
@@ -285,13 +372,18 @@ class PipelinedMigrationEngine(MigrationEngine):
         the wasted bytes (what already streamed).  Chunks that fully arrived
         are still banked into the receiver's store — content-addressed
         chunks are immutable, so they may yet pay off — but the bytes are
-        charged as waste because this speculation did not."""
+        charged as waste because this speculation did not.  A transport-
+        bound destination additionally gets a CANCEL frame (a no-op when
+        the synchronous speculative stream already completed; it clears
+        remote stream state if the transfer was interrupted)."""
         p = self._pending.pop(dst_name, None)
         if p is None:
             return 0
         wasted = self._delivered_bytes(p, now)
         if now is not None and now >= p.ready_at and p.dst_store is not None:
             p.dst_store.put_many(p.ser.chunks)
+        if p.peer is not None:
+            p.peer.cancel()
         self.prefetch_cancelled += 1
         self.prefetch_wasted_bytes += wasted
         return wasted
@@ -342,6 +434,8 @@ class PipelinedMigrationEngine(MigrationEngine):
         accounted).  ``prob=None`` is a planned transfer and bypasses the
         gate (the paper's unconditional next-hop prefetch)."""
         import types as _types
+        if getattr(src, "peer", None) is not None:
+            return None      # a remote namespace cannot be snapshotted here
         if prob is not None and self.gate is not None \
                 and not self.gate.allow(prob):
             self.prefetch_gated += 1
@@ -366,13 +460,21 @@ class PipelinedMigrationEngine(MigrationEngine):
         if not ser.blobs:
             return None
         # only chunks the receiver's store lacks actually stream
-        held = frozenset(d for d in ser.chunks if dst.chunk_store.has(d))
+        dst_peer = getattr(dst, "peer", None)
+        if dst_peer is not None:
+            # speculative frames really travel: the receiver banks the
+            # chunks (no namespace apply until a claiming stream lands)
+            stats = dst_peer.send_state(ser, speculative=True)
+            held = frozenset(d for d in ser.chunks if d in stats.held)
+            dst.chunk_store.put_many(ser.chunks)    # mirror what was banked
+        else:
+            held = frozenset(d for d in ser.chunks if dst.chunk_store.has(d))
         nbytes = ser.wire_nbytes(set(held))
         pending = _PendingPrefetch(
             src.name, dst.name, ser, started_at=now,
             ready_at=now + self.transfer_seconds(nbytes, src.name, dst.name),
             nbytes=nbytes, held=held, predicted_order=predicted_order,
-            prob=prob, dst_store=dst.chunk_store)
+            prob=prob, dst_store=dst.chunk_store, peer=dst_peer)
         self._pending[dst.name] = pending
         self.prefetch_issued += 1
         return pending
@@ -446,9 +548,20 @@ class PipelinedMigrationEngine(MigrationEngine):
         sub.chunks = {d: p.ser.chunks[d]
                       for b in sub.blobs.values() for d in b.chunk_digests()
                       if d in p.ser.chunks}
-        objs = self.reducer.deserialize(sub, target_ns=dst.state.ns,
-                                        chunk_store=dst.chunk_store)
-        dst.state.update(objs)
+        if p.peer is not None:
+            # remote claim: the chunks are already banked over there, so
+            # this stream is manifest-only — the receiver materializes the
+            # names from its own store.  Its frames are real traffic and
+            # count on the result (the residual migrate above was likely
+            # a frameless noop)
+            claim_stats = p.peer.send_state(sub)
+            res.wire_frames += claim_stats.frames
+            res.wall_seconds += claim_stats.wall_seconds
+            res.transport = getattr(dst, "transport", res.transport)
+        else:
+            objs = self.reducer.deserialize(sub, target_ns=dst.state.ns,
+                                            chunk_store=dst.chunk_store)
+            dst.state.update(objs)
         # residual wait models the applied subset streaming since started_at
         # (not the full speculative snapshot, which may be mostly synced);
         # chunks the receiver already held at begin time never streamed

@@ -380,6 +380,8 @@ class ScheduleReport:
     fault_events: list[tuple[float, str, str, str]] = field(
         default_factory=list)
     pruned_intervals: int = 0
+    # transport plane: which transport each env's migration traffic rides
+    env_transports: dict[str, str] = field(default_factory=dict)
     total_queue_wait: float = field(init=False)
     total_think_time: float = field(init=False)
     prediction_hit_rate: float = field(init=False)
@@ -458,6 +460,22 @@ class SessionScheduler:
         self._coord = None
 
     # -- fleet configuration -------------------------------------------
+    def set_transport(self, env: str, kind: str, *, now: float = 0.0) -> None:
+        """Transport plane: mark which transport carries migration traffic
+        to ``env`` ("loopback" | "socket" | "subprocess").  The mark lands
+        on the physical registry (audit-logged) and is mirrored into every
+        session clone, so engines that later attach a live peer — and the
+        report below — agree on the binding."""
+        self.registry.set_transport(env, kind, now=now)
+        for s in self._sessions:
+            if env in s.runtime.registry:
+                s.runtime.registry[env].transport = kind
+
+    def env_transports(self) -> dict[str, str]:
+        """Current transport binding per registered env."""
+        return {n: getattr(e, "transport", "loopback")
+                for n, e in self.registry.envs().items()}
+
     @property
     def detect_delay(self) -> float:
         """Failure-detection latency: the heartbeat protocol's miss window
@@ -814,4 +832,5 @@ class SessionScheduler:
             fault_events=[(ev.time, ev.kind, ev.worker, ev.detail)
                           for ev in (self._coord.events if self._coord
                                      else [])],
-            pruned_intervals=self.arbiter.pruned_intervals)
+            pruned_intervals=self.arbiter.pruned_intervals,
+            env_transports=self.env_transports())

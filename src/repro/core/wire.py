@@ -1,0 +1,321 @@
+"""Versioned wire format for migration traffic (the transport plane's
+bottom half).
+
+Every byte that crosses a real link rides a length-prefixed, CRC-checked
+**frame**:
+
+    frame   := u32_le payload_len | u8 type | payload | u32_le crc
+    crc     := crc32(type_byte + payload)
+
+A migration is one **state stream** — the same grammar in both directions
+(push via ``MANIFEST``-first, pull via ``FETCH``-first):
+
+    session      := HELLO  (both directions, once per connection)
+    state-stream := MANIFEST ack(need) CHUNK* [TOMBSTONE] END ack(done)
+    exec-rpc     := EXEC RESULT
+    pull         := FETCH state-stream     (remote is the sender)
+    abort        := CANCEL                 (drop the in-flight stream)
+
+``MANIFEST`` carries the chunk manifest (names, per-name content digests,
+array metadata, chunk digest lists, pickle streams) as canonical JSON, so a
+byte-for-byte golden vector pins the format.  ``CHUNK`` payloads are the
+*store encoding* — 8-byte digest + 1-byte codec tag + compressed body — so a
+received chunk frame lands in a :class:`~repro.core.chunkstore.MemoryChunkStore`
+verbatim.  ``TOMBSTONE`` propagates deletions.  ``ACK`` closes each half of
+the exchange (the receiver advertises which chunks it needs, then confirms
+the applied names).
+
+Corruption of any kind — truncation, bit flips in header or payload, an
+unknown frame type, an absurd length — surfaces as :class:`WireError`,
+never a crash or a silently wrong namespace.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import struct
+import zlib
+from typing import Iterable, Iterator
+
+MAGIC = b"RWIR"
+VERSION = 1
+
+# frame types ----------------------------------------------------------
+HELLO = 1        # session header: magic + version + codec + flags
+MANIFEST = 2     # chunk manifest for one state stream (canonical JSON)
+CHUNK = 3        # u64 digest + store-encoded chunk (codec tag + body)
+ACK = 4          # JSON: {"need": [...]} after MANIFEST, {"applied": [...]} after END
+TOMBSTONE = 5    # JSON: ["name", ...] deleted on the sender
+END = 6          # state stream complete
+CANCEL = 7       # abort the in-flight state stream (speculation went stale)
+ERROR = 8        # JSON: {"error": str, "kind": str} — remote failure
+EXEC = 9         # JSON: {"source": str, "cost": float|null}
+RESULT = 10      # JSON: {"duration": float} or {"error": str}
+FETCH = 11       # JSON: pull request — the remote becomes the sender
+BYE = 12         # close the session
+
+FRAME_TYPES = frozenset((HELLO, MANIFEST, CHUNK, ACK, TOMBSTONE, END,
+                         CANCEL, ERROR, EXEC, RESULT, FETCH, BYE))
+TYPE_NAMES = {HELLO: "HELLO", MANIFEST: "MANIFEST", CHUNK: "CHUNK",
+              ACK: "ACK", TOMBSTONE: "TOMBSTONE", END: "END",
+              CANCEL: "CANCEL", ERROR: "ERROR", EXEC: "EXEC",
+              RESULT: "RESULT", FETCH: "FETCH", BYE: "BYE"}
+
+_HEADER = struct.Struct("<IB")        # payload_len, frame_type
+_CRC = struct.Struct("<I")
+FRAME_OVERHEAD = _HEADER.size + _CRC.size          # 9 bytes per frame
+
+# no legitimate frame approaches this: chunks are <= 256 KiB + codec
+# overhead, manifests are metadata.  A corrupted length prefix must fail
+# fast instead of asking for gigabytes.
+MAX_PAYLOAD = 64 << 20
+
+
+class WireError(Exception):
+    """Malformed or corrupted wire traffic (bad CRC, truncation, unknown
+    frame type, oversized length, invalid HELLO, undecodable payload)."""
+
+
+class Frame:
+    """One decoded frame.  ``wire_size`` is what it costs on a real link;
+    loopback transports pass Frame objects without ever encoding them."""
+
+    __slots__ = ("ftype", "payload")
+
+    def __init__(self, ftype: int, payload: bytes = b""):
+        self.ftype = ftype
+        self.payload = payload
+
+    @property
+    def wire_size(self) -> int:
+        return FRAME_OVERHEAD + len(self.payload)
+
+    def encoded(self) -> bytes:
+        return encode_frame(self.ftype, self.payload)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Frame({TYPE_NAMES.get(self.ftype, self.ftype)}, "
+                f"{len(self.payload)}B)")
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, Frame) and other.ftype == self.ftype
+                and other.payload == self.payload)
+
+
+def encode_frame(ftype: int, payload: bytes) -> bytes:
+    crc = zlib.crc32(payload, zlib.crc32(bytes((ftype,))))
+    return _HEADER.pack(len(payload), ftype) + payload + _CRC.pack(crc)
+
+
+class FrameDecoder:
+    """Incremental frame decoder: feed bytes as they arrive off a socket,
+    iterate complete frames.  Every integrity violation is a WireError."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> None:
+        self._buf.extend(data)
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def frames(self) -> Iterator[Frame]:
+        while True:
+            f = self._next()
+            if f is None:
+                return
+            yield f
+
+    def _next(self) -> Frame | None:
+        buf = self._buf
+        if len(buf) < _HEADER.size:
+            return None
+        plen, ftype = _HEADER.unpack_from(buf)
+        if plen > MAX_PAYLOAD:
+            raise WireError(f"frame length {plen} exceeds MAX_PAYLOAD "
+                            f"({MAX_PAYLOAD}) — corrupted length prefix?")
+        if ftype not in FRAME_TYPES:
+            raise WireError(f"unknown frame type {ftype}")
+        total = _HEADER.size + plen + _CRC.size
+        if len(buf) < total:
+            return None
+        payload = bytes(buf[_HEADER.size:_HEADER.size + plen])
+        (crc,) = _CRC.unpack_from(buf, _HEADER.size + plen)
+        want = zlib.crc32(payload, zlib.crc32(bytes((ftype,))))
+        if crc != want:
+            raise WireError(
+                f"CRC mismatch on {TYPE_NAMES[ftype]} frame "
+                f"(got {crc:#010x}, want {want:#010x})")
+        del buf[:total]
+        return Frame(ftype, payload)
+
+
+def decode_frames(data: bytes) -> list[Frame]:
+    """Decode a complete frame stream; trailing partial bytes are a
+    WireError (a *stream* must end on a frame boundary)."""
+    dec = FrameDecoder()
+    dec.feed(data)
+    out = list(dec.frames())
+    if dec.pending_bytes:
+        raise WireError(f"{dec.pending_bytes} trailing bytes after the last "
+                        f"complete frame (truncated stream?)")
+    return out
+
+
+# ----------------------------------------------------------------------
+# HELLO
+# ----------------------------------------------------------------------
+
+_HELLO = struct.Struct("<4sHBB")     # magic, version, codec_id, flags
+
+
+def hello_frame(codec: str = "zlib", flags: int = 0) -> Frame:
+    from repro.core.chunkstore import _CODEC_IDS
+    cid = _CODEC_IDS.get(codec if codec in _CODEC_IDS else "zlib", 1)
+    return Frame(HELLO, _HELLO.pack(MAGIC, VERSION, cid, flags))
+
+
+def parse_hello(frame: Frame) -> dict:
+    from repro.core.chunkstore import _CODEC_NAMES
+    if frame.ftype != HELLO:
+        raise WireError(f"expected HELLO, got {TYPE_NAMES.get(frame.ftype)}")
+    try:
+        magic, version, cid, flags = _HELLO.unpack(frame.payload)
+    except struct.error as e:
+        raise WireError(f"malformed HELLO payload: {e}") from None
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r} (want {MAGIC!r})")
+    if version != VERSION:
+        raise WireError(f"unsupported wire version {version} "
+                        f"(this side speaks {VERSION})")
+    return {"version": version, "codec": _CODEC_NAMES.get(cid, "zlib"),
+            "flags": flags}
+
+
+# ----------------------------------------------------------------------
+# JSON control payloads (canonical: sorted keys, compact separators)
+# ----------------------------------------------------------------------
+
+def json_frame(ftype: int, obj) -> Frame:
+    return Frame(ftype, json.dumps(
+        obj, sort_keys=True, separators=(",", ":")).encode())
+
+
+def parse_json(frame: Frame):
+    try:
+        return json.loads(frame.payload.decode())
+    except (ValueError, UnicodeDecodeError) as e:
+        raise WireError(
+            f"undecodable {TYPE_NAMES.get(frame.ftype, frame.ftype)} "
+            f"payload: {e}") from None
+
+
+# ----------------------------------------------------------------------
+# MANIFEST <-> SerializedState
+# ----------------------------------------------------------------------
+
+def _b64(data: bytes) -> str:
+    return base64.b64encode(data).decode("ascii")
+
+
+def _unb64(s: str) -> bytes:
+    try:
+        return base64.b64decode(s.encode("ascii"), validate=True)
+    except Exception as e:  # noqa: BLE001 — any b64 failure is wire corruption
+        raise WireError(f"bad base64 in manifest: {e}") from None
+
+
+def manifest_frame(ser, *, deleted: Iterable[str] = (),
+                   modules: Iterable[str] = (),
+                   speculative: bool = False) -> Frame:
+    """SerializedState (sans chunk payloads) -> canonical-JSON MANIFEST.
+    Chunk *digests* travel here; chunk *bytes* follow in CHUNK frames."""
+    blobs = {}
+    for name, blob in ser.blobs.items():
+        arrays = []
+        for a in blob.arrays:
+            meta = {"shape": list(a["shape"]), "dtype": a["dtype"],
+                    "quant": bool(a["quant"]), "chunks": list(a["chunks"]),
+                    "clens": list(a["clens"])}
+            if a["quant"]:
+                meta["block"] = int(a["block"])
+                meta["scales"] = _b64(a["scales"])
+            arrays.append(meta)
+        blobs[name] = {"pickle": _b64(blob.pickle_bytes), "arrays": arrays}
+    return json_frame(MANIFEST, {
+        "codec": ser.codec, "blobs": blobs, "digests": dict(ser.digests),
+        "deleted": sorted(deleted), "modules": sorted(modules),
+        "skipped": sorted(ser.skipped), "speculative": bool(speculative)})
+
+
+def parse_manifest(frame: Frame):
+    """MANIFEST frame -> (SerializedState without chunk payloads, deleted
+    names, module names, speculative flag).  Chunks arrive separately and
+    are attached by the receiver."""
+    from repro.core.reducer import SerializedName, SerializedState
+    if frame.ftype != MANIFEST:
+        raise WireError(
+            f"expected MANIFEST, got {TYPE_NAMES.get(frame.ftype)}")
+    doc = parse_json(frame)
+    try:
+        blobs = {}
+        for name, b in doc["blobs"].items():
+            arrays = []
+            for a in b["arrays"]:
+                meta = {"shape": tuple(a["shape"]), "dtype": a["dtype"],
+                        "quant": bool(a["quant"]),
+                        "chunks": [int(d) for d in a["chunks"]],
+                        "clens": [int(c) for c in a["clens"]]}
+                if meta["quant"]:
+                    meta["block"] = int(a["block"])
+                    meta["scales"] = _unb64(a["scales"])
+                arrays.append(meta)
+            blobs[name] = SerializedName(pickle_bytes=_unb64(b["pickle"]),
+                                         arrays=arrays)
+        ser = SerializedState(codec=doc["codec"], blobs=blobs)
+        ser.digests = {n: int(d) for n, d in doc["digests"].items()}
+        ser.skipped = tuple(doc.get("skipped", ()))
+        deleted = tuple(doc.get("deleted", ()))
+        modules = tuple(doc.get("modules", ()))
+        return ser, deleted, modules, bool(doc.get("speculative", False))
+    except WireError:
+        raise
+    except (KeyError, TypeError, ValueError, AttributeError) as e:
+        raise WireError(f"malformed manifest: {e!r}") from None
+
+
+# ----------------------------------------------------------------------
+# CHUNK
+# ----------------------------------------------------------------------
+
+_DIGEST = struct.Struct("<Q")
+
+
+def chunk_frame(digest: int, encoded: bytes) -> Frame:
+    """``encoded`` is the store encoding (1-byte codec tag + body)."""
+    return Frame(CHUNK, _DIGEST.pack(digest & (2**64 - 1)) + encoded)
+
+
+def parse_chunk(frame: Frame) -> tuple[int, bytes]:
+    if frame.ftype != CHUNK:
+        raise WireError(f"expected CHUNK, got {TYPE_NAMES.get(frame.ftype)}")
+    if len(frame.payload) < _DIGEST.size + 1:
+        raise WireError("CHUNK payload too short for digest + codec tag")
+    (digest,) = _DIGEST.unpack_from(frame.payload)
+    return digest, frame.payload[_DIGEST.size:]
+
+
+def state_stream_frames(ser, need: Iterable[int], *,
+                        deleted: Iterable[str] = ()) -> Iterator[Frame]:
+    """The sender's half of a state stream *after* the need-ack: CHUNK
+    frames for the requested digests, TOMBSTONE, END.  (The MANIFEST went
+    out first to elicit the ack.)"""
+    for d in need:
+        if d in ser.chunks:
+            yield chunk_frame(d, ser.chunks[d])
+    deleted = sorted(deleted)
+    if deleted:
+        yield json_frame(TOMBSTONE, deleted)
+    yield Frame(END)

@@ -6,7 +6,14 @@
         [--bandwidth 1e9] [--latency 0.5] [--codec zlib] [--report out.json] \
         [--env tpu-mesh:40:1] [--link local:tpu-mesh:1e8:1.0] [--pipeline] \
         [--fleet 4] [--arrivals 0.2] [--think-time 5] [--seed 0] \
-        [--fail-env remote:30] [--autoscale] [--recovery checkpoint]
+        [--fail-env remote:30] [--autoscale] [--recovery checkpoint] \
+        [--transport loopback|socket]
+
+``--transport socket`` is the two-process demo: the remote env runs as a
+child Python process and every migration genuinely streams CRC-framed
+chunk traffic over TCP (cells execute in the child; results round-trip
+home).  The default ``loopback`` keeps the paper's in-process simulated
+movement.
 
 Cells execute for real (exec against the session namespace); timing follows
 the paper's forced-speedup protocol when cells carry a
@@ -101,16 +108,24 @@ def parse_fail_spec(spec: str) -> tuple[str, float, float | None]:
 def build_registry(*, remote_speedup: float = 10.0, bandwidth: float = 1e9,
                    latency: float = 0.5, extra_envs=(), links=(),
                    cold_start: float = 5.0,
-                   idle_timeout: float = 60.0) -> EnvironmentRegistry:
+                   idle_timeout: float = 60.0,
+                   transport: str = "loopback") -> EnvironmentRegistry:
     """Two-env default plus any ``name:speedup[:capacity[:down]]`` extras
     and ``a:b:bandwidth:latency`` link overrides.  ``down`` envs get the
     fleet ``cold_start``/``idle_timeout`` knobs — they're the autoscaler's
-    burst pool."""
+    burst pool.  ``transport="socket"`` is the two-process demo: the remote
+    env becomes a real child Python process (SubprocessEnv) and every
+    migration streams wire frames over TCP."""
     reg = EnvironmentRegistry(default_bandwidth=bandwidth,
                               default_latency=latency)
     reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
-    reg.register(ExecutionEnvironment("remote", speedup=remote_speedup),
-                 capacity=4)
+    if transport == "socket":
+        from repro.core.transport import SubprocessEnv
+        reg.register(SubprocessEnv("remote", speedup=remote_speedup),
+                     capacity=4)
+    else:
+        reg.register(ExecutionEnvironment("remote", speedup=remote_speedup),
+                     capacity=4)
     for spec in extra_envs:
         name, speedup, cap, status = parse_env_spec(spec)
         if name in reg:
@@ -143,12 +158,23 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  arrivals: float = 0.0, think_time: float = 0.0,
                  seed: int = 0, fail_envs=(), autoscale: bool = False,
                  recovery: str | None = None,
-                 checkpoint_interval: float = 30.0) -> dict:
+                 checkpoint_interval: float = 30.0,
+                 transport: str = "loopback") -> dict:
     with open(path) as f:
         nb = Notebook.from_ipynb(json.load(f))
+    if transport == "socket":
+        if fleet:
+            raise ValueError(
+                "--transport socket is the two-process demo mode and is "
+                "incompatible with --fleet (the fleet plane marks env "
+                "transports declaratively instead)")
+        # Algorithm-2 probing snapshots the env namespace, which for a
+        # subprocess env lives in the child — knowledge probing stays off
+        use_knowledge = False
     registry = build_registry(remote_speedup=remote_speedup,
                               bandwidth=bandwidth, latency=latency,
-                              extra_envs=extra_envs, links=links)
+                              extra_envs=extra_envs, links=links,
+                              transport=transport)
     code = [c for c in nb.cells if c.cell_type == "code"]
 
     if fleet:
@@ -217,10 +243,15 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         policy=policy, use_knowledge=use_knowledge, pipeline=pipeline,
         model=model)
 
-    for _ in range(sessions):
-        for cell in code:
-            rt.run_cell(cell.cell_id)
-    rt.close()
+    try:
+        for _ in range(sessions):
+            for cell in code:
+                rt.run_cell(cell.cell_id)
+    finally:
+        rt.close()
+        for env in registry.envs().values():
+            if hasattr(env, "close"):      # tear down subprocess envs
+                env.close()
 
     local_only = sessions * sum(
         c.cost if c.cost is not None else 0.0 for c in code)
@@ -236,6 +267,9 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         "model": rt.context.model.name,
         "migrations": rt.migrations,
         "migrated_bytes": sum(m.nbytes for m in rt.engine.log),
+        "transport": transport,
+        "wire_frames": sum(m.wire_frames for m in rt.engine.log),
+        "transfer_wall_seconds": sum(m.wall_seconds for m in rt.engine.log),
         "prefetch_hits": getattr(rt.engine, "prefetch_hits", 0),
         "prefetch_wasted_bytes": getattr(rt.engine,
                                          "prefetch_wasted_bytes", 0),
@@ -271,6 +305,14 @@ def main():
                     help="pair link override: a:b:bandwidth:latency")
     ap.add_argument("--pipeline", action="store_true",
                     help="pipelined engine (prefetch overlaps execution)")
+    ap.add_argument("--transport", choices=["loopback", "socket"],
+                    default="loopback",
+                    help="how migration traffic moves: loopback = "
+                         "in-process, zero-copy, simulated timing (the "
+                         "paper's setup, default); socket = two-process "
+                         "demo — the remote env is a child Python process "
+                         "and every migration streams CRC-framed chunks "
+                         "over real TCP (incompatible with --fleet)")
     ap.add_argument("--fleet", type=int, default=0,
                     help="run N concurrent sessions through the scheduler")
     ap.add_argument("--arrivals", type=float, default=0.0,
@@ -312,6 +354,10 @@ def main():
             raise ValueError(
                 "--autoscale needs at least one burst env "
                 "(--env name:speedup:capacity:down)")
+        if args.transport == "socket" and args.fleet:
+            raise ValueError(
+                "--transport socket (two-process demo) is incompatible "
+                "with --fleet")
     except ValueError as e:
         ap.error(str(e))
 
@@ -324,7 +370,8 @@ def main():
         model=args.model, arrivals=args.arrivals,
         think_time=args.think_time, seed=args.seed, fail_envs=fail_envs,
         autoscale=args.autoscale, recovery=args.recovery,
-        checkpoint_interval=args.checkpoint_interval)
+        checkpoint_interval=args.checkpoint_interval,
+        transport=args.transport)
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))

@@ -1,0 +1,114 @@
+"""The CI benchmark-regression gate must demonstrably fail on an injected
+regression — and only then."""
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import (
+    check_all, check_file, lookup, main, update_baselines,
+)
+
+
+def _write(path, doc):
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+
+@pytest.fixture
+def rig(tmp_path):
+    base = tmp_path / "baselines"
+    cur = tmp_path / "current"
+    base.mkdir()
+    cur.mkdir()
+    _write(base / "tolerances.json", {
+        "BENCH_x.json": [
+            {"metric": "w.bytes", "cmp": "max", "tol": 0.10},
+            {"metric": "w.ratio", "cmp": "min", "tol": 0.10},
+        ]})
+    _write(base / "BENCH_x.json", {"w": {"bytes": 1000, "ratio": 8.0}})
+    return str(base), str(cur)
+
+
+def test_within_tolerance_passes(rig):
+    base, cur = rig
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 1099, "ratio": 7.3}})
+    assert check_all(base, cur) == []
+    assert main(["--baselines", base, "--current", cur]) == 0
+
+
+def test_injected_regression_fails_the_gate(rig, capsys):
+    base, cur = rig
+    # bytes ballooned 3x and the ratio collapsed: both rules must fire
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 3000, "ratio": 2.0}})
+    failures = check_all(base, cur)
+    assert len(failures) == 2
+    assert all("REGRESSION" in f for f in failures)
+    assert main(["--baselines", base, "--current", cur]) == 1
+    assert "REGRESSION" in capsys.readouterr().err
+
+
+def test_direction_matters(rig):
+    base, cur = rig
+    # improvements never fail: fewer bytes, higher ratio
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 10, "ratio": 80.0}})
+    assert check_all(base, cur) == []
+
+
+def test_missing_fresh_report_fails(rig):
+    base, cur = rig
+    failures = check_all(base, cur)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_metric_that_stopped_being_emitted_fails(rig):
+    base, cur = rig
+    _write(os.path.join(cur, "BENCH_x.json"), {"w": {"bytes": 900}})
+    failures = check_all(base, cur)
+    assert any("ratio" in f and "fresh report" in f for f in failures)
+
+
+def test_lookup_handles_list_indices_and_rejects_non_numbers():
+    doc = {"a": [{"b": 2.5}], "s": "nope"}
+    assert lookup(doc, "a.0.b") == 2.5
+    with pytest.raises(KeyError):
+        lookup(doc, "a.1.b")
+    with pytest.raises(KeyError):
+        lookup(doc, "a.x")
+    with pytest.raises(TypeError):
+        lookup(doc, "s")
+
+
+def test_check_file_reports_unknown_cmp():
+    fails = check_file([{"metric": "m", "cmp": "exact", "tol": 0}],
+                       {"m": 1}, {"m": 1}, "f.json")
+    assert fails and "unknown cmp" in fails[0]
+
+
+def test_update_rewrites_baselines_from_current(rig):
+    base, cur = rig
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 500, "ratio": 16.0}})
+    update_baselines(base, cur)
+    with open(os.path.join(base, "BENCH_x.json")) as f:
+        assert json.load(f)["w"]["bytes"] == 500
+    assert check_all(base, cur) == []
+
+
+def test_repo_tolerances_are_well_formed():
+    """Every committed rule parses and points at a committed baseline."""
+    from benchmarks.check_regression import DEFAULT_BASELINES
+    with open(os.path.join(DEFAULT_BASELINES, "tolerances.json")) as f:
+        spec = json.load(f)
+    assert spec, "tolerances.json must gate at least one report"
+    for fname, rules in spec.items():
+        base = os.path.join(DEFAULT_BASELINES, fname)
+        assert os.path.exists(base), f"no committed baseline for {fname}"
+        with open(base) as f:
+            doc = json.load(f)
+        for rule in rules:
+            assert rule["cmp"] in ("max", "min")
+            lookup(doc, rule["metric"])      # raises if the path is dead

@@ -45,6 +45,27 @@ def test_run_notebook_file(tmp_path):
     assert heavy.annotations and heavy.cost == 15.0
 
 
+def test_run_notebook_socket_transport_demo(tmp_path):
+    """--transport socket: the remote env is a child Python process and
+    migrations stream real wire frames; the report proves frames moved."""
+    path = _demo_ipynb(tmp_path)
+    report, _nb = run_notebook(path, sessions=2, transport="socket")
+    assert report["transport"] == "socket"
+    assert report["migrations"] >= 1
+    # every migration is at least MANIFEST + END on the wire
+    assert report["wire_frames"] >= 2 * report["migrations"]
+    assert report["transfer_wall_seconds"] > 0
+    # the heavy cell still lands remote and the session completes
+    assert report["speedup_vs_local"] is None or \
+        report["speedup_vs_local"] > 0
+
+
+def test_socket_transport_rejects_fleet_mode(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    with pytest.raises(ValueError, match="incompatible"):
+        run_notebook(path, fleet=2, transport="socket")
+
+
 def test_ipynb_roundtrip(tmp_path):
     path = _demo_ipynb(tmp_path)
     nb = Notebook.from_ipynb(json.loads(open(path).read()))

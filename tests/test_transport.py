@@ -1,0 +1,273 @@
+"""Transport-plane tests: loopback and socket transports carrying real
+migration traffic, token-bucket shaping, prefetch cancellation as frames,
+and the subprocess end-to-end (namespace out, cell executed remotely,
+results round-tripped home)."""
+import numpy as np
+import pytest
+
+from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment
+from repro.core.migration import MigrationEngine, PipelinedMigrationEngine
+from repro.core.reducer import StateReducer
+from repro.core.transport import (
+    DigestMirrorStore, LoopbackTransport, SubprocessEnv, TokenBucket,
+    attach_peer,
+)
+from repro.core.wire import WireError
+
+
+def _rig(kind, *, pipeline=False, shaper=None):
+    reg = EnvironmentRegistry.two_env()
+    red = StateReducer(codec="zlib")
+    cls = PipelinedMigrationEngine if pipeline else MigrationEngine
+    eng = cls(red, registry=reg)
+    peer = attach_peer(reg["remote"], red, kind=kind, shaper=shaper)
+    return reg, red, eng, peer
+
+
+@pytest.mark.parametrize("kind", ["loopback", "socket"])
+def test_push_exec_pull_over_transport(kind):
+    reg, red, eng, peer = _rig(kind)
+    local, remote = reg["local"], reg["remote"]
+    local.state.ns["x"] = np.arange(1000, dtype=np.float32)
+    local.state.ns["msg"] = "hi"
+    res = eng.migrate(local, remote, "y = x.sum() + len(msg)")
+    assert res.transport == kind
+    assert res.wire_frames >= 3          # manifest + >=1 chunk + end
+    assert set(res.names) == {"msg", "x"}
+    np.testing.assert_array_equal(remote.state.ns["x"], local.state.ns["x"])
+
+    remote.execute("y = x.sum() + len(msg)")
+    back = eng.migrate(remote, local, names={"y"})
+    assert back.names == ("y",)
+    assert local.state.ns["y"] == pytest.approx(float(np.arange(1000).sum()) + 2)
+    peer.close()
+
+
+def test_delta_and_tombstones_cross_the_wire():
+    reg, red, eng, peer = _rig("socket")
+    local, remote = reg["local"], reg["remote"]
+    local.state.ns["x"] = np.arange(1000, dtype=np.float32)
+    first = eng.migrate(local, remote, "z = x * 2")
+    assert not first.noop and first.nbytes > 0
+    # unchanged: empty delta is a no-op even through a real socket
+    again = eng.migrate(local, remote, "z = x * 2")
+    assert again.noop and again.nbytes == 0
+    # deletion propagates as a TOMBSTONE frame
+    del local.state.ns["x"]
+    gone = eng.migrate(local, remote, None)
+    assert "x" in gone.deleted
+    assert "x" not in remote.state.ns
+    peer.close()
+
+
+def test_chunk_level_dedup_over_socket():
+    reg = EnvironmentRegistry.two_env()
+    red = StateReducer(codec="none", chunk_bytes=4096)
+    eng = MigrationEngine(red, registry=reg)
+    local, remote = reg["local"], reg["remote"]
+    peer = attach_peer(remote, red, kind="socket")
+    local.state.ns["big"] = np.arange(64_000, dtype=np.float32)  # ~62 chunks
+    full = eng.migrate(local, remote, "s = big.sum()")
+    # mutate one element: only the touched chunk re-crosses the wire
+    local.state.ns["big"][7] = 1.0
+    eng.invalidate("local", ["big"])
+    delta = eng.migrate(local, remote, "s = big.sum()")
+    assert delta.nbytes < full.nbytes / 10
+    assert delta.wire_frames < full.wire_frames
+    np.testing.assert_array_equal(remote.state.ns["big"], local.state.ns["big"])
+    peer.close()
+
+
+def test_prefetch_claim_and_cancel_send_real_frames():
+    reg, red, eng, peer = _rig("socket", pipeline=True)
+    local, remote = reg["local"], reg["remote"]
+    local.state.ns["x"] = np.arange(2000, dtype=np.float32)
+    p = eng.begin_prefetch(local, remote, "y = x + 1", now=0.0)
+    assert p is not None and p.peer is not None
+    # speculative stream banked chunks remotely but did NOT touch the ns
+    assert "x" not in remote.state.ns
+    # the claim is manifest-only (chunks already banked) and applies the ns
+    res = eng.migrate(local, remote, "y = x + 1", now=p.ready_at + 1.0)
+    assert "x" in res.prefetched
+    # the claim's manifest-only stream is real traffic and is accounted
+    assert res.wire_frames >= 2 and res.transport == "socket"
+    np.testing.assert_array_equal(remote.state.ns["x"], local.state.ns["x"])
+    # a superseded speculation is cancelled with a CANCEL frame
+    local.state.ns["q"] = np.ones(100)
+    eng.begin_prefetch(local, remote, "w = q * 2", now=10.0)
+    eng.cancel_prefetch("remote", now=20.0)
+    assert eng.prefetch_cancelled == 1
+    # the connection stays healthy after the cancel
+    ok = eng.migrate(local, remote, "w = q * 2")
+    assert "q" in ok.names or ok.noop
+    peer.close()
+
+
+def test_module_alias_reaches_remote_even_on_empty_state_delta():
+    """Regression: aliases ride the manifest, so a cell that needs only a
+    module (state already synced) must still stream an alias-only
+    manifest — parity with the loopback path's unconditional re-import."""
+    import math
+    reg, red, eng, peer = _rig("socket")
+    local, remote = reg["local"], reg["remote"]
+    local.state.ns["x"] = 1
+    local.state.ns["math"] = math
+    eng.migrate(local, remote, "x")          # syncs x; math not needed yet
+    res = eng.migrate(local, remote, "y = math.sqrt(x)")  # empty state delta
+    assert res.noop and res.wire_frames >= 2  # alias-only manifest streamed
+    remote.execute("y = math.sqrt(x)")       # would NameError before the fix
+    assert remote.state.ns["y"] == 1.0
+    peer.close()
+
+
+def _poison_unpickle():
+    raise ValueError("poisoned unpickle")
+
+
+class _Poison:
+    """Pickles fine; unpickling raises — a receiver-side apply failure."""
+
+    def __reduce__(self):
+        return (_poison_unpickle, ())
+
+
+def test_receiver_apply_failure_reports_promptly_and_keeps_serving():
+    """Regression: a non-wire receiver exception (failed deserialize) must
+    come back as an ERROR frame — a prompt WireError at the sender, not a
+    60 s timeout — and the receiver keeps serving afterwards."""
+    import time
+    reg, red, eng, peer = _rig("socket")
+    local, remote = reg["local"], reg["remote"]
+    local.state.ns["p"] = _Poison()
+    t0 = time.perf_counter()
+    with pytest.raises(WireError, match="poisoned unpickle"):
+        eng.migrate(local, remote, names={"p"})
+    assert time.perf_counter() - t0 < 10.0      # not the recv timeout
+    # the receiver recovered: a healthy migration still lands
+    del local.state.ns["p"]
+    eng.invalidate("local", ["p"])
+    local.state.ns["ok"] = np.arange(10)
+    res = eng.migrate(local, remote, names={"ok"})
+    assert "ok" in res.names
+    np.testing.assert_array_equal(remote.state.ns["ok"], np.arange(10))
+    peer.close()
+
+
+def test_serialization_failure_travels_as_error_frame():
+    reg, red, eng, peer = _rig("socket")
+    local, remote = reg["local"], reg["remote"]
+    remote.state.ns["sock"] = __import__("socket").socket()  # unpicklable
+    from repro.core.reducer import SerializationFailure
+    with pytest.raises(SerializationFailure):
+        eng.migrate(remote, local, names={"sock"}, strict=True)
+    # non-strict pull skips it cleanly instead
+    res = eng.migrate(remote, local, names={"sock"}, strict=False)
+    assert res.names == ()
+    peer.close()
+
+
+def test_token_bucket_math_is_deterministic():
+    t = [0.0]
+    bucket = TokenBucket(1000.0, burst=500, latency=0.25, clock=lambda: t[0])
+    # first 500 bytes ride the burst: latency only
+    assert bucket.delay(500) == pytest.approx(0.25)
+    # the next 1000 must wait for refill at 1000 B/s
+    assert bucket.delay(1000) == pytest.approx(1.25)
+    # time passing refills the bucket
+    t[0] = 10.0
+    assert bucket.delay(100) == pytest.approx(0.25)
+
+
+def test_shaped_socket_transfer_is_slower_but_identical():
+    _, _, eng_fast, peer_fast = _rig("socket")
+    shaper = TokenBucket(200_000.0, burst=2048, latency=0.0)
+    reg, red, eng, peer = _rig("socket", shaper=shaper)
+    local, remote = reg["local"], reg["remote"]
+    payload = np.arange(30_000, dtype=np.float32)
+    local.state.ns["x"] = payload
+    res = eng.migrate(local, remote, "y = x.sum()")
+    np.testing.assert_array_equal(remote.state.ns["x"], payload)
+    # ~120 KB compressed at 200 KB/s floor => measurable wall seconds
+    assert res.wall_seconds > 0.05
+    peer.close()
+    peer_fast.close()
+
+
+def test_digest_mirror_store_tracks_without_bytes():
+    m = DigestMirrorStore()
+    m.put_many({1: b"a", 2: b"b"})
+    assert m.has(1) and m.has(2) and not m.has(3)
+    assert len(m) == 2 and m.nbytes == 0
+    with pytest.raises(KeyError):
+        m.get(1)
+
+
+def test_loopback_transport_is_zero_copy():
+    a, b = LoopbackTransport.pair()
+    from repro.core.wire import Frame, END
+    f = Frame(END, b"payload-bytes")
+    a.send(f)
+    got = b.recv(timeout=1.0)
+    assert got is f                      # the very same object, never encoded
+    assert a.bytes_sent == f.wire_size
+    a.close()
+    with pytest.raises(WireError):
+        a.send(f)
+
+
+def test_scheduler_marks_env_transport():
+    """The fleet plane can declare an env's migration traffic socket-bound:
+    the mark audit-logs on the physical registry, mirrors into session
+    clones (existing and future), and lands in the schedule report."""
+    from repro.core.notebook import Notebook
+    from repro.core.scheduler import SessionScheduler
+
+    reg = EnvironmentRegistry.two_env()
+    sched = SessionScheduler(reg)
+    nb = Notebook("t")
+    nb.add_cell("a = 1", cost=0.1)
+    nb.add_cell("b = a + 1", cost=50.0)
+    rt_before = sched.add_notebook(nb, policy="cost", use_knowledge=False)
+    sched.set_transport("remote", "socket", now=3.0)
+    nb2 = Notebook("t2")
+    nb2.add_cell("c = 2", cost=0.1)
+    rt_after = sched.add_notebook(nb2, policy="cost", use_knowledge=False)
+    assert rt_before.registry["remote"].transport == "socket"
+    assert rt_after.registry["remote"].transport == "socket"
+    assert (3.0, "remote", "transport:loopback", "transport:socket") \
+        in reg.lifecycle_log
+    with pytest.raises(ValueError):
+        sched.set_transport("remote", "carrier-pigeon")
+    rep = sched.run()
+    assert rep.env_transports == {"local": "loopback", "remote": "socket"}
+
+
+def test_subprocess_env_end_to_end():
+    """The acceptance path: migrate a namespace into a child Python
+    process over real TCP, execute a cell there, round-trip the result."""
+    reg = EnvironmentRegistry()
+    reg.register(ExecutionEnvironment("local"), home=True)
+    sub = SubprocessEnv("worker", speedup=2.0)
+    try:
+        reg.register(sub)
+        red = StateReducer(codec="zlib")
+        eng = MigrationEngine(red, registry=reg)
+        local = reg["local"]
+        local.state.ns["x"] = np.arange(64, dtype=np.float64)
+        local.state.ns["np"] = np
+        res = eng.migrate(local, sub, "y = np.square(x).sum()")
+        assert res.transport == "subprocess" and res.wire_frames >= 3
+        # the parent holds no copy of the remote namespace — only a mirror
+        assert "x" not in sub.state.ns and len(sub.chunk_store) > 0
+        sub.execute("y = np.square(x).sum()")
+        back = eng.migrate(sub, local, None)
+        assert "y" in back.names
+        assert local.state.ns["y"] == pytest.approx(
+            float(np.square(np.arange(64)).sum()))
+        # remote errors surface, they don't wedge the session
+        with pytest.raises(RuntimeError):
+            sub.execute("raise ValueError('boom')")
+        sub.execute("ok = 1")            # still serving
+    finally:
+        sub.close()
+    assert sub.proc.returncode == 0

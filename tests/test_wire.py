@@ -1,0 +1,176 @@
+"""Wire-format tests: golden vectors, framing invariants, and the
+corruption property — a damaged stream must always be a clean WireError,
+never a crash or a silently wrong decode."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.chunkstore import MemoryChunkStore, digest_bytes, encode_chunk
+from repro.core.reducer import SerializedName, SerializedState, StateReducer
+from repro.core.state import ExecutionState
+from repro.core.wire import Frame, FrameDecoder, WireError
+
+from tests._hyp_compat import given, settings, st
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "wire_v1_golden.bin")
+
+# the canonical v1 HELLO (codec=none): any change to the framing or the
+# session header is a wire-format break and must bump wire.VERSION
+GOLDEN_HELLO_HEX = "0800000001525749520100000005833bd2"
+
+
+def _golden_ser():
+    """The SerializedState the golden stream was generated from."""
+    raw = bytes(range(64)) * 4
+    d = digest_bytes(raw)
+    ser = SerializedState(codec="none", blobs={
+        "w": SerializedName(pickle_bytes=b"\x80\x05PIN", arrays=[
+            {"shape": (16, 16), "dtype": "float32", "quant": False,
+             "chunks": [d], "clens": [len(raw)]}]),
+        "tag": SerializedName(pickle_bytes=b"\x80\x05TAG", arrays=[]),
+    })
+    ser.chunks = {d: encode_chunk(raw, "none")}
+    ser.digests = {"w": 0x1122334455667788, "tag": 42}
+    return ser, d
+
+
+def test_golden_stream_decodes_and_reencodes_byte_identical():
+    with open(GOLDEN, "rb") as f:
+        data = f.read()
+    frames = wire.decode_frames(data)
+    assert [f.ftype for f in frames] == [
+        wire.HELLO, wire.MANIFEST, wire.ACK, wire.CHUNK, wire.TOMBSTONE,
+        wire.END, wire.ACK]
+    # decode -> re-encode must reproduce the stream byte for byte
+    assert b"".join(f.encoded() for f in frames) == data
+    # and the first frame is pinned down to its hex
+    assert frames[0].encoded().hex() == GOLDEN_HELLO_HEX
+    hello = wire.parse_hello(frames[0])
+    assert hello["version"] == wire.VERSION
+    assert hello["codec"] == "none"
+
+
+def test_golden_manifest_roundtrips_through_the_codec():
+    with open(GOLDEN, "rb") as f:
+        frames = wire.decode_frames(f.read())
+    ser, deleted, modules, spec = wire.parse_manifest(frames[1])
+    want, d = _golden_ser()
+    assert deleted == ("gone",)
+    assert modules == ("np=numpy",)
+    assert not spec
+    assert ser.digests == want.digests
+    assert ser.blobs["w"].arrays[0]["chunks"] == [d]
+    # semantic re-encode is byte-identical (canonical JSON)
+    again = wire.manifest_frame(ser, deleted=deleted, modules=modules)
+    assert again.payload == frames[1].payload
+    # the chunk frame carries the store encoding verbatim
+    digest, encoded = wire.parse_chunk(frames[3])
+    assert digest == d
+    assert encoded == want.chunks[d]
+
+
+def test_real_serialized_state_survives_the_wire():
+    red = StateReducer(codec="zlib", chunk_bytes=256)
+    state = ExecutionState({"a": np.arange(512, dtype=np.float32),
+                            "b": {"k": [1, 2, 3]}})
+    ser = red.serialize_names(state, {"a", "b"})
+    frames = [wire.manifest_frame(ser)]
+    frames += list(wire.state_stream_frames(ser, sorted(ser.chunks)))
+    stream = b"".join(f.encoded() for f in frames)
+
+    got = wire.decode_frames(stream)
+    ser2, _deleted, _modules, _spec = wire.parse_manifest(got[0])
+    store = MemoryChunkStore()
+    count, _ = store.ingest_frames(
+        f for f in got if f.ftype == wire.CHUNK)
+    assert count == len(ser.chunks)
+    objs = red.deserialize(ser2, chunk_store=store)
+    np.testing.assert_array_equal(objs["a"], state.ns["a"])
+    assert objs["b"] == {"k": [1, 2, 3]}
+
+
+def test_incremental_decoder_handles_byte_at_a_time_feeding():
+    frames = [wire.hello_frame(), Frame(wire.END),
+              wire.json_frame(wire.ACK, {"need": []})]
+    data = b"".join(f.encoded() for f in frames)
+    dec = FrameDecoder()
+    out = []
+    for i in range(len(data)):
+        dec.feed(data[i:i + 1])
+        out.extend(dec.frames())
+    assert out == frames
+    assert dec.pending_bytes == 0
+
+
+def test_unknown_frame_type_and_oversized_length_rejected():
+    with pytest.raises(WireError):
+        wire.decode_frames(wire.encode_frame(99, b"?"))
+    bad = bytearray(wire.encode_frame(wire.END, b""))
+    bad[0:4] = (wire.MAX_PAYLOAD + 1).to_bytes(4, "little")
+    with pytest.raises(WireError):
+        wire.decode_frames(bytes(bad))
+
+
+def test_truncation_is_a_clean_error_not_a_partial_apply():
+    with open(GOLDEN, "rb") as f:
+        data = f.read()
+    for cut in (1, 9, len(data) // 2, len(data) - 1):
+        with pytest.raises(WireError):
+            wire.decode_frames(data[:cut])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 255))
+def test_bitflip_anywhere_is_rejected_or_decodes_identically(pos, flip):
+    """Property: flipping any byte either fails as WireError or — when the
+    flip misses every frame (flip == 0) — decodes identically.  It must
+    never produce a *different* successfully-decoded stream: CRC coverage
+    of type+payload and the length prefix bound makes silent corruption
+    impossible at the framing layer."""
+    with open(GOLDEN, "rb") as f:
+        data = bytearray(f.read())
+    good = wire.decode_frames(bytes(data))
+    pos %= len(data)
+    data[pos] ^= flip
+    try:
+        got = wire.decode_frames(bytes(data))
+    except WireError:
+        return
+    assert got == good          # only a no-op flip may decode
+
+
+def test_manifest_corruption_rejected_by_parser():
+    ser, _ = _golden_ser()
+    frame = wire.manifest_frame(ser)
+    # valid frame, garbage payload: parser must raise WireError, not crash
+    broken = Frame(wire.MANIFEST, frame.payload.replace(b'"blobs"', b'"blogs"'))
+    with pytest.raises(WireError):
+        wire.parse_manifest(broken)
+    not_json = Frame(wire.MANIFEST, b"\xff\xfe{")
+    with pytest.raises(WireError):
+        wire.parse_manifest(not_json)
+
+
+def test_chunk_ingest_rejects_unknown_codec_tag():
+    store = MemoryChunkStore()
+    with pytest.raises(WireError):
+        store.ingest_frame(wire.chunk_frame(7, b"\x7fgarbage"))
+    # a valid chunk frame lands verbatim
+    enc = encode_chunk(b"payload", "none")
+    d = digest_bytes(b"payload")
+    assert store.ingest_frame(wire.chunk_frame(d, enc)) == d
+    assert store.get(d) == enc
+
+
+def test_hello_rejects_wrong_magic_and_version():
+    f = wire.hello_frame()
+    with pytest.raises(WireError):
+        wire.parse_hello(Frame(wire.HELLO, b"XXXX" + f.payload[4:]))
+    bad_ver = bytearray(f.payload)
+    bad_ver[4] = 0xEE
+    with pytest.raises(WireError):
+        wire.parse_hello(Frame(wire.HELLO, bytes(bad_ver)))
+    with pytest.raises(WireError):
+        wire.parse_hello(Frame(wire.END))
