@@ -31,6 +31,7 @@ MODULES = [
     "bench_context",              # interaction models / prefetch gate
     "bench_fleet",                # event-driven fleet: arrivals/failures/scaling
     "bench_transport",            # wire protocol: loopback vs socket vs shaped
+    "bench_digest",               # batched digest/delta + zero-copy wire
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
@@ -41,6 +42,7 @@ ARTIFACTS = {
     "bench_context": "BENCH_context.json",
     "bench_fleet": "BENCH_fleet.json",
     "bench_transport": "BENCH_transport.json",
+    "bench_digest": "BENCH_digest.json",
 }
 
 

@@ -126,6 +126,109 @@ def array_chunk_digests(raw: bytes, chunk_bytes: int = CHUNK_BYTES, *,
     return out
 
 
+def array_chunk_digests_many(payloads, chunk_bytes: int = CHUNK_BYTES, *,
+                             interpret: bool = False, impl: str = "xla",
+                             priors=None):
+    """Per-chunk digests for *many* raw buffers in one device launch and
+    one host sync — bit-identical to calling :func:`array_chunk_digests`
+    on each payload.
+
+    Each payload is zero-padded to the device block boundary before
+    packing, so its rows of the shared block grid equal the standalone
+    rows.  ``priors`` (optional, aligned with ``payloads``) carries
+    ``(block_h64, chunk_digests, payload_len)`` tuples from a previous
+    digesting of the same logical payload: when the length still matches,
+    the fused compare kernel flags unchanged blocks **on device** and any
+    chunk whose block span is unchanged reuses its prior digest without a
+    host blake2b fold — only flags and lanes ever cross to the host.
+
+    Returns ``(chunk_digest_lists, block_h64_list)``: per payload, its
+    chunk digests plus the per-block uint64 digest vector (cacheable as
+    the next call's prior)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.hash_delta.ops import (
+        note_host_sync, packed_block_digests,
+        packed_block_digests_compare, staging_buffer, to_device,
+    )
+
+    n = len(payloads)
+    if n == 0:
+        return [], []
+    lens = [len(p) for p in payloads]
+    nbs = [(ln + _BLOCK_BYTES - 1) // _BLOCK_BYTES for ln in lens]
+    total_nb = sum(nbs)
+    if total_nb == 0:                       # every payload empty
+        return [[] for _ in payloads], [np.zeros(0, np.uint64)] * n
+    # single copy pass: payloads land block-padded in one aligned buffer
+    # the device then aliases zero-copy
+    host = staging_buffer(total_nb * _BLOCK_BYTES, np.uint8)
+    off = 0
+    for p, nb in zip(payloads, nbs):
+        end = off + len(p)
+        host[off:end] = np.frombuffer(p, dtype=np.uint8)
+        off += nb * _BLOCK_BYTES
+        if off != end:
+            host[end:off] = 0
+    packed = to_device(host)
+
+    use_cmp = priors is not None and any(pr is not None for pr in priors)
+    if use_cmp:
+        prior_lanes = np.zeros((total_nb, 2), np.uint32)
+        has = np.zeros((total_nb, 1), np.uint32)
+        off = 0
+        for i, pr in enumerate(priors):
+            nb = nbs[i]
+            if pr is not None and pr[2] == lens[i] and len(pr[0]) == nb:
+                h64 = np.asarray(pr[0], np.uint64)
+                prior_lanes[off:off + nb, 0] = (
+                    h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+                prior_lanes[off:off + nb, 1] = (
+                    h64 >> np.uint64(32)).astype(np.uint32)
+                has[off:off + nb, 0] = 1
+            off += nb
+        h2, ch = jax.device_get(packed_block_digests_compare(
+            packed, jnp.asarray(prior_lanes), jnp.asarray(has),
+            interpret=interpret, impl=impl))
+        changed = ch[:, 0].astype(bool)
+    else:
+        h2 = np.asarray(packed_block_digests(
+            packed, interpret=interpret, impl=impl))
+        changed = np.ones(total_nb, bool)
+    note_host_sync()
+    h2 = h2.astype(np.uint64)
+    h64_all = (h2[:, 1] << np.uint64(32)) | h2[:, 0]
+
+    out_chunks, out_h64 = [], []
+    off = 0
+    for i in range(n):
+        nb, nlen = nbs[i], lens[i]
+        h64 = h64_all[off:off + nb]
+        ch_i = changed[off:off + nb]
+        off += nb
+        out_h64.append(h64)
+        if nlen == 0:
+            out_chunks.append([])
+            continue
+        eff = effective_chunk_bytes(nlen, chunk_bytes)
+        pr = priors[i] if use_cmp else None
+        reuse = (pr is not None and pr[2] == nlen and len(pr[0]) == nb)
+        digs = []
+        for ci, start in enumerate(range(0, nlen, eff)):
+            clen = min(eff, nlen - start)
+            b0 = start // _BLOCK_BYTES
+            b1 = (start + clen + _BLOCK_BYTES - 1) // _BLOCK_BYTES
+            if reuse and ci < len(pr[1]) and not ch_i[b0:b1].any():
+                digs.append(pr[1][ci])      # exact: lanes matched on device
+            else:
+                h = hashlib.blake2b(h64[b0:b1].tobytes(), digest_size=8)
+                h.update(clen.to_bytes(8, "little"))
+                digs.append(int.from_bytes(h.digest(), "little"))
+        out_chunks.append(digs)
+    return out_chunks, out_h64
+
+
 # ----------------------------------------------------------------------
 # chunk encoding (codec-tagged, self-describing)
 # ----------------------------------------------------------------------
@@ -191,6 +294,11 @@ class MemoryChunkStore:
         if d in self._chunks:
             self._touch(d)
             return
+        if not isinstance(data, bytes):
+            # zero-copy wire payloads arrive as memoryviews into transient
+            # recv buffers; the store must own its bytes — this is the one
+            # place the copy is required, so it happens here and only here
+            data = bytes(data)
         self._chunks[d] = data
         self._nbytes += len(data)
         while self._nbytes > self.max_bytes and len(self._chunks) > 1:
@@ -224,7 +332,7 @@ class MemoryChunkStore:
         for f in frames:
             d = self.ingest_frame(f)
             count += 1
-            nbytes += len(f.payload) - 8      # minus the digest prefix
+            nbytes += f.payload_len - 8       # minus the digest prefix
         return count, nbytes
 
     def digests(self) -> set[int]:

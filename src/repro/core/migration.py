@@ -188,7 +188,8 @@ class MigrationEngine:
             here = self.reducer.digests(src.state, names)
 
         ser = self.reducer.serialize_names(
-            src.state, send, on_error="raise" if strict else "skip")
+            src.state, send, on_error="raise" if strict else "skip",
+            digests=here)      # delta already digested this capture
         # chunk-manifest exchange: the receiver advertises the chunk digests
         # its store already holds; only missing chunks cross the wire, so a
         # small in-place update to a large array moves one chunk, not the
@@ -491,10 +492,13 @@ class PipelinedMigrationEngine(MigrationEngine):
             # receiver doesn't already have it (else the claim would turn a
             # free no-op delta into a charged wait)
             known = self.synced.setdefault(dst.name, {})
-            valid = {n: d for n, d in p.ser.digests.items()
-                     if n in p.ser.blobs and n in src.state.ns
-                     and known.get(n) != d
-                     and self.reducer.digest(src.state.ns[n]) == d}
+            cand = {n: d for n, d in p.ser.digests.items()
+                    if n in p.ser.blobs and n in src.state.ns
+                    and known.get(n) != d}
+            # one batched launch re-digests every candidate at once
+            cur = self.reducer.digest_many(
+                {n: src.state.ns[n] for n in cand})
+            valid = {n: d for n, d in cand.items() if cur.get(n) == d}
             # the claim then validates per-chunk: content-addressed chunks
             # are immutable, so prefetched chunks are banked into the
             # receiver's store — but only those the transfer has physically

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.astdeps import cell_dependencies
 from repro.core.chunkstore import (
-    CHUNK_BYTES, array_chunk_digests, decode_chunk, encode_chunk,
+    CHUNK_BYTES, array_chunk_digests_many, decode_chunk, encode_chunk,
     split_chunks,
 )
 from repro.core.state import ExecutionState
@@ -154,14 +154,12 @@ class _Unpickler(pickle.Unpickler):
         return self._store[idx]
 
 
-def _encode_array(a: np.ndarray, codec: str, interpret_kernels: bool,
-                  chunk_bytes: int, chunks_out: dict[int, bytes],
-                  added: list[int]) -> dict:
-    """Array -> chunk-manifest meta; raw payload chunks land in ``chunks_out``
-    keyed by content digest (identical chunks dedup automatically — across
-    names too, so an aliased array is never recompressed).  Digests newly
-    inserted here are recorded in ``added`` so a failing name can roll its
-    chunks back out."""
+def _prepare_array(a: np.ndarray, codec: str,
+                   interpret_kernels: bool) -> tuple[dict, bytes]:
+    """Array -> (chunk-manifest meta sans digests, raw payload bytes).
+
+    Digesting is deferred so the caller can batch every payload of a
+    capture into one device launch (:func:`array_chunk_digests_many`)."""
     meta = {"shape": a.shape, "dtype": str(a.dtype)}
     impl = "pallas" if interpret_kernels else "xla"
     if codec == "quant8+zstd" and a.dtype in (np.dtype("float32"),
@@ -176,17 +174,7 @@ def _encode_array(a: np.ndarray, codec: str, interpret_kernels: bool,
     else:
         payload = np.ascontiguousarray(a).tobytes()
         meta.update(quant=False)
-    digests = array_chunk_digests(payload, chunk_bytes,
-                                  interpret=interpret_kernels, impl=impl)
-    clens = []
-    for d, chunk in zip(digests, split_chunks(payload, chunk_bytes)):
-        if d not in chunks_out:
-            chunks_out[d] = encode_chunk(chunk, codec)
-            added.append(d)
-        # the 1-byte codec tag is store framing, not wire payload
-        clens.append(len(chunks_out[d]) - 1)
-    meta.update(chunks=digests, clens=clens)
-    return meta
+    return meta, payload
 
 
 def _decode_array(meta: dict, codec: str, chunks: dict[int, bytes],
@@ -298,6 +286,12 @@ class StateReducer:
         # chunk_bytes <= 0 => one chunk per payload (whole-name granularity,
         # the pre-CAS baseline; benchmarks compare against it)
         self.chunk_bytes = int(chunk_bytes)
+        # (name, array-slot) -> (block_h64, chunk_digests, payload_len):
+        # priors for the fused digest+compare launch, so re-serializing a
+        # partially-changed array folds only its changed chunks on host.
+        # Reuse is content-verified on device, so a stale entry can only
+        # cost a recompute, never a wrong digest.
+        self._chunk_cache: dict[tuple[str, int], tuple] = {}
 
     # -- step 1: which names does this cell need? ----------------------
     def reduce(self, state: ExecutionState, cell_source: str):
@@ -310,30 +304,79 @@ class StateReducer:
     # -- step 2/3: serialize + digest -----------------------------------
     def serialize_names(self, state: ExecutionState, names,
                         codec: str | None = None,
-                        on_error: str = "raise") -> SerializedState:
+                        on_error: str = "raise",
+                        digests: dict[str, int] | None = None
+                        ) -> SerializedState:
         """on_error="raise": SerializationFailure aborts (caller runs the cell
         locally, §II-D).  on_error="skip": unserializable names simply don't
-        travel (used on return migrations — the object stays remote)."""
+        travel (used on return migrations — the object stays remote).
+
+        ``digests`` lets a caller that already holds this capture's content
+        digests (``delta_names`` returns them) pass them through instead of
+        re-digesting.
+
+        Chunk digesting is two-pass: pass 1 pickles every name and collects
+        raw array payloads; pass 2 digests *all* payloads in one device
+        launch + one host sync (with on-device compare against the previous
+        capture's block lanes, so unchanged chunks skip their host fold);
+        pass 3 encodes chunks with the original per-name rollback."""
         codec = codec or self.codec
         blobs: dict[str, SerializedName] = {}
         chunks: dict[int, bytes] = {}
         skipped: list[str] = []
+        prepared: list[tuple[str, bytes, list]] = []
         for name in sorted(names):
             obj = state.ns[name]
+            try:
+                store: list = []
+                buf = io.BytesIO()
+                _Pickler(buf, store).dump(obj)
+                arrays = [_prepare_array(a, codec, self.interpret_kernels)
+                          for a in store]
+                prepared.append((name, _compress(buf.getvalue(), codec),
+                                 arrays))
+            except Exception as e:  # noqa: BLE001 — paper: fall back to local
+                if on_error == "skip":
+                    skipped.append(name)
+                    continue
+                raise SerializationFailure(f"{name}: {e}") from e
+
+        keys = [(name, k) for name, _, arrs in prepared
+                for k in range(len(arrs))]
+        payloads = [p for _, _, arrs in prepared for _, p in arrs]
+        impl = "pallas" if self.interpret_kernels else "xla"
+        digest_lists, h64s = array_chunk_digests_many(
+            payloads, self.chunk_bytes, interpret=self.interpret_kernels,
+            impl=impl, priors=[self._chunk_cache.get(k) for k in keys])
+        if len(self._chunk_cache) > 4096:   # bounded: priors are a cache
+            self._chunk_cache.clear()
+        for key, p, digs, h64 in zip(keys, payloads, digest_lists, h64s):
+            self._chunk_cache[key] = (h64, digs, len(p))
+
+        pos = 0
+        for name, pickle_bytes, arrays in prepared:
+            digs_here = digest_lists[pos:pos + len(arrays)]
+            pos += len(arrays)
             # chunks newly inserted by this name; an earlier name's chunks
             # were inserted under *its* entry, so rolling these back on a
             # skip can never orphan a previous blob's references
             added: list[int] = []
             try:
-                store: list = []
-                buf = io.BytesIO()
-                _Pickler(buf, store).dump(obj)
-                arrays = [_encode_array(a, codec, self.interpret_kernels,
-                                        self.chunk_bytes, chunks, added)
-                          for a in store]
-                blobs[name] = SerializedName(
-                    pickle_bytes=_compress(buf.getvalue(), codec),
-                    arrays=arrays)
+                metas = []
+                for (meta, payload), digests_a in zip(arrays, digs_here):
+                    clens = []
+                    for d, chunk in zip(digests_a,
+                                        split_chunks(payload,
+                                                     self.chunk_bytes)):
+                        if d not in chunks:
+                            chunks[d] = encode_chunk(chunk, codec)
+                            added.append(d)
+                        # the 1-byte codec tag is store framing, not wire
+                        # payload
+                        clens.append(len(chunks[d]) - 1)
+                    metas.append(dict(meta, chunks=digests_a, clens=clens))
+                blobs[name] = SerializedName(pickle_bytes=pickle_bytes,
+                                             arrays=metas)
             except Exception as e:  # noqa: BLE001 — paper: fall back to local
                 for d in added:
                     chunks.pop(d, None)
@@ -342,7 +385,14 @@ class StateReducer:
                     continue
                 raise SerializationFailure(f"{name}: {e}") from e
         ser = SerializedState(codec=codec, blobs=blobs, chunks=chunks)
-        ser.digests = {n: self.digest(state.ns[n]) for n in blobs}
+        if digests is None:
+            ser.digests = self.digest_many({n: state.ns[n] for n in blobs})
+        else:
+            ser.digests = {n: digests[n] for n in blobs if n in digests}
+            missing = [n for n in blobs if n not in digests]
+            if missing:
+                ser.digests.update(self.digest_many(
+                    {n: state.ns[n] for n in missing}))
         ser.skipped = tuple(skipped)
         return ser
 
@@ -364,33 +414,44 @@ class StateReducer:
             _TARGET_NS.reset(token)
 
     # -- step 3: content digests ---------------------------------------
-    def _array_digest(self, a) -> int:
-        """Per-leaf device digest; wide host dtypes are re-lane'd first.
+    @staticmethod
+    def _hashable_leaf(a):
+        """Map a leaf to a form whose uint32 hashing keeps *every* bit.
 
-        With x64 disabled, ``jnp.asarray`` silently narrows int64/float64 —
-        a change confined to the high 32 bits (or low float64 mantissa
-        bits) would hash identically and the delta would drop a real
-        update.  Viewing the host buffer as uint32 lanes keeps every bit."""
+        With x64 disabled ``jnp.asarray`` silently narrows int64/float64,
+        and the device prep keeps only the (real-part, low-bit) lanes of a
+        complex array — a change confined to the dropped bits would hash
+        identically and the delta would drop a real update.  So any dtype
+        wider than 4 bytes (and any complex dtype, host or device) is
+        re-laned to a contiguous uint32 view on the host.  The re-lane
+        never falls through silently: a buffer that cannot be viewed as
+        uint32 lanes is hashed via its zero-padded raw bytes, and an
+        array with no stable bit pattern (object dtype) raises."""
+        wide = a.dtype.itemsize > 4 or a.dtype.kind == "c"
+        if isinstance(a, jax.Array) and not wide:
+            return a                      # device leaf: hash on device
+        a = np.asarray(a)
+        if a.dtype.kind == "O":
+            raise TypeError("object arrays have no stable bit pattern")
+        if not wide and a.dtype.kind in "biuf":
+            return a
+        a = np.ascontiguousarray(a)
+        try:
+            return a.reshape(-1).view(np.uint32)
+        except (TypeError, ValueError):
+            buf = a.tobytes()
+            buf += b"\0" * ((-len(buf)) % 4)
+            return np.frombuffer(buf, np.uint32)
+
+    def _array_digest(self, a) -> int:
+        """Per-leaf device digest (wide host dtypes re-lane'd first)."""
         from repro.kernels.hash_delta.ops import tensor_digest
         impl = "pallas" if self.interpret_kernels else "xla"
-        if isinstance(a, np.ndarray) and (a.dtype.itemsize > 4
-                                          or a.dtype.kind == "c"):
-            try:
-                a = np.ascontiguousarray(a).reshape(-1).view(np.uint32)
-            except (TypeError, ValueError):
-                pass                     # exotic dtype: hash as-is
-        return tensor_digest(jnp.asarray(a),
+        return tensor_digest(jnp.asarray(self._hashable_leaf(a)),
                              interpret=self.interpret_kernels, impl=impl)
 
-    def digest(self, obj) -> int:
-        if _is_array(obj):
-            return self._array_digest(obj)
-        leaves, treedef = jax.tree_util.tree_flatten(obj)
-        if leaves and all(_is_array(l) for l in leaves):
-            h = hashlib.blake2b(str(treedef).encode(), digest_size=8)
-            for l in leaves:
-                h.update(self._array_digest(l).to_bytes(8, "little"))
-            return int.from_bytes(h.digest(), "little")
+    def _host_digest(self, obj) -> int:
+        """Pickle-stream blake2b for objects that are not pure array trees."""
         try:
             store: list = []
             buf = io.BytesIO()
@@ -403,18 +464,111 @@ class StateReducer:
             h.update(str(a.shape).encode())
         return int.from_bytes(h.digest(), "little")
 
+    def digest(self, obj) -> int:
+        if _is_array(obj):
+            return self._array_digest(obj)
+        leaves, treedef = jax.tree_util.tree_flatten(obj)
+        if leaves and all(_is_array(l) for l in leaves):
+            h = hashlib.blake2b(str(treedef).encode(), digest_size=8)
+            for l in leaves:
+                h.update(self._array_digest(l).to_bytes(8, "little"))
+            return int.from_bytes(h.digest(), "little")
+        return self._host_digest(obj)
+
+    def _split_for_batch(self, objs: dict[str, Any]):
+        """Partition names into the batched-digest plan.
+
+        Returns (slots, leaves, host) where ``leaves`` is the flat leaf
+        list for one batched launch and each slot is (name, treedef|None,
+        leaf_count) consuming that many leaves in order; ``host`` holds the
+        names digested via the pickle path."""
+        slots: list[tuple[str, Any, int]] = []
+        leaves: list = []
+        host: dict[str, Any] = {}
+        for n, obj in objs.items():
+            if _is_array(obj):
+                slots.append((n, None, 1))
+                leaves.append(self._hashable_leaf(obj))
+                continue
+            ls, treedef = jax.tree_util.tree_flatten(obj)
+            if ls and all(_is_array(l) for l in ls):
+                slots.append((n, treedef, len(ls)))
+                leaves.extend(self._hashable_leaf(l) for l in ls)
+            else:
+                host[n] = obj
+        return slots, leaves, host
+
+    @staticmethod
+    def _fold_slots(slots, leaf_digests) -> dict[str, int]:
+        out: dict[str, int] = {}
+        i = 0
+        for n, treedef, k in slots:
+            if treedef is None:
+                out[n] = leaf_digests[i]
+            else:
+                h = hashlib.blake2b(str(treedef).encode(), digest_size=8)
+                for d in leaf_digests[i:i + k]:
+                    h.update(d.to_bytes(8, "little"))
+                out[n] = int.from_bytes(h.digest(), "little")
+            i += k
+        return out
+
+    def digest_many(self, objs: dict[str, Any]) -> dict[str, int]:
+        """Digest a whole manifest: every array leaf across every name is
+        packed into ONE kernel launch with ONE host sync (vs one launch +
+        one ``np.asarray`` round-trip per leaf), bit-identical to calling
+        :meth:`digest` per name."""
+        from repro.kernels.hash_delta.ops import digest_leaves
+        slots, leaves, host = self._split_for_batch(objs)
+        out = {n: self._host_digest(o) for n, o in host.items()}
+        if slots:
+            impl = "pallas" if self.interpret_kernels else "xla"
+            ds = digest_leaves(leaves, interpret=self.interpret_kernels,
+                               impl=impl)
+            out.update(self._fold_slots(slots, ds))
+        return out
+
     def digests(self, state: ExecutionState, names) -> dict[str, int]:
-        return {n: self.digest(state.ns[n]) for n in names if n in state.ns}
+        return self.digest_many({n: state.ns[n] for n in names
+                                 if n in state.ns})
 
     # -- step 4: delta ---------------------------------------------------
     def delta_names(self, state: ExecutionState, names,
                     known: dict[str, int]):
         """Returns (names to send, tombstones, sender digests).
-        ``known`` = receiver's current content view."""
-        send: set[str] = set()
-        here = self.digests(state, names)
-        for n, d in here.items():
-            if d == -1 or known.get(n) != d:
-                send.add(n)
+        ``known`` = receiver's current content view.
+
+        Pure-array names ride the fused digest->compare->gather path: the
+        fresh digests are compared against ``known`` on device and only the
+        changed-name index list crosses to the host — one launch, one sync
+        for the whole manifest."""
+        from repro.kernels.hash_delta.ops import digest_leaves_delta
+        objs = {n: state.ns[n] for n in names if n in state.ns}
+        slots, leaves, host = self._split_for_batch(objs)
+        here = {n: self._host_digest(o) for n, o in host.items()}
+        send = {n for n, d in here.items() if d == -1 or known.get(n) != d}
+        if slots:
+            # per-leaf priors: a single-array name compares on device
+            # against the receiver's view of that name; tree leaves carry
+            # no per-leaf prior (their name digest is a host-side blake2b
+            # fold) so their real compare happens after the fold
+            prior: list = []
+            leaf_name: dict[int, str] = {}   # flat leaf idx -> array name
+            i = 0
+            for n, treedef, k in slots:
+                if treedef is None:
+                    prior.append(known.get(n))
+                    leaf_name[i] = n
+                else:
+                    prior.extend([None] * k)
+                i += k
+            impl = "pallas" if self.interpret_kernels else "xla"
+            ds, changed = digest_leaves_delta(
+                leaves, prior, interpret=self.interpret_kernels, impl=impl)
+            folded = self._fold_slots(slots, ds)
+            here.update(folded)
+            send.update(leaf_name[j] for j in changed if j in leaf_name)
+            send.update(n for n, treedef, _k in slots
+                        if treedef is not None and known.get(n) != folded[n])
         dead = {n for n in known if n not in state.ns}
         return send, dead, here

@@ -136,11 +136,36 @@ class LoopbackTransport(Transport):
         self._closed = True
 
 
+def sendmsg_all(sock: socket.socket, segments: list) -> int:
+    """writev-style gathered send: push every segment without ever joining
+    them into one buffer (``socket.sendmsg`` takes the list directly).
+    Handles partial sends by re-gathering the unsent tail as views."""
+    total = sum(len(s) for s in segments)
+    segs = [s if isinstance(s, memoryview) else memoryview(s)
+            for s in segments]
+    sent_total = 0
+    while segs:
+        sent = sock.sendmsg(segs)
+        sent_total += sent
+        if sent_total >= total:
+            break
+        while sent:                      # drop/trim fully/partly sent heads
+            if sent >= len(segs[0]):
+                sent -= len(segs[0])
+                segs.pop(0)
+            else:
+                segs[0] = segs[0][sent:]
+                sent = 0
+    return total
+
+
 class SocketTransport(Transport):
-    """Real TCP.  Outbound frames are encoded (length prefix + CRC);
-    inbound bytes run through the incremental :class:`FrameDecoder`, so
-    corruption and truncation surface as :class:`WireError`.  ``shaper``
-    throttles outbound bytes (token bucket + fixed latency)."""
+    """Real TCP.  Outbound frames are encoded scatter-gather (length
+    prefix, payload part(s), CRC go out as one ``sendmsg`` — chunk payloads
+    are never copied into a joined buffer); inbound bytes run through the
+    incremental :class:`FrameDecoder`, so corruption and truncation surface
+    as :class:`WireError`.  ``shaper`` throttles outbound bytes (token
+    bucket + fixed latency)."""
 
     kind = "socket"
 
@@ -164,18 +189,19 @@ class SocketTransport(Transport):
         return cls(sock, shaper=shaper)
 
     def send(self, frame: Frame) -> int:
-        data = frame.encoded()
+        segments = frame.segments()
+        nbytes = sum(len(s) for s in segments)
         if self.shaper is not None:
-            wait = self.shaper.delay(len(data))
+            wait = self.shaper.delay(nbytes)
             if wait > 0:
                 time.sleep(wait)
         try:
-            self._sock.sendall(data)
+            sendmsg_all(self._sock, segments)
         except OSError as e:
             raise WireError(f"socket send failed: {e}") from None
         self.frames_sent += 1
-        self.bytes_sent += len(data)
-        return len(data)
+        self.bytes_sent += nbytes
+        return nbytes
 
     def recv(self, timeout: float | None = _RECV_TIMEOUT) -> Frame:
         for f in self._dec.frames():
@@ -368,15 +394,16 @@ class WireReceiver:
                  or val.__name__.split(".")[0] in modules)
             and not alias.startswith("__")]
         if req.get("delta", True):
-            send, dead, _here = self.reducer.delta_names(self.state, names,
-                                                         known)
+            send, dead, here = self.reducer.delta_names(self.state, names,
+                                                        known)
             send &= names
         else:
-            send, dead = set(names), set()
+            send, dead, here = set(names), set(), None
         try:
             ser = self.reducer.serialize_names(
                 self.state, send,
-                on_error="raise" if req.get("strict", True) else "skip")
+                on_error="raise" if req.get("strict", True) else "skip",
+                digests=here)
         except SerializationFailure as e:
             transport.send(wire.json_frame(
                 wire.ERROR, {"error": str(e), "kind": "serialization"}))
@@ -492,7 +519,9 @@ class MigrationPeer:
                 f = tr.recv()
                 if f.ftype == wire.CHUNK:
                     d, enc = wire.parse_chunk(f)
-                    chunks[d] = enc
+                    # chunks outlive the recv loop: own the bytes here so a
+                    # small chunk view cannot pin a whole recv buffer
+                    chunks[d] = enc if isinstance(enc, bytes) else bytes(enc)
                 elif f.ftype == wire.TOMBSTONE:
                     dead = tuple(parse_list(f))
                 elif f.ftype == wire.END:

@@ -28,6 +28,16 @@ the applied names).
 Corruption of any kind — truncation, bit flips in header or payload, an
 unknown frame type, an absurd length — surfaces as :class:`WireError`,
 never a crash or a silently wrong namespace.
+
+**Zero-copy framing**: frames are scatter-gather.  A :class:`Frame` holds
+its payload as one or more buffer *parts* (``payload_parts``) and encodes
+to wire segments — header, payload part(s), CRC — without ever joining
+them into one ``bytes`` (:meth:`Frame.segments`; the CRC runs zlib's
+streaming path over each part).  On the way in, :class:`FrameDecoder`
+keeps the fed buffers as a segment queue and yields payloads as
+``memoryview`` slices of them — a CHUNK payload that arrived in one
+``recv`` is never copied; only the consumer that genuinely needs owned
+``bytes`` (e.g. a chunk store) materializes it.
 """
 from __future__ import annotations
 
@@ -35,6 +45,7 @@ import base64
 import json
 import struct
 import zlib
+from collections import deque
 from typing import Iterable, Iterator
 
 MAGIC = b"RWIR"
@@ -78,28 +89,60 @@ class WireError(Exception):
 
 class Frame:
     """One decoded frame.  ``wire_size`` is what it costs on a real link;
-    loopback transports pass Frame objects without ever encoding them."""
+    loopback transports pass Frame objects without ever encoding them.
 
-    __slots__ = ("ftype", "payload")
+    The payload is held as a tuple of buffer *parts* (bytes or memoryview)
+    so senders can frame large chunks without concatenating them; the
+    :attr:`payload` property presents them as one buffer (joining lazily —
+    and only when more than one part exists)."""
 
-    def __init__(self, ftype: int, payload: bytes = b""):
+    __slots__ = ("ftype", "_parts", "_joined")
+
+    def __init__(self, ftype: int, payload=b""):
         self.ftype = ftype
-        self.payload = payload
+        self._parts = payload if isinstance(payload, tuple) else (payload,)
+        self._joined = None
+
+    @property
+    def payload(self):
+        """The payload as a single bytes-like buffer (bytes or memoryview)."""
+        if len(self._parts) == 1:
+            return self._parts[0]
+        if self._joined is None:
+            self._joined = b"".join(bytes(p) for p in self._parts)
+        return self._joined
+
+    @property
+    def payload_parts(self) -> tuple:
+        return self._parts
+
+    @property
+    def payload_len(self) -> int:
+        return sum(len(p) for p in self._parts)
 
     @property
     def wire_size(self) -> int:
-        return FRAME_OVERHEAD + len(self.payload)
+        return FRAME_OVERHEAD + self.payload_len
+
+    def segments(self) -> list:
+        """Scatter-gather wire encoding: ``[header, *payload_parts, crc]``
+        — no payload bytes are copied; the CRC streams over each part."""
+        crc = zlib.crc32(bytes((self.ftype,)))
+        for p in self._parts:
+            crc = zlib.crc32(p, crc)
+        return [_HEADER.pack(self.payload_len, self.ftype),
+                *self._parts, _CRC.pack(crc)]
 
     def encoded(self) -> bytes:
-        return encode_frame(self.ftype, self.payload)
+        return b"".join(bytes(s) for s in self.segments())
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Frame({TYPE_NAMES.get(self.ftype, self.ftype)}, "
-                f"{len(self.payload)}B)")
+                f"{self.payload_len}B)")
 
     def __eq__(self, other) -> bool:
         return (isinstance(other, Frame) and other.ftype == self.ftype
-                and other.payload == self.payload)
+                and self.payload == other.payload)
 
 
 def encode_frame(ftype: int, payload: bytes) -> bytes:
@@ -108,18 +151,33 @@ def encode_frame(ftype: int, payload: bytes) -> bytes:
 
 
 class FrameDecoder:
-    """Incremental frame decoder: feed bytes as they arrive off a socket,
-    iterate complete frames.  Every integrity violation is a WireError."""
+    """Incremental frame decoder: feed buffers as they arrive off a socket,
+    iterate complete frames.  Every integrity violation is a WireError.
+
+    Fed buffers are *kept*, not copied, in a segment queue; a decoded
+    frame's payload is a ``memoryview`` slice into the fed buffer whenever
+    the payload arrived within one ``feed`` (always true for
+    :func:`decode_frames` and for loopback streams) — only payloads that
+    straddle a feed boundary are joined.  Feed ``bytes`` for the zero-copy
+    path; mutable buffers (``bytearray``) are defensively copied because
+    the caller could mutate them under a live payload view."""
 
     def __init__(self):
-        self._buf = bytearray()
+        self._segs: deque = deque()       # unconsumed buffers (memoryview)
+        self._off = 0                     # consumed prefix of _segs[0]
+        self._size = 0                    # unconsumed bytes across _segs
 
-    def feed(self, data: bytes) -> None:
-        self._buf.extend(data)
+    def feed(self, data) -> None:
+        if not len(data):
+            return
+        if isinstance(data, (bytearray, memoryview)):
+            data = bytes(data)
+        self._segs.append(memoryview(data))
+        self._size += len(data)
 
     @property
     def pending_bytes(self) -> int:
-        return len(self._buf)
+        return self._size
 
     def frames(self) -> Iterator[Frame]:
         while True:
@@ -128,27 +186,65 @@ class FrameDecoder:
                 return
             yield f
 
+    # -- segment-queue primitives ---------------------------------------
+    def _peek(self, n: int) -> bytes:
+        """First ``n`` unconsumed bytes without consuming (n is tiny —
+        header-sized — so the copy is a few bytes)."""
+        head = self._segs[0]
+        if len(head) - self._off >= n:
+            return bytes(head[self._off:self._off + n])
+        out = bytearray()
+        off = self._off
+        for seg in self._segs:
+            out += seg[off:off + (n - len(out))]
+            off = 0
+            if len(out) >= n:
+                break
+        return bytes(out)
+
+    def _take(self, n: int) -> memoryview:
+        """Consume ``n`` bytes.  Returns a zero-copy view when they lie in
+        one segment; joins into a fresh buffer only across a boundary."""
+        self._size -= n
+        head = self._segs[0]
+        if len(head) - self._off >= n:
+            out = head[self._off:self._off + n]
+            self._off += n
+            if self._off == len(head):
+                self._segs.popleft()
+                self._off = 0
+            return out
+        parts = bytearray()
+        while n:
+            head = self._segs[0]
+            take = min(len(head) - self._off, n)
+            parts += head[self._off:self._off + take]
+            self._off += take
+            n -= take
+            if self._off == len(head):
+                self._segs.popleft()
+                self._off = 0
+        return memoryview(bytes(parts))
+
     def _next(self) -> Frame | None:
-        buf = self._buf
-        if len(buf) < _HEADER.size:
+        if self._size < _HEADER.size:
             return None
-        plen, ftype = _HEADER.unpack_from(buf)
+        plen, ftype = _HEADER.unpack(self._peek(_HEADER.size))
         if plen > MAX_PAYLOAD:
             raise WireError(f"frame length {plen} exceeds MAX_PAYLOAD "
                             f"({MAX_PAYLOAD}) — corrupted length prefix?")
         if ftype not in FRAME_TYPES:
             raise WireError(f"unknown frame type {ftype}")
-        total = _HEADER.size + plen + _CRC.size
-        if len(buf) < total:
+        if self._size < _HEADER.size + plen + _CRC.size:
             return None
-        payload = bytes(buf[_HEADER.size:_HEADER.size + plen])
-        (crc,) = _CRC.unpack_from(buf, _HEADER.size + plen)
+        self._take(_HEADER.size)
+        payload = self._take(plen)
+        (crc,) = _CRC.unpack(self._take(_CRC.size))
         want = zlib.crc32(payload, zlib.crc32(bytes((ftype,))))
         if crc != want:
             raise WireError(
                 f"CRC mismatch on {TYPE_NAMES[ftype]} frame "
                 f"(got {crc:#010x}, want {want:#010x})")
-        del buf[:total]
         return Frame(ftype, payload)
 
 
@@ -205,7 +301,7 @@ def json_frame(ftype: int, obj) -> Frame:
 
 def parse_json(frame: Frame):
     try:
-        return json.loads(frame.payload.decode())
+        return json.loads(str(frame.payload, "utf-8"))
     except (ValueError, UnicodeDecodeError) as e:
         raise WireError(
             f"undecodable {TYPE_NAMES.get(frame.ftype, frame.ftype)} "
@@ -293,18 +389,29 @@ def parse_manifest(frame: Frame):
 _DIGEST = struct.Struct("<Q")
 
 
-def chunk_frame(digest: int, encoded: bytes) -> Frame:
-    """``encoded`` is the store encoding (1-byte codec tag + body)."""
-    return Frame(CHUNK, _DIGEST.pack(digest & (2**64 - 1)) + encoded)
+def chunk_frame(digest: int, encoded) -> Frame:
+    """``encoded`` is the store encoding (1-byte codec tag + body).  The
+    chunk bytes become a payload *part*, never copied behind a digest
+    prefix — the transport sends them scatter-gather."""
+    return Frame(CHUNK, (_DIGEST.pack(digest & (2**64 - 1)), encoded))
 
 
-def parse_chunk(frame: Frame) -> tuple[int, bytes]:
+def parse_chunk(frame: Frame) -> tuple[int, "bytes | memoryview"]:
+    """CHUNK frame -> (digest, store-encoded chunk).  The chunk may be a
+    ``memoryview`` into the frame's buffer — zero-copy; callers that need
+    owned bytes (a store) materialize it themselves."""
     if frame.ftype != CHUNK:
         raise WireError(f"expected CHUNK, got {TYPE_NAMES.get(frame.ftype)}")
-    if len(frame.payload) < _DIGEST.size + 1:
+    parts = frame.payload_parts
+    if len(parts) == 2 and len(parts[0]) == _DIGEST.size and len(parts[1]):
+        # sender-built frame: digest prefix + chunk ride as separate parts
+        (digest,) = _DIGEST.unpack(parts[0])
+        return digest, parts[1]
+    payload = frame.payload
+    if len(payload) < _DIGEST.size + 1:
         raise WireError("CHUNK payload too short for digest + codec tag")
-    (digest,) = _DIGEST.unpack_from(frame.payload)
-    return digest, frame.payload[_DIGEST.size:]
+    (digest,) = _DIGEST.unpack_from(payload)
+    return digest, payload[_DIGEST.size:]
 
 
 def state_stream_frames(ser, need: Iterable[int], *,

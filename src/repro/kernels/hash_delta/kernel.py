@@ -18,8 +18,21 @@ from jax.experimental import pallas as pl
 PRIME = np.uint32(2654435761)
 
 
+def premix(x):
+    """Per-element mix before the weighted sum.
+
+    The weighted sum alone is linear: a delta confined to one bit (e.g.
+    ``conj`` flipping sign bits) contributes ``delta * sum(w)``, which
+    annihilates mod 2^32 whenever the affected weights sum even.  The
+    xorshift-multiply makes each element's contribution carry-dependent,
+    so constant-XOR deltas no longer cancel.  ``premix(0) == 0``, which
+    keeps block zero-padding invisible to the hash."""
+    x = x ^ (x >> np.uint32(16))
+    return x * PRIME
+
+
 def _hash_kernel(x_ref, w_ref, h_ref):
-    x = x_ref[...]                               # (1, blk)
+    x = premix(x_ref[...])                       # (1, blk)
     w = w_ref[...]                               # (lanes, blk)
     prod = (x * w).astype(jnp.uint32)            # broadcast over lanes
     h = jnp.sum(prod, axis=1, dtype=jnp.uint32)  # (lanes,)
@@ -40,3 +53,42 @@ def block_hash_kernel(x2d_u32, weights, *, interpret: bool = False):
         interpret=interpret,
     )(x2d_u32, weights)
     return h
+
+
+def _hash_compare_kernel(x_ref, w_ref, p_ref, hp_ref, h_ref, c_ref):
+    x = premix(x_ref[...])                       # (1, blk)
+    w = w_ref[...]                               # (lanes, blk)
+    prod = (x * w).astype(jnp.uint32)
+    h = jnp.sum(prod, axis=1, dtype=jnp.uint32)  # (lanes,)
+    h = (h ^ (h >> np.uint32(15))) * PRIME
+    h_ref[0, :] = h
+    same = jnp.all(h == p_ref[0, :]) & (hp_ref[0, 0] != np.uint32(0))
+    c_ref[0, 0] = jnp.where(same, np.uint32(0), np.uint32(1))
+
+
+def block_hash_compare_kernel(x2d_u32, weights, prior, has_prior, *,
+                              interpret: bool = False):
+    """Fused digest+compare, one launch.
+
+    x2d (nb, blk) uint32; weights (lanes, blk); prior (nb, lanes) is the
+    previous manifest's block digest vector; has_prior (nb, 1) uint32 flags
+    which rows of ``prior`` are meaningful (0 => block is new, always
+    changed).  Returns ``(h, changed)``: the fresh (nb, lanes) digests —
+    bit-identical to :func:`block_hash_kernel` — plus a (nb, 1) uint32
+    changed flag per block, so the host never re-derives the comparison."""
+    nb, blk = x2d_u32.shape
+    lanes = weights.shape[0]
+    h, changed = pl.pallas_call(
+        _hash_compare_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((lanes, blk), lambda i: (0, 0)),
+                  pl.BlockSpec((1, lanes), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, lanes), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, lanes), jnp.uint32),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.uint32)],
+        interpret=interpret,
+    )(x2d_u32, weights, prior, has_prior)
+    return h, changed

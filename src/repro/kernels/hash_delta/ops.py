@@ -7,10 +7,27 @@ into a single **64-bit** leaf digest: both lanes are reduced on device and
 combined on the host as ``(hi << 32) | lo`` — Pallas/XLA arithmetic stays
 uint32 throughout, so no x64 mode is required, yet the digest space is a
 true 2^64 (the pre-CAS version returned a single uint32).
+
+**Batched manifest digesting.**  ``digest_leaves`` packs every leaf of a
+manifest — ragged sizes, mixed numpy/jax residency — into one block grid
+and digests the whole namespace in a *single* kernel launch with a single
+device->host sync, instead of one launch + one ``np.asarray`` round-trip
+per leaf.  ``digest_leaves_delta`` fuses the compare against the prior
+manifest's digest vector on device and gathers only the changed-leaf index
+list to the host.  Both are bit-identical to the per-leaf path: each leaf
+is padded to its own block boundary (so per-block digests are unchanged)
+and the per-leaf fold is an unsigned 32-bit weighted sum, which is exactly
+associative/commutative mod 2^32 — ``segment_sum`` over the packed grid
+therefore reproduces ``tensor_digest`` bit for bit.
+
+``HOST_SYNCS`` counts device->host materializations issued by this module
+(one per ``tensor_digest``, one per batched call) so benchmarks and tests
+can assert the O(leaves) -> O(1) reduction.
 """
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +35,25 @@ import numpy as np
 
 BLOCK = 1024
 LANES = 2
+_FOLD = np.uint32(2246822519)   # per-block position weight (golden-prime)
+
+HOST_SYNCS = 0                  # device->host syncs since reset_host_syncs()
+
+
+def _note_sync(n: int = 1) -> None:
+    global HOST_SYNCS
+    HOST_SYNCS += n
+
+
+def reset_host_syncs() -> None:
+    global HOST_SYNCS
+    HOST_SYNCS = 0
+
+
+def note_host_sync(n: int = 1) -> None:
+    """Record a device->host sync issued by a caller (e.g. the chunk
+    store's batched fold pulling the packed digest vector)."""
+    _note_sync(n)
 
 # host constants (no tracer leak): one odd weight vector per lane.  Lane 0
 # keeps the historical 0xD1657 stream; lane 1 is an independent stream.
@@ -61,11 +97,311 @@ def _digest_lanes(x, *, interpret: bool = False, impl: str = "pallas"):
     """Weighted fold of the per-block vector -> (2,) uint32 (host-free)."""
     h2 = block_digests(x, interpret=interpret, impl=impl)
     idx = (jnp.arange(h2.shape[0], dtype=jnp.uint32)
-           * jnp.uint32(2246822519) + jnp.uint32(1))
+           * _FOLD + jnp.uint32(1))
     return jnp.sum(h2 * idx[:, None], axis=0, dtype=jnp.uint32)
 
 
 def tensor_digest(x, *, interpret: bool = False, impl: str = "pallas") -> int:
     """Any tensor -> one 64-bit int digest (content hash for delta migration)."""
     lo, hi = np.asarray(_digest_lanes(x, interpret=interpret, impl=impl))
+    _note_sync()
     return (int(hi) << 32) | int(lo)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def block_digests_compare(x, prior, has_prior, *, interpret: bool = False,
+                          impl: str = "pallas"):
+    """Fused per-block digest + compare against a prior digest vector.
+
+    ``prior`` is (nb, 2) uint32 (the previous manifest's block lanes for
+    this tensor) and ``has_prior`` is (nb, 1) uint32 validity flags.
+    Returns ``(h, changed)``: ``h`` bit-identical to :func:`block_digests`,
+    ``changed`` a (nb, 1) uint32 flag per block — the comparison happens in
+    the same launch as the hash, so only flags ever cross to the host."""
+    x2d = _as_u32_blocks(x)
+    if impl == "xla":
+        from repro.kernels.hash_delta.ref import block_hash_compare_ref
+        return block_hash_compare_ref(x2d, jnp.asarray(_W), prior, has_prior)
+    from repro.kernels.hash_delta.kernel import block_hash_compare_kernel
+    return block_hash_compare_kernel(x2d, jnp.asarray(_W), prior, has_prior,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def packed_block_digests(u8, *, interpret: bool = False,
+                         impl: str = "pallas"):
+    """Pre-packed byte buffer (size % BLOCK == 0) -> (nb, 2) lanes.
+
+    The caller has already zero-padded each constituent payload to its own
+    block boundary, so every row equals the row :func:`block_digests` would
+    produce for that payload standalone."""
+    return _lanes_impl(u8.astype(jnp.uint32).reshape(-1, BLOCK),
+                       interpret, impl)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "impl"))
+def packed_block_digests_compare(u8, prior, has_prior, *,
+                                 interpret: bool = False,
+                                 impl: str = "pallas"):
+    """Fused variant of :func:`packed_block_digests`: digest + compare
+    against a prior (nb, 2) lane vector in one launch; returns
+    ``(h, changed)`` with ``changed`` (nb, 1) uint32."""
+    x2d = u8.astype(jnp.uint32).reshape(-1, BLOCK)
+    if impl == "xla":
+        from repro.kernels.hash_delta.ref import block_hash_compare_ref
+        return block_hash_compare_ref(x2d, jnp.asarray(_W), prior, has_prior)
+    from repro.kernels.hash_delta.kernel import block_hash_compare_kernel
+    return block_hash_compare_kernel(x2d, jnp.asarray(_W), prior, has_prior,
+                                     interpret=interpret)
+
+
+# ----------------------------------------------------------------------
+# batched manifest digesting: many ragged leaves, one launch, one sync
+# ----------------------------------------------------------------------
+
+_ALIGN = 64   # XLA:CPU buffer alignment — required for zero-copy import
+
+
+def aligned_empty(n: int, dtype=np.uint32) -> np.ndarray:
+    """1-D ``np.empty(n, dtype)`` on a 64-byte boundary.
+
+    numpy only guarantees 16-byte alignment, which forces jax's dlpack
+    import to copy; carving the view out of an oversized uint8 buffer
+    makes :func:`to_device` a true zero-copy alias."""
+    itemsize = np.dtype(dtype).itemsize
+    raw = np.empty(n * itemsize + _ALIGN, np.uint8)
+    off = (-raw.ctypes.data) % _ALIGN
+    return raw[off:off + n * itemsize].view(dtype)
+
+
+def to_device(a: np.ndarray):
+    """Host array -> device array, zero-copy when 64-byte aligned.
+
+    The device array aliases the host buffer, so callers must not mutate
+    ``a`` afterwards.  Falls back to a copying transfer when the buffer
+    cannot be shared (misaligned, or no dlpack support)."""
+    try:
+        return jnp.from_dlpack(a)
+    except Exception:
+        return jnp.asarray(a)
+
+
+_STAGING_CAP = 3 << 29          # max bytes kept alive per dtype: covers a
+                                # GiB-scale manifest plus block padding
+_STAGING = threading.local()
+
+
+def staging_buffer(n: int, dtype=np.uint32) -> np.ndarray:
+    """Aligned staging buffer, reused across calls (per thread, capped).
+
+    First-touch page faults dominate the cost of a fresh ``np.empty`` —
+    roughly 7x the price of refilling warm pages — so batch digesting
+    stages through a recycled buffer.  Reuse is only safe because every
+    batched entry point syncs (``device_get``) before returning: once a
+    call is over, no live device array aliases the buffer.  Requests
+    beyond the cap fall back to a fresh allocation rather than pinning
+    manifest-sized memory forever."""
+    nbytes = n * np.dtype(dtype).itemsize
+    if nbytes > _STAGING_CAP:
+        return aligned_empty(n, dtype)
+    pool = getattr(_STAGING, "pool", None)
+    if pool is None:
+        pool = _STAGING.pool = {}
+    key = np.dtype(dtype).str
+    buf = pool.get(key)
+    if buf is None or buf.size < n:
+        grown = 0 if buf is None else 2 * buf.size
+        cap = _STAGING_CAP // np.dtype(dtype).itemsize
+        buf = pool[key] = aligned_empty(min(cap, max(n, grown)), dtype)
+    return buf[:n]
+
+
+def _np_u32_flat(a: np.ndarray) -> np.ndarray:
+    """Host-exact mirror of :func:`_as_u32_blocks`, unpadded and flat.
+
+    Bit-identity notes: float16/float32 -> float32 is exact in both, and
+    float64 -> float32 uses the same IEEE round-to-nearest that jax's
+    implicit x64 demotion applies; 4-byte dtypes are reinterpreted; narrow
+    and 64-bit ints wrap mod 2^32 exactly as XLA's convert does."""
+    if a.dtype.kind == "f":
+        raw = np.ascontiguousarray(a, dtype=np.float32).view(np.uint32)
+    elif a.dtype.itemsize == 4 and a.dtype.kind in "iu":
+        raw = np.ascontiguousarray(a).view(np.uint32)
+    else:
+        raw = a.astype(np.uint32)
+    return raw.reshape(-1)
+
+
+_prep_blocks = jax.jit(_as_u32_blocks)
+
+
+def _pack_leaves(leaves):
+    """Ragged leaves -> one (NB, BLOCK) uint32 grid + blocks-per-leaf.
+
+    Each leaf is padded to its own block boundary before packing, so every
+    row of the grid equals the row the per-leaf path would have hashed.
+    numpy-resident leaves are gathered host-side (one copy pass, slice-
+    assigned into a recycled aligned staging buffer) and shipped
+    zero-copy; jax-resident leaves are prepped on device and never visit
+    the host.  All host runs carve disjoint slices of ONE staging buffer —
+    a per-run buffer would let a later fill clobber an earlier run's
+    still-pending device alias."""
+    order = []       # ("host", flat_views, run_nb) | ("dev", blocks, None)
+    nbs = []
+    host_nb = 0
+    run, run_nb = [], 0
+
+    def _close_run():
+        nonlocal run, run_nb, host_nb
+        if run_nb:
+            order.append(("host", run, run_nb))
+            host_nb += run_nb
+        run, run_nb = [], 0
+
+    for a in leaves:
+        if isinstance(a, (np.ndarray, np.generic)):
+            flat = _np_u32_flat(np.asarray(a))
+            nb = -(-flat.size // BLOCK)
+            run.append(flat)
+            run_nb += nb
+            nbs.append(nb)
+        else:
+            _close_run()
+            b = _prep_blocks(a)
+            if b.shape[0]:
+                order.append(("dev", b, None))
+            nbs.append(int(b.shape[0]))
+    _close_run()
+
+    if host_nb:
+        dst = staging_buffer(host_nb * BLOCK)
+    parts, off = [], 0
+    for kind, payload, _nb in order:
+        if kind == "dev":
+            parts.append(payload)
+            continue
+        lo = off
+        for flat in payload:
+            end = off + flat.size
+            dst[off:end] = flat
+            off += -(-flat.size // BLOCK) * BLOCK
+            if off != end:
+                dst[end:off] = 0
+        # run offsets are BLOCK-row multiples, so slices stay 64B-aligned
+        parts.append(to_device(dst[lo:off].reshape(-1, BLOCK)))
+    if not parts:
+        return jnp.zeros((0, BLOCK), jnp.uint32), nbs
+    x2d = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return x2d, nbs
+
+
+def _fold_weights(nbs):
+    """Per-block fold weight + leaf segment id (host-side, shapes static)."""
+    nbs_a = np.asarray(nbs, np.int64)
+    total = int(nbs_a.sum())
+    seg = np.repeat(np.arange(len(nbs_a), dtype=np.int32), nbs_a)
+    starts = np.repeat(np.cumsum(nbs_a) - nbs_a, nbs_a)
+    local = (np.arange(total, dtype=np.int64) - starts).astype(np.uint32)
+    idx = local * _FOLD + np.uint32(1)
+    return idx, seg
+
+
+def _lanes_impl(x2d, interpret: bool, impl: str):
+    if impl == "xla":
+        from repro.kernels.hash_delta.ref import block_hash_ref
+        return block_hash_ref(x2d, jnp.asarray(_W))
+    from repro.kernels.hash_delta.kernel import block_hash_kernel
+    return block_hash_kernel(x2d, jnp.asarray(_W), interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_leaves", "interpret", "impl"))
+def _batched_lanes(x2d, idx, seg, *, num_leaves: int,
+                   interpret: bool = False, impl: str = "pallas"):
+    """One launch over the packed grid -> (num_leaves, 2) digest lanes.
+
+    The per-leaf fold is a weighted uint32 sum; ``segment_sum`` reorders
+    additions but unsigned add is associative/commutative mod 2^32, so the
+    result is bit-identical to the per-leaf ``jnp.sum``."""
+    h2 = _lanes_impl(x2d, interpret, impl)
+    return jax.ops.segment_sum(h2 * idx[:, None], seg,
+                               num_segments=num_leaves)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_leaves", "interpret", "impl"))
+def _batched_delta(x2d, idx, seg, prior, has_prior, *, num_leaves: int,
+                   interpret: bool = False, impl: str = "pallas"):
+    """Fused digest -> compare -> gather, entirely on device.
+
+    Returns (lanes, changed_idx) where changed_idx is the (num_leaves,)
+    gathered index vector of changed leaves, padded with ``num_leaves``."""
+    lanes = _batched_lanes(x2d, idx, seg, num_leaves=num_leaves,
+                           interpret=interpret, impl=impl)
+    changed = (~has_prior) | jnp.any(lanes != prior, axis=1)
+    (ch_idx,) = jnp.nonzero(changed, size=num_leaves,
+                            fill_value=num_leaves)
+    return lanes, ch_idx
+
+
+def _fold_digests(lanes: np.ndarray) -> list[int]:
+    lanes = np.asarray(lanes, np.uint64)
+    return ((lanes[:, 1] << np.uint64(32)) | lanes[:, 0]).tolist()
+
+
+def digest_leaves(leaves, *, interpret: bool = False,
+                  impl: str = "pallas") -> list[int]:
+    """Digest a whole manifest of leaves in one launch + one host sync.
+
+    Returns one 64-bit digest per leaf, in order, bit-identical to calling
+    :func:`tensor_digest` on each leaf individually."""
+    leaves = list(leaves)
+    n = len(leaves)
+    if n == 0:
+        return []
+    x2d, nbs = _pack_leaves(leaves)
+    if x2d.shape[0] == 0:       # all leaves empty: digest of no blocks is 0
+        return [0] * n
+    idx, seg = _fold_weights(nbs)
+    lanes = np.asarray(_batched_lanes(
+        x2d, jnp.asarray(idx), jnp.asarray(seg), num_leaves=n,
+        interpret=interpret, impl=impl))
+    _note_sync()
+    return _fold_digests(lanes)
+
+
+def digest_leaves_delta(leaves, prior_digests, *, interpret: bool = False,
+                        impl: str = "pallas"):
+    """Digest + delta for a whole manifest: one launch, one host sync.
+
+    ``prior_digests`` aligns with ``leaves``: the prior 64-bit digest of
+    each leaf, or ``None`` when there is no prior (leaf counts as changed).
+    Returns ``(digests, changed)`` — per-leaf 64-bit digests (bit-identical
+    to :func:`tensor_digest`) and the sorted index list of leaves whose
+    digest differs from its prior.  The compare and the changed-index
+    gather both run on device; only (n, 2) lanes + (n,) indices cross."""
+    leaves = list(leaves)
+    n = len(leaves)
+    if n == 0:
+        return [], []
+    prior = np.zeros((n, LANES), np.uint32)
+    has_prior = np.zeros(n, bool)
+    for j, d in enumerate(prior_digests):
+        if d is not None:
+            prior[j, 0] = np.uint32(d & 0xFFFFFFFF)
+            prior[j, 1] = np.uint32((d >> 32) & 0xFFFFFFFF)
+            has_prior[j] = True
+    x2d, nbs = _pack_leaves(leaves)
+    if x2d.shape[0] == 0:
+        digests = [0] * n
+        changed = [j for j in range(n)
+                   if not has_prior[j] or prior_digests[j] != 0]
+        return digests, changed
+    idx, seg = _fold_weights(nbs)
+    lanes, ch_idx = jax.device_get(_batched_delta(
+        x2d, jnp.asarray(idx), jnp.asarray(seg), jnp.asarray(prior),
+        jnp.asarray(has_prior), num_leaves=n, interpret=interpret,
+        impl=impl))
+    _note_sync()
+    changed = [int(j) for j in ch_idx if j < n]
+    return _fold_digests(lanes), changed

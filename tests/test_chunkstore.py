@@ -131,3 +131,51 @@ def test_wire_nbytes_counts_only_missing_chunks():
     none = ser.wire_nbytes(set(ser.chunks))
     assert full > x.nbytes                          # payload + manifest
     assert none < full / 10                         # manifest + pickle only
+
+
+# ----------------------------------------------------------------------
+# batched chunk digesting (one launch for a whole manifest of payloads)
+# ----------------------------------------------------------------------
+
+def test_batched_chunk_digests_match_per_payload_bit_for_bit():
+    from repro.core.chunkstore import array_chunk_digests_many
+    rng = np.random.default_rng(2)
+    payloads = [rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+                for n in (0, 1, 1023, 1024, 5000, 3 * 4096 + 17)]
+    per = [array_chunk_digests(p, 4096) for p in payloads]
+    many, h64s = array_chunk_digests_many(payloads, 4096)
+    assert many == per
+    assert [len(h) for h in h64s] == [(len(p) + 1023) // 1024
+                                      for p in payloads]
+
+
+def test_batched_chunk_digests_all_empty_payloads():
+    from repro.core.chunkstore import array_chunk_digests_many
+    many, h64s = array_chunk_digests_many([b"", b""])
+    assert many == [[], []]
+    assert all(len(h) == 0 for h in h64s)
+    assert array_chunk_digests_many([]) == ([], [])
+
+
+def test_batched_chunk_digest_prior_reuse_is_content_verified():
+    from repro.core.chunkstore import array_chunk_digests_many
+    rng = np.random.default_rng(4)
+    payloads = [rng.integers(0, 256, 5 * 4096, dtype=np.uint8).tobytes()
+                for _ in range(4)]
+    digs, h64s = array_chunk_digests_many(payloads, 4096)
+    priors = [(h, d, len(p)) for h, d, p in zip(h64s, digs, payloads)]
+
+    # mutate one payload, shrink another: both must be freshly digested,
+    # the untouched ones may reuse — results identical either way
+    mutated = list(payloads)
+    mutated[1] = b"\xff" + mutated[1][1:]
+    mutated[2] = mutated[2][: 3 * 4096]
+    again, _ = array_chunk_digests_many(mutated, 4096, priors=priors)
+    fresh = [array_chunk_digests(p, 4096) for p in mutated]
+    assert again == fresh
+
+    # a stale cache entry (prior from an older payload version) is caught
+    # by the on-device block compare, never served
+    stale = [priors[1]] + [None] * 3          # wrong prior for payload 0
+    out, _ = array_chunk_digests_many(mutated, 4096, priors=stale)
+    assert out == fresh

@@ -1,0 +1,134 @@
+"""Batched digest/delta plane: bit-identity with the per-leaf path.
+
+The whole-manifest digest (`digest_leaves`) and the fused
+digest->compare->gather (`digest_leaves_delta`) must produce digests
+bit-identical to per-leaf `tensor_digest` — fig5/fig11 decisions and CAS
+chunk keys key off these bits, so any drift is a correctness bug, not a
+tolerance question.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp_compat import given, settings, st
+
+from repro.kernels.hash_delta import ops
+
+_DTYPES = (np.float32, np.float64, np.float16, np.int32, np.uint32,
+           np.int64, np.int8, np.bool_)
+
+
+def _leaf(rng: np.random.Generator, spec: int) -> np.ndarray:
+    """Deterministic ragged leaf from one sampled integer."""
+    dtype = _DTYPES[spec % len(_DTYPES)]
+    n = (spec * 131) % 3000          # 0..2999: empty, sub-block, multi-block
+    a = rng.standard_normal(n) * 100
+    if dtype == np.bool_:
+        return a > 0
+    return a.astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=0, max_size=12),
+       st.integers(0, 2**31 - 1))
+def test_batched_digests_match_per_leaf_bit_for_bit(specs, seed):
+    rng = np.random.default_rng(seed)
+    leaves = [_leaf(rng, s) for s in specs]
+    # sprinkle device-resident leaves so packing mixes host and jax parts
+    leaves = [jnp.asarray(a) if i % 3 == 2 and a.dtype == np.float32 else a
+              for i, a in enumerate(leaves)]
+    per = [ops.tensor_digest(a, impl="xla") for a in leaves]
+    assert ops.digest_leaves(leaves, impl="xla") == per
+
+
+def test_batched_matches_interpret_kernel():
+    rng = np.random.default_rng(11)
+    leaves = [rng.standard_normal(n).astype(np.float32)
+              for n in (1, 1000, 1024, 2049, 0, 4096)]
+    # per-leaf reference via xla: the interpret Pallas path cannot launch a
+    # 0-block grid for the empty leaf, while the batched grid packs it away
+    per = [ops.tensor_digest(a, impl="xla") for a in leaves]
+    assert ops.digest_leaves(leaves, interpret=True) == per
+    nonempty = [a for a in leaves if a.size]
+    assert (ops.digest_leaves(nonempty, interpret=True)
+            == [ops.tensor_digest(a, interpret=True) for a in nonempty])
+
+
+def test_delta_reports_exactly_the_changed_leaves():
+    rng = np.random.default_rng(5)
+    leaves = [rng.standard_normal(300).astype(np.float32) for _ in range(9)]
+    prior = ops.digest_leaves(leaves, impl="xla")
+    mutated = [a.copy() for a in leaves]
+    mutated[2][7] += 1.0
+    mutated[6][0] -= 0.5
+    priors = list(prior)
+    priors[4] = None                 # unknown prior counts as changed
+    digests, changed = ops.digest_leaves_delta(mutated, priors, impl="xla")
+    assert changed == [2, 4, 6]
+    assert digests == ops.digest_leaves(mutated, impl="xla")
+
+
+def test_delta_empty_and_all_unchanged():
+    assert ops.digest_leaves_delta([], []) == ([], [])
+    rng = np.random.default_rng(6)
+    leaves = [rng.standard_normal(64).astype(np.float32) for _ in range(3)]
+    prior = ops.digest_leaves(leaves, impl="xla")
+    digests, changed = ops.digest_leaves_delta(leaves, prior, impl="xla")
+    assert changed == [] and digests == prior
+
+
+def test_fused_compare_kernel_matches_oracle():
+    from repro.kernels.hash_delta.kernel import block_hash_compare_kernel
+    from repro.kernels.hash_delta.ref import block_hash_compare_ref
+
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, 2**32, (6, ops.BLOCK), dtype=np.uint32))
+    w = jnp.asarray(ops._W)
+    h_ref = np.asarray(block_hash_compare_ref(
+        x, w, jnp.zeros((6, ops.LANES), jnp.uint32),
+        jnp.zeros((6, 1), jnp.uint32))[0])
+    prior = jnp.asarray(h_ref.copy())
+    prior = prior.at[3, 0].add(np.uint32(1))        # one block differs
+    has = jnp.ones((6, 1), jnp.uint32)
+    has = has.at[5, 0].set(0)                       # one block has no prior
+    hk, ck = block_hash_compare_kernel(x, w, prior, has, interpret=True)
+    hr, cr = block_hash_compare_ref(x, w, prior, has)
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(hk), h_ref)
+    assert list(np.asarray(ck)[:, 0]) == [0, 0, 0, 1, 0, 1]
+
+
+def test_host_sync_counter_is_o1_for_batched():
+    rng = np.random.default_rng(13)
+    leaves = [rng.standard_normal(256).astype(np.float32) for _ in range(40)]
+    ops.reset_host_syncs()
+    for a in leaves:
+        ops.tensor_digest(a, impl="xla")
+    assert ops.HOST_SYNCS == 40
+    ops.reset_host_syncs()
+    ops.digest_leaves(leaves, impl="xla")
+    assert ops.HOST_SYNCS == 1
+    ops.reset_host_syncs()
+    ops.digest_leaves_delta(leaves, [None] * 40, impl="xla")
+    assert ops.HOST_SYNCS == 1
+
+
+def test_staging_reuse_cannot_corrupt_consecutive_calls():
+    # back-to-back batched digests reuse the same staging buffer; the
+    # second call must not disturb results derived from the first
+    rng = np.random.default_rng(21)
+    a = [rng.standard_normal(2000).astype(np.float32) for _ in range(4)]
+    b = [rng.standard_normal(2000).astype(np.float32) for _ in range(4)]
+    da1 = ops.digest_leaves(a, impl="xla")
+    db = ops.digest_leaves(b, impl="xla")
+    da2 = ops.digest_leaves(a, impl="xla")
+    assert da1 == da2 and da1 != db
+
+
+def test_object_dtype_leaf_is_rejected_not_misdigested():
+    from repro.core.reducer import StateReducer
+    with pytest.raises(TypeError):
+        StateReducer._hashable_leaf(np.array([object()], dtype=object))

@@ -147,3 +147,39 @@ def test_reduce_state_flag():
     names_off, _, _ = red_off.reduce(st_, "y = x + 1")
     assert names_on == {"x"}
     assert "big" in names_off  # full state capture
+
+
+def test_digest_handles_strided_complex128_views():
+    """Non-contiguous wide leaves must digest by content, not by whatever
+    bytes a raw view would alias."""
+    red = StateReducer()
+    base = np.arange(32, dtype=np.complex128) + 1j * np.arange(32)
+    v = base[::2]                                   # strided view
+    assert red.digest(v) == red.digest(np.ascontiguousarray(v))
+    w = np.ascontiguousarray(v)
+    w[3] = w[3].conjugate()                         # imaginary part only
+    assert red.digest(w) != red.digest(v)
+
+
+def test_digest_sees_imaginary_part_of_jax_complex_leaves():
+    """jax complex leaves used to fall through an XLA convert that kept
+    only the real part, so conjugation was invisible to the digest."""
+    red = StateReducer()
+    z = jnp.asarray(np.array([1 + 2j, 3 + 4j], np.complex64))
+    assert red.digest(z) != red.digest(jnp.conj(z))
+    z64 = jnp.asarray(np.array([1 + 2j, 3 + 4j]))
+    assert red.digest(z64) != red.digest(jnp.conj(z64))
+
+
+def test_digest_many_matches_per_object_digests():
+    red = StateReducer()
+    rng = np.random.default_rng(8)
+    objs = {
+        "a": rng.standard_normal(500).astype(np.float32),
+        "b": jnp.asarray(rng.standard_normal(64), jnp.float32),
+        "tree": {"x": rng.standard_normal(10), "y": [1, 2]},
+        "host": "just a string",
+        "wide": rng.integers(0, 2**40, 7).astype(np.int64),
+    }
+    singles = {n: red.digest(v) for n, v in objs.items()}
+    assert red.digest_many(objs) == singles

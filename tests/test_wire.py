@@ -174,3 +174,31 @@ def test_hello_rejects_wrong_magic_and_version():
         wire.parse_hello(Frame(wire.HELLO, bytes(bad_ver)))
     with pytest.raises(WireError):
         wire.parse_hello(Frame(wire.END))
+
+
+def test_large_chunk_payload_is_a_view_into_the_fed_buffer():
+    """Satellite of the zero-copy plane: a CHUNK that arrives within one
+    feed() must decode to a payload that *aliases* the fed buffer — any
+    copy here is a regression the benchmark would only show as noise."""
+    body = b"\x00" + os.urandom(4 << 20)          # codec tag + 4 MiB chunk
+    frame = wire.chunk_frame(123456789, body)
+    buf = frame.encoded()
+    dec = FrameDecoder()
+    dec.feed(buf)
+    (f,) = tuple(dec.frames())
+    assert isinstance(f.payload, memoryview)
+    assert f.payload.obj is buf                   # zero-copy, same object
+    d, enc = wire.parse_chunk(f)
+    assert d == 123456789
+    assert isinstance(enc, memoryview) and enc.obj is buf
+    assert bytes(enc) == body
+
+
+def test_scatter_gather_segments_equal_legacy_encoding():
+    body = b"\x02" + os.urandom(70_000)
+    f = wire.chunk_frame(7, body)
+    import struct as _s
+    legacy = wire.encode_frame(wire.CHUNK, _s.pack("<Q", 7) + body)
+    assert b"".join(bytes(s) for s in f.segments()) == legacy
+    # and the segments really are the caller's buffers, not copies
+    assert any(s is body for s in f.segments())
