@@ -32,6 +32,7 @@ MODULES = [
     "bench_fleet",                # event-driven fleet: arrivals/failures/scaling
     "bench_transport",            # wire protocol: loopback vs socket vs shaped
     "bench_digest",               # batched digest/delta + zero-copy wire
+    "bench_live",                 # background delta replication / liveness
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
@@ -43,6 +44,7 @@ ARTIFACTS = {
     "bench_fleet": "BENCH_fleet.json",
     "bench_transport": "BENCH_transport.json",
     "bench_digest": "BENCH_digest.json",
+    "bench_live": "BENCH_live.json",
 }
 
 

@@ -463,6 +463,11 @@ class MigrationAnalyzer:
         # cost/horizon placement prices provisioning delay + queue depth;
         # None (the default) keeps the paper's decisions bit-identical
         self.fleet_view = None
+        # live replication attaches an object with residual_bytes(nbytes,
+        # src, dst) here so placement prices only the bytes NOT already
+        # trickled to the target; None (the default) keeps decisions
+        # bit-identical to the unreplicated run
+        self.replication_view = None
         self.state_size_estimate: dict[str, float] = defaultdict(lambda: 1e6)
         self._chain: list[PlacementPolicy] = []
         if use_knowledge:
@@ -501,6 +506,8 @@ class MigrationAnalyzer:
     def pair_migration_time(self, nbytes: float, src: str, dst: str) -> float:
         if src == dst:
             return 0.0
+        if self.replication_view is not None:
+            nbytes = self.replication_view.residual_bytes(nbytes, src, dst)
         if self.registry is not None:
             return self.registry.transfer_seconds(src, dst, nbytes)
         return self.migration_latency + nbytes / self.migration_bandwidth

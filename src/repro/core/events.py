@@ -120,16 +120,26 @@ class EventLoop:
     def process(self, gen: Generator | Iterator, *,
                 priority: int = 0, delay: float = 0.0) -> Event:
         """Drive a generator as a process: each ``yield dt`` suspends it for
-        ``dt`` seconds (``None``/0 = same instant, behind queued peers)."""
+        ``dt`` seconds (``None``/0 = same instant, behind queued peers).
+        The returned handle covers the process's whole lifetime: cancelling
+        it stops the process at its next wakeup (and closes the generator),
+        not just the first step — same contract as :meth:`every`."""
+        handle = Event(self.clock.now() + delay, priority, -1, None, ())
 
         def step():
+            if handle.cancelled:
+                if hasattr(gen, "close"):
+                    gen.close()
+                return
             try:
                 dt = next(gen)
             except StopIteration:
+                handle.cancelled = True     # finished: mark for observers
                 return
             self.call_later(float(dt or 0.0), step, priority=priority)
 
-        return self.call_later(delay, step, priority=priority)
+        self.call_later(delay, step, priority=priority)
+        return handle
 
     # -- running ---------------------------------------------------------
     def run(self, until: float | None = None) -> float:

@@ -39,6 +39,15 @@ def _argmax(dist: dict[int, float]) -> tuple[int, float] | None:
     return best
 
 
+def top_candidates(dist: dict[int, float], k: int) -> list[tuple[int, float]]:
+    """The ``k`` most likely next cells, deterministically ordered (highest
+    probability first, smallest cell id on ties) — the shared target-
+    selection rule for speculative prefetch and background trickling."""
+    if k <= 0:
+        return []
+    return sorted(dist.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+
+
 # ----------------------------------------------------------------------
 # interface
 # ----------------------------------------------------------------------

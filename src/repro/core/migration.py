@@ -24,16 +24,19 @@ from repro.core import telemetry as T
 from repro.core.analyzer import Decision, MigrationAnalyzer, PerfModel
 from repro.core.context import ContextDetector
 from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment
-from repro.core.interaction import ConfidenceGate, InteractionModel
+from repro.core.interaction import (ConfidenceGate, InteractionModel,
+                                    top_candidates)
 from repro.core.kb import KnowledgeBase, ProvRecord
 from repro.core.notebook import Cell, Notebook
-from repro.core.reducer import SerializationFailure, SerializedState, StateReducer
+from repro.core.reducer import (DIGEST_BYTES, SerializationFailure,
+                                SerializedState, StateReducer)
 from repro.core.simclock import SimClock
 from repro.core.state import ExecutionState
 
 __all__ = [
     "EnvFailure", "ExecutionEnvironment", "MigrationResult",
-    "MigrationEngine", "PipelinedMigrationEngine", "HybridRuntime",
+    "MigrationEngine", "PipelinedMigrationEngine", "DeltaReplicator",
+    "HybridRuntime",
 ]
 
 
@@ -67,6 +70,8 @@ class MigrationResult:
     noop: bool = False       # empty delta: nothing travelled, nothing charged
     prefetched: tuple[str, ...] = ()   # names applied from a pipelined prefetch
     wasted_prefetch_bytes: int = 0     # speculative bytes streamed but unused
+    claimed: tuple[str, ...] = ()      # names claimed from trickled replication
+    claim_bytes: int = 0               # manifest-only cost of that claim
     # transport plane: what the migration actually cost on a real transport.
     # ``seconds`` above stays the *modeled* charge (placement decisions and
     # the sim clock run on it); these record reality when frames moved.
@@ -117,6 +122,13 @@ class MigrationEngine:
         # receiver's content view: env name -> {state name -> digest}
         self.synced: dict[str, dict[str, int]] = {}
         self.log: list[MigrationResult] = []
+        # background delta replicator (attached by the runtime when live
+        # replication is on); decision-time migrations claim its banked state
+        self.replicator: "DeltaReplicator | None" = None
+        # ONE waste ledger for every speculative byte that streamed but was
+        # never claimed — pipelined prefetch and trickled replication both
+        # charge here, so reports surface a single number
+        self.prefetch_wasted_bytes = 0
         # chunk manifests of the most recent migrate() — consumed by the
         # Checkpointer; deliberately NOT kept per-log-entry, which would pin
         # every byte ever migrated in memory for the session's lifetime
@@ -153,11 +165,19 @@ class MigrationEngine:
             return self._migrate_pull(src, dst, cell_source, names, strict)
         import types as _types
         modules: set[str] = set()
+        full_state = names is None and cell_source is None
         if names is None:
             if cell_source is not None:
                 names, modules, _ = self.reducer.reduce(src.state, cell_source)
             else:
                 names = set(src.state.names())
+        rep = self.replicator
+        if rep is not None and full_state and dst.kind != "storage":
+            # liveness pruning: a full-state move (return home / block exit)
+            # skips names no remaining cell can observe.  Checkpoints
+            # (storage destinations) always carry everything — recovery may
+            # replay from an older plan position than liveness assumed.
+            names = rep.prune_dead(names, src.state)
         # re-import module aliases on the destination (paper: preamble/deps);
         # for a transport-bound destination the alias specs ride the
         # manifest instead and the receiver imports them itself
@@ -180,8 +200,16 @@ class MigrationEngine:
         names = {n for n in names
                  if not isinstance(src.state.get(n), _types.ModuleType)}
         known = self.synced.setdefault(dst.name, {})
+        # claim trickled state: names the replicator already banked at dst
+        # (content re-validated by digest) need only a manifest, not bytes
+        claim_sub: SerializedState | None = None
+        if rep is not None and self.delta and dst.kind != "storage":
+            claim_sub = rep.peek_claim(src, dst, names, known)
         if self.delta:
-            send, dead, here = self.reducer.delta_names(src.state, names, known)
+            eff_known = (known if claim_sub is None
+                         else {**known, **claim_sub.digests})
+            send, dead, here = self.reducer.delta_names(src.state, names,
+                                                        eff_known)
             send &= set(names)
         else:
             send, dead = set(names), set()
@@ -233,13 +261,38 @@ class MigrationEngine:
         if dead:
             self._propagate_tombstones(dead, exclude=(dst.name,))
 
+        # apply the replication claim: the bytes are already banked at dst,
+        # so only the manifest (digest refs + pickle streams) travels — a
+        # converged trickle turns the migration into this claim alone
+        claim_names: tuple[str, ...] = ()
+        claim_bytes = 0
+        if claim_sub is not None:
+            held_claim = {d for b in claim_sub.blobs.values()
+                          for d in b.chunk_digests()}
+            claim_bytes = claim_sub.wire_nbytes(held_claim)
+            if dst_peer is not None:
+                cstats = dst_peer.send_state(claim_sub)
+                wire_frames += cstats.frames
+                wall_seconds += cstats.wall_seconds
+            else:
+                objs = self.reducer.deserialize(claim_sub,
+                                                target_ns=dst.state.ns,
+                                                chunk_store=dst.chunk_store)
+                dst.state.update(objs)
+            known.update(claim_sub.digests)
+            rep.commit_claim(dst.name, claim_sub)
+            claim_names = tuple(sorted(claim_sub.blobs))
+            wire_bytes += claim_bytes
+
         # an empty delta is a no-op: nothing crosses the wire, nothing charged
-        noop = not send and not dead
+        noop = not send and not dead and not claim_names
         seconds = 0.0 if noop else self.transfer_seconds(
             wire_bytes, src.name, dst.name)
-        res = MigrationResult(src.name, dst.name, tuple(sorted(send)),
+        res = MigrationResult(src.name, dst.name,
+                              tuple(sorted(set(send) | set(claim_names))),
                               tuple(sorted(dead)), 0 if noop else wire_bytes,
                               seconds, noop=noop,
+                              claimed=claim_names, claim_bytes=claim_bytes,
                               transport=(getattr(dst, "transport", "socket")
                                          if dst_peer is not None
                                          else "loopback"),
@@ -591,6 +644,358 @@ class PipelinedMigrationEngine(MigrationEngine):
         return res
 
 
+@dataclass
+class _BankedName:
+    """One name's trickled snapshot banked at a destination."""
+    blob: object                 # SerializedName (chunks live in dst's store)
+    digest: int
+    nbytes: int                  # wire bytes this entry cost to trickle
+
+
+class DeltaReplicator:
+    """Background delta replication during think time (the tentpole).
+
+    Between cells — while the user reads output — the replicator wakes,
+    asks the reducer which names changed since the last trickle to each
+    likely target (the interaction model's next-cell distribution picks the
+    top-k), and streams those deltas ahead of any decision, rate-limited on
+    the transport's low-priority lane so interactive traffic always
+    preempts.  Receivers *bank* trickled chunks exactly like speculative
+    prefetch: nothing touches the namespace until a real migration claims
+    it, and a mid-trickle redefinition tombstones the stale entry (bytes
+    charged to the engine's single waste ledger).
+
+    At decision time the engine's :meth:`MigrationEngine.migrate` calls
+    :meth:`peek_claim`: banked names whose content still digests the same
+    are shipped as a manifest-only claim, and the residual delta is computed
+    against (synced ∪ banked) — a converged trickle means the migration
+    moves only the manifest plus the last cell's delta.
+
+    Liveness pruning rides along: :func:`repro.core.astdeps.live_names`
+    over the remaining plan bounds both what trickles and what full-state
+    moves carry; on dynamic constructs (``exec``, star-imports, …) it
+    degrades to "everything live".
+    """
+
+    def __init__(self, runtime: "HybridRuntime", *, rate: float = 50e6,
+                 burst_seconds: float = 1.0, top_k: int = 2,
+                 liveness: bool = True):
+        self.rt = runtime
+        self.engine = runtime.engine
+        self.reducer = runtime.engine.reducer
+        self.rate = float(rate)
+        self.burst = self.rate * float(burst_seconds)
+        self.top_k = int(top_k)
+        self.liveness = bool(liveness)
+        # dst env -> {name -> banked entry}; per-dst epoch of the last trickle
+        self.banked: dict[str, dict[str, _BankedName]] = {}
+        self._epochs: dict[str, int] = {}
+        self._budget = self.burst
+        self._last_step: float | None = None
+        # latest live set over the remaining plan (None = everything live)
+        # plus the dirty-epoch watermark at which it was computed: names
+        # (re)defined after the snapshot are never pruned — the set was
+        # computed with those definitions still ahead, so they appear as
+        # kills, not as live-outs
+        self._live: set[str] | None = None
+        self._live_epoch = 0
+        self.live_conservative = False
+        # ledger
+        self.trickled_bytes = 0
+        self.claimed_bytes = 0
+        self.claimed_names = 0
+        self.cancelled_names = 0
+        self.rounds = 0
+        runtime.replicator = self
+        runtime.engine.replicator = self
+        runtime.analyzer.replication_view = self
+
+    # -- liveness --------------------------------------------------------
+    def update_liveness(self, remaining_sources) -> None:
+        """Recompute the live set from the remaining cells' sources."""
+        from repro.core.astdeps import live_names
+        if not self.liveness:
+            self._live = None
+            return
+        src = self.rt.envs[self.rt.current_env]
+        self._live = live_names(list(remaining_sources), src.state.ns)
+        self._live_epoch = src.state.epoch
+        self.live_conservative = self._live is None
+
+    def _is_live(self, name: str, state: ExecutionState) -> bool:
+        if self._live is None:
+            return True
+        return (name in self._live
+                or state.dirty.get(name, 0) > self._live_epoch)
+
+    def prune_dead(self, names: set[str],
+                   state: ExecutionState) -> set[str]:
+        """Drop provably-dead names from a full-state move (conservative:
+        with no live set — liveness off or dynamic code — nothing drops;
+        names dirtied since the live snapshot always survive)."""
+        if not self.liveness or self._live is None:
+            return names
+        return {n for n in names if self._is_live(n, state)}
+
+    # -- analyzer view ---------------------------------------------------
+    def banked_bytes(self, dst: str) -> int:
+        return sum(e.nbytes for e in self.banked.get(dst, {}).values())
+
+    def residual_bytes(self, nbytes: float, src: str, dst: str) -> float:
+        """Cost-model discount: bytes already banked at ``dst`` won't
+        travel again, so placement prices only the residual."""
+        return max(0.0, nbytes - self.banked_bytes(dst))
+
+    # -- trickling -------------------------------------------------------
+    def step(self, now: float, remaining_sources=None,
+             budget_bytes: float | None = None) -> int:
+        """One think-time wakeup: refresh liveness, pick targets, trickle
+        dirty deltas within the byte budget.  Returns bytes trickled.
+
+        Without an explicit ``budget_bytes`` the budget accrues at ``rate``
+        bytes per second of elapsed time (capped at one burst)."""
+        self.rounds += 1
+        rt = self.rt
+        src = rt.envs[rt.current_env]
+        if getattr(src, "peer", None) is not None:
+            return 0       # a remote namespace cannot be snapshotted here
+        if budget_bytes is None:
+            if self._last_step is not None:
+                self._budget = min(
+                    self.burst,
+                    self._budget + (now - self._last_step) * self.rate)
+            self._last_step = now
+            budget = self._budget
+        else:
+            budget = float(budget_bytes)
+        if budget <= 0:
+            return 0
+        if remaining_sources is not None:
+            self.update_liveness(remaining_sources)
+        total = 0
+        for dst_name in self._select_targets():
+            total += self._trickle_to(src, rt.envs[dst_name], budget - total)
+            if total >= budget:
+                break
+        if budget_bytes is None:
+            self._budget = max(0.0, self._budget - total)
+        return total
+
+    def _select_targets(self) -> list[str]:
+        """Top-k likely destination envs: the interaction model's next-cell
+        distribution, each candidate cell priced through the analyzer's
+        peeked decision (mirrors ``_maybe_prefetch``'s selection rule)."""
+        rt = self.rt
+        pred = rt._last_pred
+        dist = pred["dist"] if pred else {}
+        if rt.block_plan:
+            # inside a committed block the session stays on the block env,
+            # but the block's exit ships everything home — trickling home
+            # during in-block think gaps pre-replicates that return trip
+            if rt.current_env != rt.home:
+                return [rt.home]
+            candidates = [(o, None) for o in rt.block_plan[:self.top_k]]
+        elif dist:
+            candidates = top_candidates(dist, self.top_k)
+        elif pred is not None:
+            candidates = [(pred["order"] + 1, None)]
+        else:
+            return []
+        taken: list[str] = []
+        for nxt, _prob in candidates:
+            if not 0 <= nxt < len(rt.nb.cells):
+                continue
+            cell = rt.nb.cells[nxt]
+            d = rt.analyzer.decide(rt.nb, cell, current_env=rt.current_env,
+                                   peek=True)
+            target = d.env
+            if rt.block_plan and rt.block_env is not None:
+                target = (rt.block_env if nxt in rt.block_plan else rt.home)
+            if target == rt.current_env or target in taken:
+                continue
+            env = rt.envs.get(target)
+            if env is None or env.kind != "compute":
+                continue
+            taken.append(target)
+            if len(taken) >= self.top_k:
+                break
+        return taken
+
+    def _trickle_to(self, src, dst, budget: float) -> int:
+        """Trickle the dirty delta from ``src``'s namespace to ``dst``'s
+        bank, clamped to ``budget`` wire bytes (always at least one name so
+        a large object still makes progress across wakeups)."""
+        import types as _types
+        if budget <= 0:
+            return 0
+        state = src.state
+        bank = self.banked.setdefault(dst.name, {})
+        known = self.engine.synced.get(dst.name, {})
+        eff_known = {**known, **{n: e.digest for n, e in bank.items()}}
+        last_epoch = self._epochs.get(dst.name, -1)
+        names = {n for n in state.names()
+                 if not isinstance(state.get(n), _types.ModuleType)
+                 and self._is_live(n, state)}
+        # dirty-since prefilter: one dict probe per name instead of a
+        # digest launch over the whole namespace
+        cand = {n for n in names
+                if n not in eff_known or state.dirty.get(n, 0) > last_epoch}
+        if not cand:
+            self._epochs[dst.name] = state.epoch
+            return 0
+        send, _dead, here = self.reducer.delta_names(state, cand, eff_known)
+        send &= cand
+        if not send:
+            self._epochs[dst.name] = state.epoch
+            return 0
+        ser = self.reducer.serialize_names(state, send, on_error="skip",
+                                           digests=here)
+        if not ser.blobs:
+            self._epochs[dst.name] = state.epoch
+            return 0
+        dst_peer = getattr(dst, "peer", None)
+        held = {d for d in ser.chunks if dst.chunk_store.has(d)}
+        # budget clamp: take names (deterministic order) while their
+        # incremental wire cost fits; each entry's cost is recorded so
+        # tombstoning and claims account the same bytes
+        take: list[str] = []
+        costs: dict[str, int] = {}
+        counted = set(held)
+        running = 0
+        for n in sorted(ser.blobs):
+            blob = ser.blobs[n]
+            cost = (len(blob.pickle_bytes)
+                    + sum(len(a.get("scales", b"")) for a in blob.arrays))
+            for d in blob.chunk_digests():
+                cost += DIGEST_BYTES
+                if d in counted or d not in ser.chunks:
+                    continue
+                counted.add(d)
+                cost += len(ser.chunks[d]) - 1
+            if take and running + cost > budget:
+                break
+            take.append(n)
+            costs[n] = cost
+            running += cost
+        sub = SerializedState(codec=ser.codec,
+                              blobs={n: ser.blobs[n] for n in take},
+                              digests={n: ser.digests[n] for n in take})
+        sub.chunks = {d: ser.chunks[d]
+                      for b in sub.blobs.values() for d in b.chunk_digests()
+                      if d in ser.chunks}
+        if dst_peer is not None:
+            # real frames on the low-priority lane; receiver banks them
+            stats = dst_peer.send_state(sub, trickle=True, low_priority=True)
+            wire_bytes = sub.wire_nbytes({d for d in sub.chunks
+                                          if d in stats.held})
+            dst.chunk_store.put_many(sub.chunks)    # mirror what was banked
+        else:
+            wire_bytes = sub.wire_nbytes(held)
+            dst.chunk_store.put_many(sub.missing_chunks(held))
+        src.chunk_store.put_many(sub.chunks)
+        for n in take:
+            old = bank.get(n)
+            if old is not None:
+                # superseded before any claim: the earlier bytes are waste
+                self.engine.prefetch_wasted_bytes += old.nbytes
+            bank[n] = _BankedName(blob=ser.blobs[n], digest=ser.digests[n],
+                                  nbytes=costs[n])
+        self.trickled_bytes += wire_bytes
+        if len(take) == len(ser.blobs):
+            # everything dirty went out: advance the epoch watermark
+            self._epochs[dst.name] = state.epoch
+        self.rt._emit(T.STATE_TRICKLED, None, target=dst.name,
+                      names=tuple(take), nbytes=wire_bytes)
+        return wire_bytes
+
+    # -- invalidation ----------------------------------------------------
+    def invalidate(self, names) -> int:
+        """A cell (re)defined these names: banked copies are stale.  Pop
+        them everywhere, charge their bytes to the single waste ledger, and
+        CANCEL transport-bound receivers (banked chunks stay — immutable,
+        content-addressed — only the stream/claim bookkeeping clears)."""
+        dropped = 0
+        for dst_name, bank in self.banked.items():
+            stale = [n for n in names if n in bank]
+            if not stale:
+                continue
+            waste = 0
+            for n in stale:
+                waste += bank.pop(n).nbytes
+                self.cancelled_names += 1
+            dropped += waste
+            self.engine.prefetch_wasted_bytes += waste
+            env = self.rt.envs.get(dst_name)
+            peer = getattr(env, "peer", None) if env is not None else None
+            if peer is not None:
+                peer.cancel()
+            self.rt._emit(T.STATE_TRICKLE_CANCELLED, None, target=dst_name,
+                          names=tuple(sorted(stale)), wasted_bytes=waste)
+        return dropped
+
+    # -- claiming --------------------------------------------------------
+    def peek_claim(self, src, dst, names: set[str],
+                   known: dict[str, int]) -> SerializedState | None:
+        """Banked names still content-identical to ``src``'s namespace,
+        packaged as a manifest-only SerializedState (chunks are already at
+        ``dst``).  Genuinely stale entries — in-place mutations the AST
+        invalidation cannot see — are dropped (and charged as waste) here;
+        the surviving claim is only *committed* (removed from the bank,
+        counted) by :meth:`commit_claim` once the migration succeeds."""
+        bank = self.banked.get(dst.name)
+        if not bank:
+            return None
+        cand = {n: e for n, e in bank.items()
+                if n in names and n in src.state.ns
+                and known.get(n) != e.digest}
+        if not cand:
+            return None
+        cur = self.reducer.digest_many({n: src.state.ns[n] for n in cand})
+        valid = {n: e for n, e in cand.items() if cur.get(n) == e.digest}
+        for n in list(cand):
+            if n not in valid:
+                e = bank.pop(n)
+                self.engine.prefetch_wasted_bytes += e.nbytes
+                self.cancelled_names += 1
+        if not valid:
+            return None
+        return SerializedState(
+            codec=self.reducer.codec,
+            blobs={n: e.blob for n, e in valid.items()},
+            digests={n: e.digest for n, e in valid.items()})
+
+    def commit_claim(self, dst_name: str, sub: SerializedState) -> None:
+        bank = self.banked.get(dst_name, {})
+        nbytes = 0
+        for n in sub.blobs:
+            e = bank.pop(n, None)
+            if e is not None:
+                nbytes += e.nbytes
+        self.claimed_names += len(sub.blobs)
+        self.claimed_bytes += nbytes
+        self.rt._emit(T.STATE_TRICKLE_CLAIMED, None, target=dst_name,
+                      names=tuple(sorted(sub.blobs)), nbytes=nbytes)
+
+    # -- lifecycle -------------------------------------------------------
+    def forget(self, env_name: str) -> int:
+        """``env_name`` died: its banked state is gone (and waste)."""
+        bank = self.banked.pop(env_name, None)
+        self._epochs.pop(env_name, None)
+        if not bank:
+            return 0
+        waste = sum(e.nbytes for e in bank.values())
+        self.cancelled_names += len(bank)
+        self.engine.prefetch_wasted_bytes += waste
+        return waste
+
+    def dispose(self) -> int:
+        """Session over: everything still banked was trickled for nothing."""
+        waste = 0
+        for dst_name in list(self.banked):
+            waste += self.forget(dst_name)
+        return waste
+
+
 class HybridRuntime:
     """Wires sessions, telemetry, context, analyzer, engine together (Fig. 1).
 
@@ -665,6 +1070,9 @@ class HybridRuntime:
         self.prediction_total = 0
         self._last_pred: dict | None = None
         self.last_decision: Decision | None = None
+        # background delta replicator (attach_replicator); None = off and
+        # every decision/byte path is bit-identical to the unreplicated run
+        self.replicator: DeltaReplicator | None = None
         self._closed = False
         self._emit(T.SESSION_STARTED, None)
 
@@ -674,6 +1082,16 @@ class HybridRuntime:
             datetime=self.clock.now(), type=type_, cell_id=cell_id,
             notebook=self.nb.name, cell_ids=self.nb.cell_ids(),
             session=self.session_id, path=self.nb.path, payload=payload))
+
+    def attach_replicator(self, *, rate: float = 50e6, top_k: int = 2,
+                          liveness: bool = True,
+                          burst_seconds: float = 1.0) -> DeltaReplicator:
+        """Turn on background delta replication: think-time wakeups trickle
+        dirty state to the top-k likely targets so decision-time migrations
+        ship only the residual (claimed bytes are manifest-only)."""
+        return DeltaReplicator(self, rate=rate, top_k=top_k,
+                               liveness=liveness,
+                               burst_seconds=burst_seconds)
 
     def probe(self, source: str, env_name: str) -> float:
         """Background probe for Algorithm 2 (no telemetry, no migration)."""
@@ -729,8 +1147,7 @@ class HybridRuntime:
             nxt = upcoming[0] if upcoming else order + 1
             candidates: list[tuple[int, float | None]] = [(nxt, None)]
         elif dist:
-            top = sorted(dist.items(), key=lambda kv: (-kv[1], kv[0]))
-            candidates = top[:self.engine.prefetch_top_k]
+            candidates = top_candidates(dist, self.engine.prefetch_top_k)
         else:
             # no evidence yet: the paper's unconditional next-cell walk
             candidates = [(order + 1, None)]
@@ -913,7 +1330,13 @@ class HybridRuntime:
 
         # names this cell (re)defined are now stale on every peer
         from repro.core.astdeps import analyze_cell
-        self.engine.invalidate(self.current_env, analyze_cell(cell.source).stores)
+        stores = analyze_cell(cell.source).stores
+        self.engine.invalidate(self.current_env, stores)
+        # dirty-epoch ledger feeds the replicator's dirty-since prefilter;
+        # banked trickles of redefined names are tombstoned right here
+        env.state.mark_dirty(stores)
+        if self.replicator is not None:
+            self.replicator.invalidate(stores)
 
         # block bookkeeping: leave the block env when it completes (Fig. 3)
         if self.block_plan:
@@ -942,6 +1365,8 @@ class HybridRuntime:
         if self.current_env == failed_env:
             self.current_env = self.home
         self.engine.synced.pop(failed_env, None)
+        if self.replicator is not None:
+            self.replicator.forget(failed_env)
         if isinstance(self.engine, PipelinedMigrationEngine):
             wasted = self.engine.cancel_prefetch(failed_env, self.clock.now())
             if wasted:
@@ -971,6 +1396,9 @@ class HybridRuntime:
         if self._closed:
             return
         self._closed = True
+        if self.replicator is not None:
+            # unclaimed banked trickles are waste, same as dead speculation
+            self.replicator.dispose()
         if isinstance(self.engine, PipelinedMigrationEngine):
             for dst, wasted, pred_order in self.engine.cancel_stale(
                     set(), now=self.clock.now()):

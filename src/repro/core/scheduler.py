@@ -326,6 +326,11 @@ class SessionReport:
     arrival: float = 0.0
     think_time: float = 0.0
     recoveries: int = 0
+    # live replication: think-time bytes trickled ahead / bytes a migration
+    # claimed from the bank / speculative bytes (prefetch + trickle) wasted
+    trickled_bytes: int = 0
+    trickle_claimed_bytes: int = 0
+    wasted_bytes: int = 0
 
     @property
     def prediction_hit_rate(self) -> float:
@@ -345,6 +350,7 @@ class _Session:
     think_total: float = 0.0
     recoveries: int = 0
     ckpt: SessionCheckpointer | None = None
+    rep: object | None = None          # DeltaReplicator when replication on
 
     def done(self) -> bool:
         return self.cursor >= len(self.plan)
@@ -382,6 +388,11 @@ class ScheduleReport:
     pruned_intervals: int = 0
     # transport plane: which transport each env's migration traffic rides
     env_transports: dict[str, str] = field(default_factory=dict)
+    # live replication plane (zero when replication is off): ONE waste
+    # ledger covers prefetch speculation and trickled-but-never-claimed
+    trickled_bytes: int = 0
+    trickle_claimed_bytes: int = 0
+    wasted_speculation_bytes: int = 0
     total_queue_wait: float = field(init=False)
     total_think_time: float = field(init=False)
     prediction_hit_rate: float = field(init=False)
@@ -456,6 +467,7 @@ class SessionScheduler:
         self.checkpoint_interval = 30.0
         self.ckpt_storage_name: str | None = None
         self.scale_events: list[tuple[float, str, str]] = []
+        self.replication: dict | None = None
         self._loop: EventLoop | None = None
         self._coord = None
 
@@ -514,6 +526,18 @@ class SessionScheduler:
 
     def enable_autoscale(self, policy: AutoscalePolicy) -> None:
         self.autoscale = policy
+
+    def enable_replication(self, *, rate: float = 50e6, top_k: int = 2,
+                           liveness: bool = True,
+                           interval: float = 1.0) -> None:
+        """Live replication: every session gets a background process on the
+        event loop that wakes each ``interval`` seconds of think time and
+        trickles dirty state to the top-k likely targets at ``rate`` bytes
+        per second (the transport's low-priority lane).  ``liveness`` prunes
+        provably-dead names from both trickle and full-state moves."""
+        self.replication = {"rate": float(rate), "top_k": int(top_k),
+                            "liveness": bool(liveness),
+                            "interval": float(interval)}
 
     # ------------------------------------------------------------------
     def add_session(self, runtime: HybridRuntime, plan, *,
@@ -728,6 +752,26 @@ class SessionScheduler:
         self._loop.call_at(t_next, self._step, s, idx, predicted,
                            priority=idx)
 
+    def _trickle_proc(self, s: _Session):
+        """Per-session background replication process on the event loop:
+        wakes every ``interval`` seconds, and — only while the session is
+        idle in think time (its clock has caught up to the loop) — trickles
+        the dirty delta over the remaining plan's live set.  Budget accrual
+        inside the replicator rate-limits the stream; the transport's
+        low-priority lane keeps it out of interactive traffic's way."""
+        interval = self.replication["interval"]
+        while not s.done():
+            yield interval
+            if s.done():
+                break
+            rt = s.runtime
+            now = self._loop.now()
+            if now < s.arrival or rt.clock.now() > now + 1e-9:
+                continue           # not arrived yet, or mid-cell
+            remaining = [rt.nb.cell(ref).source
+                         for ref in s.plan[s.cursor:]]
+            s.rep.step(now, remaining_sources=remaining)
+
     def _recover(self, s: _Session, idx: int, e: EnvFailure,
                  predicted: dict[str, float]) -> None:
         """Failure recovery: detection (heartbeat miss window), then either
@@ -786,6 +830,16 @@ class SessionScheduler:
                 loop.every(self.checkpoint_interval, self._checkpoint_tick, s,
                            priority=-1, start_after=max(
                                s.arrival, self.checkpoint_interval))
+        if self.replication is not None:
+            cfg = self.replication
+            for s in self._sessions:
+                s.rep = s.runtime.attach_replicator(
+                    rate=cfg["rate"], top_k=cfg["top_k"],
+                    liveness=cfg["liveness"])
+                # priority 1000: a same-instant session step always fires
+                # first, so the trickle sees the post-cell namespace
+                loop.process(self._trickle_proc(s), priority=1000,
+                             delay=max(s.arrival, cfg["interval"]))
         for env, at, recover_after in self._failures:
             loop.call_at(at, self._fail_env, env, at, recover_after,
                          priority=-10)
@@ -812,7 +866,11 @@ class SessionScheduler:
                 prediction_total=s.runtime.prediction_total,
                 arrival=s.arrival,
                 think_time=s.think_total,
-                recoveries=s.recoveries))
+                recoveries=s.recoveries,
+                trickled_bytes=s.rep.trickled_bytes if s.rep else 0,
+                trickle_claimed_bytes=s.rep.claimed_bytes if s.rep else 0,
+                wasted_bytes=getattr(s.runtime.engine,
+                                     "prefetch_wasted_bytes", 0)))
         util = {n: self.arbiter.utilization(n) for n in self.registry.names()}
         makespan = max((r.makespan for r in reports), default=0.0)
         return ScheduleReport(
@@ -833,4 +891,8 @@ class SessionScheduler:
                           for ev in (self._coord.events if self._coord
                                      else [])],
             pruned_intervals=self.arbiter.pruned_intervals,
-            env_transports=self.env_transports())
+            env_transports=self.env_transports(),
+            trickled_bytes=sum(r.trickled_bytes for r in reports),
+            trickle_claimed_bytes=sum(r.trickle_claimed_bytes
+                                      for r in reports),
+            wasted_speculation_bytes=sum(r.wasted_bytes for r in reports))

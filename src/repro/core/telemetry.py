@@ -24,6 +24,10 @@ CELL_MODIFIED = "cell-modified"
 CELL_EXECUTION_QUEUED = "cell-execution-queued"
 STATE_PREFETCHED = "state-prefetched"
 STATE_PREFETCH_CANCELLED = "state-prefetch-cancelled"
+# live replication: think-time delta trickling to likely targets
+STATE_TRICKLED = "state-trickled"
+STATE_TRICKLE_CANCELLED = "state-trickle-cancelled"
+STATE_TRICKLE_CLAIMED = "state-trickle-claimed"
 # fleet-plane extensions: env lifecycle, failures, checkpoint recovery
 ENV_LIFECYCLE = "env-lifecycle"
 ENV_FAILED = "env-failed"
@@ -33,7 +37,9 @@ SESSION_RECOVERED = "session-recovered"
 ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
              CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED,
              CELL_EXECUTION_QUEUED, STATE_PREFETCHED,
-             STATE_PREFETCH_CANCELLED, ENV_LIFECYCLE, ENV_FAILED,
+             STATE_PREFETCH_CANCELLED, STATE_TRICKLED,
+             STATE_TRICKLE_CANCELLED, STATE_TRICKLE_CLAIMED,
+             ENV_LIFECYCLE, ENV_FAILED,
              SESSION_CHECKPOINTED, SESSION_RECOVERED)
 
 

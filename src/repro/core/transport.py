@@ -62,10 +62,30 @@ class TokenBucket:
         self._tokens = self.burst
         self._t = clock()
 
-    def delay(self, nbytes: int) -> float:
+    def delay(self, nbytes: int, *, low_priority: bool = False) -> float:
+        """Two priority classes share the one bucket without starvation:
+
+        * the **interactive** lane (default) may drive the bucket negative —
+          its frame goes out after at most its own serialization time;
+        * the **low** lane (trickle traffic) must *wait out* its whole
+          deficit first and never leaves the bucket below zero, so an
+          interactive frame arriving right behind a trickle frame sees a
+          non-negative bucket and is delayed by no more than one in-flight
+          frame's serialization — trickle can never starve it.
+
+        Low frames are delayed, never starved: the refill guarantees each
+        one eventually clears its deficit.
+        """
         now = self._clock()
         self._tokens = min(self.burst, self._tokens + (now - self._t) * self.rate)
         self._t = now
+        if low_priority:
+            if self._tokens >= nbytes:
+                self._tokens -= nbytes
+                return self.latency
+            wait = (nbytes - self._tokens) / self.rate
+            self._tokens = 0.0
+            return wait + self.latency
         self._tokens -= nbytes
         wait = 0.0 if self._tokens >= 0 else -self._tokens / self.rate
         return wait + self.latency
@@ -86,7 +106,7 @@ class Transport:
         self.frames_recv = 0
         self.bytes_recv = 0
 
-    def send(self, frame: Frame) -> int:
+    def send(self, frame: Frame, *, low_priority: bool = False) -> int:
         raise NotImplementedError
 
     def recv(self, timeout: float | None = _RECV_TIMEOUT) -> Frame:
@@ -115,7 +135,7 @@ class LoopbackTransport(Transport):
         b_to_a: queue.Queue[Frame] = queue.Queue()
         return cls(a_to_b, b_to_a), cls(b_to_a, a_to_b)
 
-    def send(self, frame: Frame) -> int:
+    def send(self, frame: Frame, *, low_priority: bool = False) -> int:
         if self._closed:
             raise WireError("send on closed loopback transport")
         self._out.put(frame)
@@ -188,11 +208,11 @@ class SocketTransport(Transport):
         sock.settimeout(None)
         return cls(sock, shaper=shaper)
 
-    def send(self, frame: Frame) -> int:
+    def send(self, frame: Frame, *, low_priority: bool = False) -> int:
         segments = frame.segments()
         nbytes = sum(len(s) for s in segments)
         if self.shaper is not None:
-            wait = self.shaper.delay(nbytes)
+            wait = self.shaper.delay(nbytes, low_priority=low_priority)
             if wait > 0:
                 time.sleep(wait)
         try:
@@ -291,10 +311,12 @@ class WireReceiver:
         if ns is not None:
             self.state.ns = ns       # share, don't copy: the env's namespace
                                      # IS the receiver's namespace
-        self._pending = None          # (ser, deleted, modules, speculative)
+        self._pending = None          # (ser, deleted, modules, banked-only)
         self._pending_chunks: dict[int, bytes] = {}
+        self._pending_trickle = False
         self.streams_applied = 0
         self.streams_cancelled = 0
+        self.streams_trickled = 0
 
     # -- helpers --------------------------------------------------------
     def _apply_pending(self) -> list[str]:
@@ -316,8 +338,13 @@ class WireReceiver:
             wire.parse_hello(frame)                 # validates magic/version
             transport.send(wire.hello_frame(self.reducer.codec))
         elif t == wire.MANIFEST:
-            ser, deleted, modules, spec = wire.parse_manifest(frame)
-            self._pending = (ser, deleted, modules, spec)
+            ser, deleted, modules, spec, trickle = wire.parse_manifest(frame)
+            # a trickle stream banks exactly like a speculative one: chunks
+            # land in the store, the namespace waits for a claiming stream
+            self._pending = (ser, deleted, modules, spec or trickle)
+            self._pending_trickle = trickle
+            if trickle:
+                self.streams_trickled += 1
             self._pending_chunks = {}
             referenced = {d for b in ser.blobs.values()
                           for d in b.chunk_digests()}
@@ -334,13 +361,16 @@ class WireReceiver:
             spec = self._pending[3]
             applied: list[str] = []
             if not spec:
-                # speculative streams only bank chunks; the namespace is
-                # touched when the claiming (non-speculative) stream lands
+                # speculative/trickle streams only bank chunks; the
+                # namespace is touched when the claiming stream lands
                 applied = self._apply_pending()
             self._pending = None
             self._pending_chunks = {}
-            transport.send(wire.json_frame(
-                wire.ACK, {"applied": applied, "speculative": spec}))
+            ack_doc: dict = {"applied": applied, "speculative": spec}
+            if self._pending_trickle:
+                ack_doc["trickle"] = True
+            self._pending_trickle = False
+            transport.send(wire.json_frame(wire.ACK, ack_doc))
         elif t == wire.CANCEL:
             # in-flight cancellation: the stream's chunks stay banked
             # (content-addressed, immutable) but nothing touches the
@@ -349,6 +379,7 @@ class WireReceiver:
                 self.streams_cancelled += 1
             self._pending = None
             self._pending_chunks = {}
+            self._pending_trickle = False
         elif t == wire.EXEC:
             req = wire.parse_json(frame)
             t0 = time.perf_counter()
@@ -468,20 +499,26 @@ class MigrationPeer:
 
     # -- push -----------------------------------------------------------
     def send_state(self, ser, *, deleted=(), modules=(),
-                   speculative: bool = False) -> StreamStats:
+                   speculative: bool = False, trickle: bool = False,
+                   low_priority: bool = False) -> StreamStats:
         """One full state stream: MANIFEST, need-ack, CHUNKs, TOMBSTONE,
         END, done-ack.  Returns the held set (chunks the receiver did NOT
-        request) plus real frame/byte/wall accounting."""
+        request) plus real frame/byte/wall accounting.  ``trickle`` marks
+        a background-replication stream (banked like a speculative one);
+        ``low_priority`` puts every frame on the shaper's low lane so
+        interactive traffic always preempts it."""
         tr = self.transport
         t0 = time.perf_counter()
         with self._lock:
             sent0, bytes0 = tr.frames_sent, tr.bytes_sent
             tr.send(wire.manifest_frame(ser, deleted=deleted, modules=modules,
-                                        speculative=speculative))
+                                        speculative=speculative,
+                                        trickle=trickle),
+                    low_priority=low_priority)
             ack = wire.parse_json(_expect(tr.recv(), wire.ACK))
             need = [int(d) for d in ack.get("need", [])]
             for f in wire.state_stream_frames(ser, need, deleted=deleted):
-                tr.send(f)
+                tr.send(f, low_priority=low_priority)
             _expect(tr.recv(), wire.ACK)
             referenced = {d for b in ser.blobs.values()
                           for d in b.chunk_digests()}
@@ -506,7 +543,7 @@ class MigrationPeer:
                 "names": sorted(names) if names is not None else None,
                 "source": cell_source, "known": known or {},
                 "strict": strict, "delta": delta}))
-            ser, deleted, modules, _spec = wire.parse_manifest(
+            ser, deleted, modules, _spec, _trickle = wire.parse_manifest(
                 _expect(tr.recv(), wire.MANIFEST))
             referenced = {d for b in ser.blobs.values()
                           for d in b.chunk_digests()}

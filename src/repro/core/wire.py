@@ -325,9 +325,12 @@ def _unb64(s: str) -> bytes:
 
 def manifest_frame(ser, *, deleted: Iterable[str] = (),
                    modules: Iterable[str] = (),
-                   speculative: bool = False) -> Frame:
+                   speculative: bool = False,
+                   trickle: bool = False) -> Frame:
     """SerializedState (sans chunk payloads) -> canonical-JSON MANIFEST.
-    Chunk *digests* travel here; chunk *bytes* follow in CHUNK frames."""
+    Chunk *digests* travel here; chunk *bytes* follow in CHUNK frames.
+    The ``trickle`` key is emitted only when set so default streams stay
+    byte-identical to the golden vector."""
     blobs = {}
     for name, blob in ser.blobs.items():
         arrays = []
@@ -340,16 +343,19 @@ def manifest_frame(ser, *, deleted: Iterable[str] = (),
                 meta["scales"] = _b64(a["scales"])
             arrays.append(meta)
         blobs[name] = {"pickle": _b64(blob.pickle_bytes), "arrays": arrays}
-    return json_frame(MANIFEST, {
+    doc = {
         "codec": ser.codec, "blobs": blobs, "digests": dict(ser.digests),
         "deleted": sorted(deleted), "modules": sorted(modules),
-        "skipped": sorted(ser.skipped), "speculative": bool(speculative)})
+        "skipped": sorted(ser.skipped), "speculative": bool(speculative)}
+    if trickle:
+        doc["trickle"] = True
+    return json_frame(MANIFEST, doc)
 
 
 def parse_manifest(frame: Frame):
     """MANIFEST frame -> (SerializedState without chunk payloads, deleted
-    names, module names, speculative flag).  Chunks arrive separately and
-    are attached by the receiver."""
+    names, module names, speculative flag, trickle flag).  Chunks arrive
+    separately and are attached by the receiver."""
     from repro.core.reducer import SerializedName, SerializedState
     if frame.ftype != MANIFEST:
         raise WireError(
@@ -375,7 +381,8 @@ def parse_manifest(frame: Frame):
         ser.skipped = tuple(doc.get("skipped", ()))
         deleted = tuple(doc.get("deleted", ()))
         modules = tuple(doc.get("modules", ()))
-        return ser, deleted, modules, bool(doc.get("speculative", False))
+        return (ser, deleted, modules, bool(doc.get("speculative", False)),
+                bool(doc.get("trickle", False)))
     except WireError:
         raise
     except (KeyError, TypeError, ValueError, AttributeError) as e:

@@ -7,13 +7,21 @@
         [--env tpu-mesh:40:1] [--link local:tpu-mesh:1e8:1.0] [--pipeline] \
         [--fleet 4] [--arrivals 0.2] [--think-time 5] [--seed 0] \
         [--fail-env remote:30] [--autoscale] [--recovery checkpoint] \
-        [--transport loopback|socket]
+        [--transport loopback|socket] \
+        [--replicate] [--trickle-rate 50MB/s] [--liveness on|off]
 
 ``--transport socket`` is the two-process demo: the remote env runs as a
 child Python process and every migration genuinely streams CRC-framed
 chunk traffic over TCP (cells execute in the child; results round-trip
 home).  The default ``loopback`` keeps the paper's in-process simulated
 movement.
+
+``--replicate`` (fleet only) turns on background delta replication: while
+the user "thinks" between cells, each session trickles its dirty state to
+the most likely next environments at ``--trickle-rate`` bytes/second, so a
+later migration ships only the residual delta.  ``--liveness off`` disables
+the dead-name pruning that otherwise bounds what trickles and what
+full-state return trips carry.
 
 Cells execute for real (exec against the session namespace); timing follows
 the paper's forced-speedup protocol when cells carry a
@@ -105,6 +113,33 @@ def parse_fail_spec(spec: str) -> tuple[str, float, float | None]:
     return parts[0], at, rec
 
 
+_RATE_UNITS = {"": 1.0, "B": 1.0, "KB": 1e3, "MB": 1e6, "GB": 1e9}
+
+
+def parse_rate_spec(spec: str) -> float:
+    """``--trickle-rate`` value -> bytes/second.  Accepts a plain number
+    (bytes/s) or a number with a KB/MB/GB suffix and an optional ``/s``
+    (``50MB/s``, ``1.5GB``); friendly errors on anything else."""
+    s = spec.strip()
+    body = s[:-2] if s.upper().endswith("/S") else s
+    num = body.rstrip("BKMGbkmg")
+    unit = body[len(num):].upper()
+    if unit not in _RATE_UNITS:
+        raise ValueError(
+            f"--trickle-rate {spec!r}: unknown unit {unit!r} "
+            f"(expected B, KB, MB or GB, e.g. 50MB/s)")
+    try:
+        rate = float(num) * _RATE_UNITS[unit]
+    except ValueError:
+        raise ValueError(
+            f"--trickle-rate {spec!r}: {num!r} is not a number "
+            f"(expected e.g. 50MB/s, 1e6, 200KB)") from None
+    if rate <= 0:
+        raise ValueError(
+            f"--trickle-rate {spec!r}: rate must be positive")
+    return rate
+
+
 def build_registry(*, remote_speedup: float = 10.0, bandwidth: float = 1e9,
                    latency: float = 0.5, extra_envs=(), links=(),
                    cold_start: float = 5.0,
@@ -159,7 +194,9 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  seed: int = 0, fail_envs=(), autoscale: bool = False,
                  recovery: str | None = None,
                  checkpoint_interval: float = 30.0,
-                 transport: str = "loopback") -> dict:
+                 transport: str = "loopback",
+                 replicate: bool = False, trickle_rate: float = 50e6,
+                 liveness: bool = True) -> dict:
     with open(path) as f:
         nb = Notebook.from_ipynb(json.load(f))
     if transport == "socket":
@@ -177,8 +214,15 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                               transport=transport)
     code = [c for c in nb.cells if c.cell_type == "code"]
 
+    if replicate and not fleet:
+        raise ValueError(
+            "--replicate needs --fleet: think-time trickling runs as a "
+            "background process on the scheduler's event loop")
+
     if fleet:
         sched = SessionScheduler(registry)
+        if replicate:
+            sched.enable_replication(rate=trickle_rate, liveness=liveness)
         if recovery:
             sched.enable_recovery(recovery, interval=checkpoint_interval)
         if autoscale:
@@ -228,11 +272,17 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
             "restored_bytes": rep.restored_bytes,
             "scale_events": rep.scale_events,
             "lifecycle_events": rep.lifecycle_events,
+            "replicate": replicate,
+            "trickled_bytes": rep.trickled_bytes,
+            "trickle_claimed_bytes": rep.trickle_claimed_bytes,
+            "wasted_speculation_bytes": rep.wasted_speculation_bytes,
             "per_session": [
                 {"session": s.session[:12], "makespan": s.makespan,
                  "arrival": s.arrival, "think_time": s.think_time,
                  "queue_wait": s.queue_wait, "migrations": s.migrations,
                  "recoveries": s.recoveries,
+                 "trickled_bytes": s.trickled_bytes,
+                 "trickle_claimed_bytes": s.trickle_claimed_bytes,
                  "prediction_hit_rate": s.prediction_hit_rate}
                 for s in rep.sessions],
         }
@@ -331,6 +381,17 @@ def main():
     ap.add_argument("--autoscale", action="store_true",
                     help="fleet: provision/cull 'down' burst envs from "
                          "queue telemetry")
+    ap.add_argument("--replicate", action="store_true",
+                    help="fleet: trickle dirty state to likely targets "
+                         "during think time (background delta replication; "
+                         "decision-time migrations ship only the residual)")
+    ap.add_argument("--trickle-rate", default=None, metavar="RATE",
+                    help="replication rate limit, e.g. 50MB/s, 1e6, 200KB "
+                         "(default 50MB/s; requires --replicate)")
+    ap.add_argument("--liveness", choices=["on", "off"], default="on",
+                    help="prune provably-dead names from trickle and "
+                         "full-state moves (live-variable analysis over "
+                         "the remaining cells; default on)")
     ap.add_argument("--report", default=None)
     ap.add_argument("--write-annotated", default=None,
                     help="write the notebook back with decision annotations")
@@ -358,6 +419,19 @@ def main():
             raise ValueError(
                 "--transport socket (two-process demo) is incompatible "
                 "with --fleet")
+        if args.trickle_rate is not None and not args.replicate:
+            raise ValueError(
+                "--trickle-rate only applies with --replicate")
+        trickle_rate = (parse_rate_spec(args.trickle_rate)
+                        if args.trickle_rate is not None else 50e6)
+        if args.replicate and not args.fleet:
+            raise ValueError(
+                "--replicate needs --fleet: think-time trickling runs on "
+                "the scheduler's event loop (try --fleet 2 --think-time 5)")
+        if args.replicate and args.transport == "socket":
+            raise ValueError(
+                "--replicate rides the fleet plane and is incompatible "
+                "with --transport socket (the two-process demo)")
     except ValueError as e:
         ap.error(str(e))
 
@@ -371,7 +445,8 @@ def main():
         think_time=args.think_time, seed=args.seed, fail_envs=fail_envs,
         autoscale=args.autoscale, recovery=args.recovery,
         checkpoint_interval=args.checkpoint_interval,
-        transport=args.transport)
+        transport=args.transport, replicate=args.replicate,
+        trickle_rate=trickle_rate, liveness=args.liveness == "on")
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))

@@ -54,3 +54,131 @@ def test_runtime_analysis_ignores_untaken_names():
     ns = {"a": 1}
     needed, _, _ = cell_dependencies("b = a + undefined_later", ns)
     assert needed == {"a"}
+
+
+# -- liveness over the remaining plan (replication pruning) -------------
+
+from repro.core.astdeps import live_names, live_roots  # noqa: E402
+
+
+def _exec_cells(ns, cells):
+    g = dict(ns)
+    g.setdefault("__builtins__", __builtins__)
+    for src in cells:
+        exec(src, g)
+    g.pop("__builtins__", None)
+    return g
+
+
+def _assert_pruned_bit_identical(setup: str, remaining: list[str],
+                                 expect_dead: set[str] = frozenset()):
+    """Prune the namespace to the live set, run the remaining cells from
+    both the full and the pruned namespace, and require every surviving
+    value to be bit-identical."""
+    full = {}
+    exec(setup, full)
+    full.pop("__builtins__", None)
+    live = live_names(remaining, full)
+    assert live is not None, "analysis unexpectedly conservative"
+    assert expect_dead.isdisjoint(live)
+    pruned = {k: v for k, v in full.items() if k in live}
+    out_full = _exec_cells(full, remaining)
+    out_pruned = _exec_cells(pruned, remaining)
+    for k, v in out_pruned.items():
+        ref = out_full[k]
+        if isinstance(v, np.ndarray):
+            assert v.tobytes() == ref.tobytes() and v.dtype == ref.dtype
+        elif not callable(v) and not isinstance(v, type(np)):
+            assert v == ref
+    return live
+
+
+def test_liveness_augmented_assignment_keeps_target_live():
+    live = _assert_pruned_bit_identical(
+        "x = 10\ndead = list(range(1000))",
+        ["x += 5", "r = x * 2"],
+        expect_dead={"dead"})
+    assert "x" in live                    # += reads the old binding
+
+
+def test_liveness_del_needs_binding_then_kills():
+    # ``del tmp`` needs tmp bound (a use), and no later cell may read it
+    live = _assert_pruned_bit_identical(
+        "tmp = [1, 2, 3]\nkeep = 7",
+        ["del tmp", "r = keep + 1"])
+    assert "tmp" in live
+    # a name rebound before any read is dead at entry
+    live2 = live_roots(["x = 5", "y = x + 1"]).live
+    assert "x" not in live2 and "y" not in live2
+
+
+def test_liveness_comprehension_scoping():
+    # the comprehension-local ``i`` must not keep an outer ``i`` alive,
+    # but names read inside the element/filter expressions must
+    live = _assert_pruned_bit_identical(
+        "i = 999\nscale = 2.0\nn = 5\ndead = 'x' * 100",
+        ["r = [j * scale for j in range(n)]"],
+        expect_dead={"dead", "i"})
+    assert {"scale", "n"} <= live and "i" not in live
+    # first iterable evaluates in the enclosing scope: [x for x in x]
+    assert "x" in live_roots(["r = [x for x in x]"]).live
+
+
+def test_liveness_global_declaration_inside_function():
+    live = _assert_pruned_bit_identical(
+        "counter = 41\ndead = bytearray(100)",
+        ["def bump():\n"
+         "    global counter\n"
+         "    counter += 1\n",
+         "bump()",
+         "r = counter"],
+        expect_dead={"dead"})
+    assert "counter" in live
+
+
+def test_liveness_attribute_mutation_is_not_a_kill():
+    # ``obj.field = v`` mutates, it does not rebind: obj stays live
+    live = _assert_pruned_bit_identical(
+        "import types\nobj = types.SimpleNamespace(field=1)\ndead = [0] * 50",
+        ["obj.field = 2", "r = obj.field * 10"],
+        expect_dead={"dead"})
+    assert "obj" in live
+
+
+def test_liveness_subscript_assignment_is_not_a_kill():
+    live = _assert_pruned_bit_identical(
+        "import numpy as np\narr = np.zeros(4)\ndead = np.ones(1000)",
+        ["arr[0] = 5.0", "r = float(arr.sum())"],
+        expect_dead={"dead"})
+    assert "arr" in live
+
+
+def test_liveness_conservative_on_dynamic_constructs():
+    # exec / globals() / star-imports defeat static liveness: callers get
+    # None and must treat every name as live
+    assert live_names(["exec('r = q')"], {"q": 1}) is None
+    assert live_names(["r = globals()['q']"], {"q": 1}) is None
+    assert live_names(["from os.path import *", "r = 1"], {"q": 1}) is None
+    assert live_names(["r = q ++"], {"q": 1}) is None   # unparseable
+    res = live_roots(["exec('x = 1')"])
+    assert res.conservative and res.reason
+
+
+def test_liveness_conditional_assignment_is_not_a_kill():
+    # an assignment under ``if`` may never run: the prior binding lives
+    live = _assert_pruned_bit_identical(
+        "flag = False\nv = 3",
+        ["if flag:\n    v = 99\n", "r = v"])
+    assert "v" in live
+
+
+def test_liveness_function_pins_closure_globals():
+    # a live function keeps the globals it reads via dependency_closure
+    live = _assert_pruned_bit_identical(
+        "gain = 4.0\n"
+        "def amp(x):\n"
+        "    return x * gain\n"
+        "dead = list(range(200))",
+        ["r = amp(2.5)"],
+        expect_dead={"dead"})
+    assert {"amp", "gain"} <= live

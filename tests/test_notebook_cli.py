@@ -177,3 +177,41 @@ def test_main_keeps_real_tracebacks_for_notebook_errors(tmp_path,
     monkeypatch.setattr(sys, "argv", ["notebook", str(p)])
     with pytest.raises(ValueError, match="not-a-number"):
         main()
+
+
+def test_parse_rate_spec():
+    from repro.launch.notebook import parse_rate_spec
+    assert parse_rate_spec("50MB/s") == pytest.approx(50e6)
+    assert parse_rate_spec("2.5KB") == pytest.approx(2500.0)
+    assert parse_rate_spec("1e6") == pytest.approx(1e6)
+    assert parse_rate_spec("3GB/s") == pytest.approx(3e9)
+    for bad in ("fast", "0MB/s", "-5KB", "", "MB/s"):
+        with pytest.raises(ValueError):
+            parse_rate_spec(bad)
+
+
+def test_main_replication_flag_validation(tmp_path, capsys, monkeypatch):
+    path = _demo_ipynb(tmp_path)
+    for bad in (["--replicate"],                       # needs --fleet
+                ["--trickle-rate", "10MB/s"],          # needs --replicate
+                ["--fleet", "2", "--replicate", "--trickle-rate", "slow"],
+                ["--fleet", "2", "--replicate", "--transport", "socket"]):
+        monkeypatch.setattr(sys, "argv", ["notebook", path] + bad)
+        with pytest.raises(SystemExit) as exc:
+            main()
+        assert exc.value.code == 2
+        err = capsys.readouterr().err
+        assert "error:" in err and "Traceback" not in err
+
+
+def test_run_notebook_fleet_with_replication(tmp_path):
+    path = _demo_ipynb(tmp_path)
+    report, _ = run_notebook(path, sessions=2, policy="cost",
+                             use_knowledge=False, fleet=2, replicate=True,
+                             think_time=4.0)
+    assert report["replicate"] is True
+    assert report["trickled_bytes"] >= 0
+    assert "trickle_claimed_bytes" in report
+    assert "wasted_speculation_bytes" in report
+    for s in report["per_session"]:
+        assert "trickled_bytes" in s and "trickle_claimed_bytes" in s

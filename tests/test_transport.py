@@ -271,3 +271,51 @@ def test_subprocess_env_end_to_end():
     finally:
         sub.close()
     assert sub.proc.returncode == 0
+
+
+def test_two_lane_bucket_interactive_never_pays_trickle_deficit():
+    """The low (trickle) lane waits out its own deficit and never leaves
+    the bucket negative, so an interactive frame arriving right behind a
+    trickle burst is delayed by at most its OWN serialization time."""
+    t = [0.0]
+    bucket = TokenBucket(1000.0, burst=1000, latency=0.0, clock=lambda: t[0])
+    # trickle drains the burst and asks for 5x more: it pays the whole
+    # 4 s deficit itself and leaves the bucket at exactly zero
+    assert bucket.delay(5000, low_priority=True) == pytest.approx(4.0)
+    # interactive frame right behind: delayed by only its own bytes
+    nbytes = 800
+    w = bucket.delay(nbytes)
+    assert w == pytest.approx(nbytes / 1000.0)
+    # sustained trickle pressure cannot push the bound any higher
+    bucket.delay(10_000, low_priority=True)
+    w2 = bucket.delay(nbytes)
+    assert w2 <= nbytes / 1000.0 + 1e-9
+    # but trickle frames are delayed, never dropped: each call returns a
+    # finite wait that clears its deficit
+    assert bucket.delay(100, low_priority=True) < float("inf")
+
+
+def test_shaped_socket_trickle_yields_to_interactive_frames():
+    """End-to-end on a shaped socket: a low-priority trickle stream eats
+    its own shaping delay; the interactive stream that follows is not
+    stuck behind the trickle's deficit."""
+    rate = 1e6
+    shaper = TokenBucket(rate, burst=2048, latency=0.0)
+    reg, red, eng, peer = _rig("socket", shaper=shaper)
+    local, remote = reg["local"], reg["remote"]
+    local.state.ns["big"] = np.random.default_rng(0).standard_normal(20_000)
+    ser = red.serialize_names(local.state, ["big"])
+    t_stats = peer.send_state(ser, trickle=True, low_priority=True)
+    assert t_stats.wire_bytes > 50_000
+    # trickle paid its own shaping wait...
+    assert t_stats.wall_seconds >= t_stats.wire_bytes / rate * 0.5
+    # ...and banked without touching the namespace
+    assert "big" not in remote.state.ns
+    # interactive stream right behind the trickle burst: its wall time is
+    # bounded by its own (small) bytes, not the trickle's deficit
+    local.state.ns["note"] = "ping"
+    i_ser = red.serialize_names(local.state, ["note"])
+    i_stats = peer.send_state(i_ser)
+    assert "note" in remote.state.ns
+    assert i_stats.wall_seconds < t_stats.wire_bytes / rate / 2
+    peer.close()

@@ -55,7 +55,7 @@ def test_golden_stream_decodes_and_reencodes_byte_identical():
 def test_golden_manifest_roundtrips_through_the_codec():
     with open(GOLDEN, "rb") as f:
         frames = wire.decode_frames(f.read())
-    ser, deleted, modules, spec = wire.parse_manifest(frames[1])
+    ser, deleted, modules, spec, trickle = wire.parse_manifest(frames[1])
     want, d = _golden_ser()
     assert deleted == ("gone",)
     assert modules == ("np=numpy",)
@@ -81,7 +81,7 @@ def test_real_serialized_state_survives_the_wire():
     stream = b"".join(f.encoded() for f in frames)
 
     got = wire.decode_frames(stream)
-    ser2, _deleted, _modules, _spec = wire.parse_manifest(got[0])
+    ser2, _deleted, _modules, _spec, _trickle = wire.parse_manifest(got[0])
     store = MemoryChunkStore()
     count, _ = store.ingest_frames(
         f for f in got if f.ftype == wire.CHUNK)
