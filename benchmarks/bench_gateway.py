@@ -1,0 +1,308 @@
+"""Gateway-plane benchmarks: one persistent process holding a 10k-session
+Poisson attach storm, warm-pool vs cold-provision attach latency, mux
+byte-accounting equality, and the memoized horizon decision path.
+
+Four sweeps (results also land in ``BENCH_gateway.json``):
+
+* **storm** — the headline: a seeded Poisson storm of concurrent sessions
+  (10 000 full / 300 smoke) through ONE GatewayService on the sim clock,
+  arrivals fast and think times long enough that every session is live at
+  once (``peak_concurrent == n_sessions``).  Reports p50/p99 queue wait
+  and attach wait (sim seconds, deterministic), p50/p99 placement-decision
+  latency (wall ms), and loop events/second (wall).
+* **warm_pool** — the same trace through a K-worker warm pool vs a cold
+  pool (K=0): arrival rate is kept under the pool's refill rate
+  ``K / cold_start`` so warm attaches never miss, and the attach-p99
+  ratio (cold / warm) is the pool's payoff — gated ≥ 5x.
+* **mux** — identical migration traffic over dedicated connections vs
+  MuxStreams sharing one pipe: per-session frame/byte counters must match
+  EXACTLY (``bytes_identical == 1.0``); the envelope overhead the shared
+  pipe absorbs is reported, not charged to sessions.
+* **memo** — a batch of horizon decisions with the per-decision
+  distribution memo on vs off: identical decisions, strictly fewer
+  interaction-model queries (deterministic ratio, gated exact), and the
+  wall-clock decide speedup.
+
+Sim-derived metrics are deterministic and safe for ``check_regression``;
+wall-clock metrics (decision latency, events/sec) are gated loosely or
+not at all.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+from repro.core import (
+    ContextDetector, EnvironmentRegistry, ExecutionEnvironment,
+    KnowledgeBase, MigrationAnalyzer, MigrationPeer, MuxEnvServer, MuxPeer,
+    Notebook, PerfModel, WireReceiver,
+)
+from repro.core import wire
+from repro.core.chunkstore import MemoryChunkStore
+from repro.core.gateway import GatewayService, poisson_attach_storm
+from repro.core.reducer import StateReducer
+from repro.core.state import ExecutionState
+from repro.core.transport import LoopbackTransport
+
+COLD_START = 5.0
+THINK_MEAN = 120.0      # long think: the whole storm is concurrently live
+GPU_CAPACITY = 256
+
+
+def make_registry(local_capacity: int) -> EnvironmentRegistry:
+    reg = EnvironmentRegistry(default_bandwidth=1e9, default_latency=0.05)
+    reg.register(ExecutionEnvironment("local"), home=True,
+                 capacity=local_capacity)
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=8.0),
+                 capacity=GPU_CAPACITY)
+    reg.connect("local", "gpu-cloud", bandwidth=5e8, latency=0.3)
+    return reg
+
+
+def make_notebook(i: int) -> Notebook:
+    nb = Notebook(f"user-{i % 16}")
+    nb.add_cell("x = 2.0", cost=0.5)
+    nb.add_cell("y = x * 3.0", cost=30.0)
+    nb.add_cell("z = y + 1.0", cost=1.0)
+    return nb
+
+
+# ----------------------------------------------------------------------
+# storm: 10k concurrent sessions through one gateway
+# ----------------------------------------------------------------------
+
+def storm_sweep(rows, out, *, n_sessions: int) -> None:
+    gw = GatewayService(make_registry(n_sessions + 64),
+                        warm_pool=64, cold_start=COLD_START,
+                        policy="cost", use_knowledge=False)
+    gw.add_tenant("research", weight=2.0)
+    gw.add_tenant("teaching", weight=1.0)
+    poisson_attach_storm(gw, n_sessions=n_sessions, rate=n_sessions / 5.0,
+                         think_mean=THINK_MEAN, make_notebook=make_notebook,
+                         tenants=("research", "teaching"), seed=11)
+    t0 = time.perf_counter()
+    rep = gw.run()
+    wall = time.perf_counter() - t0
+    events = rep.sessions * (3 + 1)          # steps + admission per session
+    assert rep.sessions == n_sessions and rep.errors == 0, rep
+    assert rep.peak_concurrent == n_sessions, rep.peak_concurrent
+    out["storm"] = {
+        "sessions": rep.sessions,
+        "peak_concurrent": rep.peak_concurrent,
+        "completed": rep.completed,
+        "makespan": round(rep.makespan, 3),
+        "queue_wait_p50": round(rep.queue_wait_p50, 4),
+        "queue_wait_p99": round(rep.queue_wait_p99, 4),
+        "attach_wait_p50": round(rep.attach_wait_p50, 4),
+        "attach_wait_p99": round(rep.attach_wait_p99, 4),
+        "decision_ms_p50": round(rep.decision_ms_p50, 4),
+        "decision_ms_p99": round(rep.decision_ms_p99, 4),
+        "decisions": rep.decisions,
+        "wall_seconds": round(wall, 3),
+        "events_per_sec": round(events / max(wall, 1e-9), 1),
+    }
+    rows.append(("gateway/storm/peak_concurrent", rep.peak_concurrent,
+                 "sessions simultaneously attached to one process"))
+    rows.append(("gateway/storm/queue_wait_p99",
+                 round(rep.queue_wait_p99, 4),
+                 "p99 capacity-wait sim seconds"))
+    rows.append(("gateway/storm/attach_wait_p99",
+                 round(rep.attach_wait_p99, 4),
+                 "p99 attach (admission + provisioning) sim seconds"))
+    rows.append(("gateway/storm/decision_ms_p99",
+                 round(rep.decision_ms_p99, 4),
+                 "p99 placement-decision wall ms"))
+    rows.append(("gateway/storm/events_per_sec",
+                 round(events / max(wall, 1e-9), 1),
+                 "loop throughput (wall; not gated)"))
+
+
+# ----------------------------------------------------------------------
+# warm pool vs cold provision
+# ----------------------------------------------------------------------
+
+def warm_pool_sweep(rows, out, *, n_sessions: int) -> None:
+    pool = 16
+    rate = pool / COLD_START / 2.0       # half the refill rate: no misses
+    results = {}
+    for label, k in (("warm", pool), ("cold", 0)):
+        gw = GatewayService(make_registry(n_sessions + pool),
+                            warm_pool=k, cold_start=COLD_START,
+                            policy="cost", use_knowledge=False)
+        poisson_attach_storm(gw, n_sessions=n_sessions, rate=rate,
+                             think_mean=10.0, make_notebook=make_notebook,
+                             seed=13)
+        rep = gw.run()
+        assert rep.errors == 0
+        results[label] = rep
+    warm_p99 = results["warm"].attach_wait_p99
+    cold_p99 = results["cold"].attach_wait_p99
+    # a perfect warm pool attaches in 0.0 sim seconds; floor the
+    # denominator at 1% of the cold start so the ratio stays finite
+    speedup = cold_p99 / max(warm_p99, COLD_START / 100.0)
+    assert results["warm"].pool_misses == 0, results["warm"].pool_misses
+    assert speedup >= 5.0, (warm_p99, cold_p99)
+    out["warm_pool"] = {
+        "pool_size": pool,
+        "warm_attach_p99": round(warm_p99, 4),
+        "cold_attach_p99": round(cold_p99, 4),
+        "attach_speedup": round(speedup, 2),
+        "pool_hits": results["warm"].pool_hits,
+        "pool_refills": results["warm"].pool_refills,
+    }
+    rows.append(("gateway/warm_pool/warm_attach_p99", round(warm_p99, 4),
+                 "p99 attach with a 16-worker pool"))
+    rows.append(("gateway/warm_pool/cold_attach_p99", round(cold_p99, 4),
+                 "p99 attach provisioning on demand"))
+    rows.append(("gateway/warm_pool/attach_speedup", round(speedup, 2),
+                 "cold/warm attach-p99 ratio (gated >= 5)"))
+
+
+# ----------------------------------------------------------------------
+# mux byte-accounting equality
+# ----------------------------------------------------------------------
+
+def _session_traffic(peer, i: int, red) -> tuple:
+    st = ExecutionState({"x": float(i), "blob": bytes(range(256)) * 64})
+    peer.send_state(red.serialize_names(st, ["x", "blob"]))
+    sent_before = peer.transport.bytes_sent
+    peer.execute("y = x + 1")
+    exec_sent = peer.transport.bytes_sent - sent_before
+    peer.close()
+    t = peer.transport
+    return (t.frames_sent, t.bytes_sent, t.frames_recv, exec_sent)
+
+
+def _serve_plain(receiver, transport):
+    while True:
+        frame = transport.recv(timeout=30.0)
+        if frame.ftype == wire.BYE:
+            return
+        receiver.handle(frame, transport)
+
+
+def mux_sweep(rows, out, *, n_streams: int = 4) -> None:
+    red = StateReducer(codec="zlib")
+    dedicated = []
+    for i in range(n_streams):
+        ctr, srv_tr = LoopbackTransport.pair()
+        rcv = WireReceiver(MemoryChunkStore(), red, ns={})
+        t = threading.Thread(target=_serve_plain, args=(rcv, srv_tr),
+                             daemon=True)
+        t.start()
+        dedicated.append(_session_traffic(
+            MigrationPeer(ctr, codec="zlib"), i, red))
+        t.join(timeout=10.0)
+
+    client_tr, server_tr = LoopbackTransport.pair()
+    # sessions run one after another (attach/detach churn), so the shared
+    # connection must outlive each stream's BYE: persistent=True
+    server = MuxEnvServer(server_tr,
+                          lambda sid: WireReceiver(MemoryChunkStore(), red,
+                                                   ns={}),
+                          timeout=30.0, persistent=True)
+    mux = MuxPeer(client_tr, initiator=True)
+    muxed = [_session_traffic(MigrationPeer(mux.open_stream(),
+                                            codec="zlib"), i, red)
+             for i in range(n_streams)]
+    shared_sent = client_tr.bytes_sent
+    client_tr.close()
+    server.join()
+    assert server.streams_served == n_streams, server.streams_served
+    identical = 1.0 if muxed == dedicated else 0.0
+    assert identical == 1.0, (muxed, dedicated)
+    session_bytes = sum(d[1] for d in dedicated)
+    overhead = shared_sent - session_bytes
+    out["mux"] = {
+        "streams": n_streams,
+        "bytes_identical": identical,
+        "per_session_bytes": session_bytes,
+        "shared_pipe_bytes": shared_sent,
+        "envelope_overhead_bytes": overhead,
+    }
+    rows.append(("gateway/mux/bytes_identical", identical,
+                 "per-stream counters == dedicated-connection counters"))
+    rows.append(("gateway/mux/envelope_overhead_bytes", overhead,
+                 "STREAM framing cost on the shared pipe"))
+
+
+# ----------------------------------------------------------------------
+# memoized horizon decisions
+# ----------------------------------------------------------------------
+
+def memo_sweep(rows, out, *, n_cells: int, repeats: int) -> None:
+    def build():
+        reg = EnvironmentRegistry(default_bandwidth=1e9,
+                                  default_latency=2.0)
+        reg.register(ExecutionEnvironment("local"), home=True)
+        reg.register(ExecutionEnvironment("remote", speedup=10.0))
+        ctxd = ContextDetector("markov")
+        perf = PerfModel()
+        an = MigrationAnalyzer(KnowledgeBase(), ctxd, perf,
+                               policy="horizon", use_knowledge=False,
+                               registry=reg, horizon=8)
+        an.observe_state_size("nb", 1.0)
+        nb = Notebook("nb")
+        cells = [nb.add_cell(f"s{i} = work_{i}()", cost=8.0)
+                 for i in range(n_cells)]
+        for c in cells:
+            perf.observe(c.cell_id, "local", 8.0)
+            perf.observe(c.cell_id, "remote", 0.8)
+        for _ in range(5):
+            for o in range(n_cells):
+                ctxd.record("nb", o)
+        return an, nb, cells
+
+    stats = {}
+    for memo in (False, True):
+        an, nb, cells = build()
+        pol = an._chain[-1]
+        pol.memoize = memo
+        t0 = time.perf_counter()
+        decisions = []
+        for _ in range(repeats):
+            decisions = [an.decide(nb, c, current_env="local", peek=True)
+                         for c in cells]
+        wall = time.perf_counter() - t0
+        stats[memo] = {
+            "wall": wall,
+            "model_calls": pol.model_calls,
+            "decisions": [(d.env, d.migrate, tuple(d.block))
+                          for d in decisions],
+        }
+    assert stats[True]["decisions"] == stats[False]["decisions"]
+    calls_ratio = stats[True]["model_calls"] / stats[False]["model_calls"]
+    speedup = stats[False]["wall"] / max(stats[True]["wall"], 1e-9)
+    out["memo"] = {
+        "model_calls_memo": stats[True]["model_calls"],
+        "model_calls_nomemo": stats[False]["model_calls"],
+        "model_calls_ratio": round(calls_ratio, 4),
+        "decide_speedup": round(speedup, 2),
+        "bit_identical": 1.0,
+    }
+    rows.append(("gateway/memo/model_calls_ratio", round(calls_ratio, 4),
+                 "interaction-model queries, memo/nomemo (deterministic)"))
+    rows.append(("gateway/memo/decide_speedup", round(speedup, 2),
+                 "horizon decide wall speedup (not gated)"))
+    rows.append(("gateway/memo/bit_identical", 1.0,
+                 "memoized decisions identical to recomputed"))
+
+
+def run(smoke: bool = False):
+    rows: list[tuple] = []
+    out: dict = {}
+    n = 300 if smoke else 10_000
+    storm_sweep(rows, out, n_sessions=n)
+    warm_pool_sweep(rows, out, n_sessions=30 if smoke else 120)
+    mux_sweep(rows, out)
+    memo_sweep(rows, out, n_cells=8, repeats=5 if smoke else 40)
+    with open("BENCH_gateway.json", "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, note in run(smoke=True):
+        print(f"{name},{val},{note}")

@@ -33,6 +33,7 @@ MODULES = [
     "bench_transport",            # wire protocol: loopback vs socket vs shaped
     "bench_digest",               # batched digest/delta + zero-copy wire
     "bench_live",                 # background delta replication / liveness
+    "bench_gateway",              # persistent gateway: 10k-session storm
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
@@ -45,6 +46,7 @@ ARTIFACTS = {
     "bench_transport": "BENCH_transport.json",
     "bench_digest": "BENCH_digest.json",
     "bench_live": "BENCH_live.json",
+    "bench_gateway": "BENCH_gateway.json",
 }
 
 

@@ -14,6 +14,10 @@ from repro.core.events import Event, EventLoop
 from repro.core.fabric import (
     LIFECYCLE, EnvironmentRegistry, ExecutionEnvironment, Link,
 )
+from repro.core.gateway import (
+    GatewayReport, GatewayService, GatewayTenant, WarmPool, WireFrontend,
+    poisson_attach_storm,
+)
 from repro.core.interaction import (
     MODELS, ConfidenceGate, EnsembleModel, FrequencyModel, InteractionModel,
     MarkovModel, RecencyModel, make_model,
@@ -39,8 +43,8 @@ from repro.core.simulator import (
 from repro.core.state import ExecutionState
 from repro.core.transport import (
     TRANSPORTS, DigestMirrorStore, LoopbackTransport, MigrationPeer,
-    SocketTransport, SubprocessEnv, TokenBucket, Transport, WireReceiver,
-    attach_peer,
+    MuxEnvServer, MuxPeer, MuxStream, SocketTransport, SubprocessEnv,
+    TokenBucket, Transport, WireReceiver, attach_peer,
 )
 from repro.core.wire import Frame, FrameDecoder, WireError
 
@@ -66,6 +70,9 @@ __all__ = [
     "TRACES", "cell_frequency", "policy_grid", "simulate",
     "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",
     "TRANSPORTS", "DigestMirrorStore", "LoopbackTransport", "MigrationPeer",
+    "MuxEnvServer", "MuxPeer", "MuxStream",
     "SocketTransport", "SubprocessEnv", "TokenBucket", "Transport",
     "WireReceiver", "attach_peer", "Frame", "FrameDecoder", "WireError",
+    "GatewayReport", "GatewayService", "GatewayTenant", "WarmPool",
+    "WireFrontend", "poisson_attach_storm",
 ]

@@ -319,21 +319,40 @@ class HorizonPolicy(PlacementPolicy):
 
     name = "horizon"
 
-    def __init__(self, horizon: int = 4):
+    def __init__(self, horizon: int = 4, *, memoize: bool = True):
         assert horizon >= 1
         self.horizon = int(horizon)
+        # one decision queries the model's next-cell distribution for the
+        # same cell once per chain step AND again in the block-plan walk;
+        # a per-decision memo collapses those to one model call per
+        # distinct cell.  Read-only sharing (every consumer iterates the
+        # dict), so decisions stay bit-identical — memoize=False keeps the
+        # recompute path alive for the equivalence test.
+        self.memoize = bool(memoize)
+        self.model_calls = 0           # distribution() calls actually made
 
     # -- helpers ---------------------------------------------------------
-    def _step_distributions(self, an, nb, order: int) -> list[dict[int, float]]:
+    def _dist(self, an, nb, c: int, cache: dict | None) -> dict:
+        if cache is None:
+            self.model_calls += 1
+            return an.context.model.distribution(nb.name, c)
+        hit = cache.get(c)
+        if hit is None:
+            self.model_calls += 1
+            hit = cache[c] = an.context.model.distribution(nb.name, c)
+        return hit
+
+    def _step_distributions(self, an, nb, order: int,
+                            cache: dict | None = None
+                            ) -> list[dict[int, float]]:
         """d_0 = {current: 1}; d_{t+1} = d_t chained through the model's
         next-cell distribution, truncated to in-notebook cells."""
-        model = an.context.model
         dists: list[dict[int, float]] = [{order: 1.0}]
         d = dists[0]
         for _ in range(1, self.horizon):
             nd: dict[int, float] = defaultdict(float)
             for c, p in d.items():
-                for c2, p2 in model.distribution(nb.name, c).items():
+                for c2, p2 in self._dist(an, nb, c, cache).items():
                     if 0 <= c2 < len(nb.cells):
                         nd[c2] += p * p2
             mass = sum(nd.values())
@@ -347,7 +366,8 @@ class HorizonPolicy(PlacementPolicy):
         assert an.registry is not None, "horizon policy needs a registry"
         order = nb.order(cell.cell_id)
         state = an.state_size_estimate[nb.name]
-        dists = self._step_distributions(an, nb, order)
+        cache: dict | None = {} if self.memoize else None
+        dists = self._step_distributions(an, nb, order, cache)
         envs = [an.home] + an.candidates()
 
         # expected exec cost per (step, env); a cell missing an estimate on
@@ -400,14 +420,12 @@ class HorizonPolicy(PlacementPolicy):
         # DP keeps the placement on the chosen env
         block = [order]
         if best != an.home:
-            model = an.context.model
             e, c = best, order
             for t in range(1, len(dists)):
                 e = succ[t - 1][e]
                 if e != best:
                     break
-                step = model.distribution(nb.name, c)
-                step = {c2: p for c2, p in step.items()
+                step = {c2: p for c2, p in self._dist(an, nb, c, cache).items()
                         if 0 <= c2 < len(nb.cells)}
                 if not step:
                     break

@@ -27,6 +27,7 @@ index breaks ties, as ``min()`` over the session list used to).
 """
 from __future__ import annotations
 
+from bisect import bisect_left, bisect_right, insort
 from dataclasses import dataclass, field
 
 from repro.core import telemetry as T
@@ -56,6 +57,12 @@ class CapacityArbiter:
         # which keeps this scan from growing O(total-history).
         self._busy: dict[str, list[tuple[float, float]]] = {
             n: [] for n in registry.names()}
+        # interval index: per-env sorted start/end arrays kept alongside the
+        # insertion-ordered history, so admission probes are bisects instead
+        # of scans — running(t) = |starts ≤ t| − |ends ≤ t| — and each
+        # acquire costs O(log live + probes-in-window), not O(live)
+        self._starts: dict[str, list[float]] = {n: [] for n in registry.names()}
+        self._ends: dict[str, list[float]] = {n: [] for n in registry.names()}
         self.busy_seconds: dict[str, float] = {n: 0.0 for n in registry.names()}
         self.last_release: dict[str, float] = {}
         self.queue_events: list[tuple[str, float, float]] = []  # env, asked, got
@@ -74,25 +81,30 @@ class CapacityArbiter:
         if cap <= 0:
             raise ValueError(f"acquire on env {env!r} with capacity {cap}: "
                              f"placement should never target it")
-        intervals = self._busy.setdefault(env, [])
+        self._busy.setdefault(env, [])
+        starts = self._starts.setdefault(env, [])
+        ends = self._ends.setdefault(env, [])
 
-        def running_at(t: float) -> list[float]:
-            return [e for s, e in intervals if s <= t < e]
+        def running(q: float) -> int:
+            # intervals with start ≤ q < end; closed starts cancel against
+            # closed ends, so zero-length intervals never count
+            return bisect_right(starts, q) - bisect_right(ends, q)
 
         t = now
         while True:
-            probes = [t] + sorted(s for s, _ in intervals
-                                  if t < s < t + duration)
-            blocked = None
-            for q in probes:
-                ends = running_at(q)
-                if len(ends) >= cap:
-                    blocked = ends
+            lo = bisect_right(starts, t)
+            hi = bisect_left(starts, t + duration)
+            blocked_at = None
+            for q in (t, *starts[lo:hi]):
+                if running(q) >= cap:
+                    blocked_at = q
                     break
-            if blocked is None:
-                break
-            t = min(blocked)         # earliest slot to free while saturated
-        return t
+            if blocked_at is None:
+                return t
+            # advance to the earliest end after the blocked probe: never
+            # past the earliest *running* end, so no admission is skipped —
+            # the loop re-probes from there
+            t = ends[bisect_right(ends, blocked_at)]
 
     def acquire(self, env: str, now: float, duration: float = 0.0) -> float:
         t = self._earliest(env, now, duration)
@@ -109,6 +121,8 @@ class CapacityArbiter:
 
     def release(self, env: str, start: float, end: float) -> None:
         self._busy.setdefault(env, []).append((start, end))
+        insort(self._starts.setdefault(env, []), start)
+        insort(self._ends.setdefault(env, []), end)
         self.busy_seconds[env] = self.busy_seconds.get(env, 0.0) + (end - start)
         self.last_release[env] = max(self.last_release.get(env, 0.0), end)
         self.horizon = max(self.horizon, end)
@@ -122,8 +136,11 @@ class CapacityArbiter:
         dropped = 0
         for env, intervals in self._busy.items():
             keep = [iv for iv in intervals if iv[1] > before]
-            dropped += len(intervals) - len(keep)
-            self._busy[env] = keep
+            if len(keep) != len(intervals):
+                dropped += len(intervals) - len(keep)
+                self._busy[env] = keep
+                self._starts[env] = sorted(s for s, _ in keep)
+                self._ends[env] = sorted(e for _, e in keep)
         self.pruned_intervals += dropped
         return dropped
 

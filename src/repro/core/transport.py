@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import os
 import queue
+import select
 import socket
 import subprocess
 import sys
@@ -112,6 +113,12 @@ class Transport:
     def recv(self, timeout: float | None = _RECV_TIMEOUT) -> Frame:
         raise NotImplementedError
 
+    def poll(self) -> Frame | None:
+        """Non-blocking receive: a complete frame if one is available right
+        now, else ``None``.  Lets an event loop service many transports
+        from one timer tick without dedicating a blocked thread to each."""
+        raise NotImplementedError
+
     def close(self) -> None:  # pragma: no cover - trivial default
         pass
 
@@ -148,6 +155,15 @@ class LoopbackTransport(Transport):
             frame = self._in.get(timeout=timeout)
         except queue.Empty:
             raise WireError("loopback recv timed out") from None
+        self.frames_recv += 1
+        self.bytes_recv += frame.wire_size
+        return frame
+
+    def poll(self) -> Frame | None:
+        try:
+            frame = self._in.get_nowait()
+        except queue.Empty:
+            return None
         self.frames_recv += 1
         self.bytes_recv += frame.wire_size
         return frame
@@ -243,6 +259,23 @@ class SocketTransport(Transport):
                 self.frames_recv += 1
                 self.bytes_recv += f.wire_size
                 return f
+
+    def poll(self) -> Frame | None:
+        while True:
+            for f in self._dec.frames():
+                self.frames_recv += 1
+                self.bytes_recv += f.wire_size
+                return f
+            ready, _, _ = select.select([self._sock], [], [], 0)
+            if not ready:
+                return None
+            try:
+                data = self._sock.recv(1 << 16)
+            except OSError as e:
+                raise WireError(f"socket recv failed: {e}") from None
+            if not data:
+                raise WireError("peer closed the connection mid-stream")
+            self._dec.feed(data)
 
     def close(self) -> None:
         if self._closed:
@@ -660,6 +693,269 @@ def attach_peer(env, reducer, *, kind: str = "socket",
     env.peer = peer
     env.transport = kind
     return peer
+
+
+# ----------------------------------------------------------------------
+# stream multiplexing: N sessions on ONE socket
+# ----------------------------------------------------------------------
+
+class MuxStream(Transport):
+    """One virtual frame pipe inside a :class:`MuxPeer`.  Implements the
+    full Transport interface, so a :class:`MigrationPeer` (or anything
+    else that talks frames) binds to it unchanged.
+
+    Byte accounting counts the *inner* frame's wire size — exactly what
+    the same traffic would cost on a dedicated connection — so per-stream
+    counters are directly comparable to (and must equal) a one-socket-per-
+    session deployment's.  The envelope overhead (9-byte STREAM header +
+    CRC + 4-byte stream id per frame) lives on the underlying transport's
+    counters, where the sharing actually happens."""
+
+    kind = "mux"
+
+    def __init__(self, peer: "MuxPeer", sid: int, *,
+                 bucket: TokenBucket | None = None,
+                 low_priority: bool = False):
+        super().__init__()
+        self.peer = peer
+        self.sid = sid
+        self.bucket = bucket          # per-stream flow control (optional)
+        self.low_priority = low_priority
+        self._closed = False
+
+    def send(self, frame: Frame, *, low_priority: bool = False) -> int:
+        if self._closed:
+            raise WireError(f"send on closed mux stream {self.sid}")
+        self.peer._send(self.sid, frame,
+                        low_priority=low_priority or self.low_priority,
+                        bucket=self.bucket)
+        self.frames_sent += 1
+        self.bytes_sent += frame.wire_size
+        return frame.wire_size
+
+    def recv(self, timeout: float | None = _RECV_TIMEOUT) -> Frame:
+        frame = self.peer._recv(self.sid, timeout)
+        self.frames_recv += 1
+        self.bytes_recv += frame.wire_size
+        return frame
+
+    def poll(self) -> Frame | None:
+        frame = self.peer._poll(self.sid)
+        if frame is not None:
+            self.frames_recv += 1
+            self.bytes_recv += frame.wire_size
+        return frame
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.peer._close_stream(self.sid)
+
+
+class MuxPeer:
+    """Stream-id multiplexing over one underlying transport: each frame
+    rides a STREAM envelope (u32 stream id + the complete inner frame),
+    and any number of :class:`MuxStream` handles share the connection.
+
+    * **send** is serialized on one lock; a per-stream
+      :class:`TokenBucket` (``open_stream(rate=...)``) shapes that
+      stream's bytes *before* the lock so one throttled stream never
+      blocks the others, and ``low_priority`` streams ride the underlying
+      shaper's trickle lane.
+    * **recv** is demultiplexed cooperatively: whichever thread needs a
+      frame pumps the shared connection (one pumper at a time) and routes
+      inbound frames to per-stream inboxes; everyone else waits on their
+      inbox.  Streams the remote side opened first surface through
+      :meth:`accept_stream`.
+
+    The two ends split the stream-id space odd/even (``initiator=True``
+    allocates odd ids) so both may open streams without collision."""
+
+    def __init__(self, transport: Transport, *, initiator: bool = True):
+        self.transport = transport
+        self._send_lock = threading.Lock()
+        self._pump_lock = threading.Lock()
+        self._state_lock = threading.Lock()
+        self._inboxes: dict[int, queue.Queue] = {}
+        self._accept_q: "queue.Queue[int]" = queue.Queue()
+        self._next_sid = 1 if initiator else 2
+
+    # -- stream lifecycle ------------------------------------------------
+    def open_stream(self, *, rate: float | None = None, burst: int = 1 << 16,
+                    low_priority: bool = False,
+                    clock=time.monotonic) -> MuxStream:
+        with self._state_lock:
+            sid = self._next_sid
+            self._next_sid += 2
+            self._inboxes.setdefault(sid, queue.Queue())
+        bucket = (TokenBucket(rate, burst=burst, clock=clock)
+                  if rate else None)
+        return MuxStream(self, sid, bucket=bucket, low_priority=low_priority)
+
+    def accept_stream(self, timeout: float | None = _RECV_TIMEOUT,
+                      **stream_kw) -> MuxStream:
+        """A stream the remote end opened: surfaces when its first frame
+        arrives (there is no explicit open handshake — the id is the
+        stream)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            try:
+                sid = self._accept_q.get_nowait()
+                return MuxStream(self, sid, **stream_kw)
+            except queue.Empty:
+                pass
+            self._pump(deadline, lambda: not self._accept_q.empty())
+
+    def _close_stream(self, sid: int) -> None:
+        with self._state_lock:
+            self._inboxes.pop(sid, None)
+
+    def close(self) -> None:
+        self.transport.close()
+
+    # -- send ------------------------------------------------------------
+    def _send(self, sid: int, frame: Frame, *, low_priority: bool,
+              bucket: TokenBucket | None) -> None:
+        if bucket is not None:
+            # per-stream shaping happens OUTSIDE the shared send lock: a
+            # throttled stream sleeps on its own time, not the socket's
+            wait = bucket.delay(frame.wire_size, low_priority=low_priority)
+            if wait > 0:
+                time.sleep(wait)
+        env = wire.stream_frame(sid, frame)
+        with self._send_lock:
+            self.transport.send(env, low_priority=low_priority)
+
+    # -- recv ------------------------------------------------------------
+    def _route(self, frame: Frame) -> None:
+        sid, inner = wire.parse_stream(frame)
+        with self._state_lock:
+            box = self._inboxes.get(sid)
+            if box is None:
+                box = self._inboxes[sid] = queue.Queue()
+                self._accept_q.put(sid)
+        box.put(inner)
+
+    def _pump(self, deadline: float | None, done) -> None:
+        """Pump the shared connection until ``done()`` or the deadline.
+        Only one thread pumps at a time; the rest sleep briefly on their
+        own inboxes (frames reach them as the pumper routes)."""
+        remaining = (None if deadline is None
+                     else max(0.0, deadline - time.monotonic()))
+        if self._pump_lock.acquire(timeout=min(remaining, 0.05)
+                                   if remaining is not None else 0.05):
+            try:
+                if done():
+                    return
+                self._route(self.transport.recv(timeout=remaining))
+            finally:
+                self._pump_lock.release()
+        elif deadline is not None and time.monotonic() >= deadline:
+            raise WireError("mux recv timed out waiting for the pump")
+        else:
+            time.sleep(0.001)
+
+    def _recv(self, sid: int, timeout: float | None) -> Frame:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._state_lock:
+                box = self._inboxes.get(sid)
+            if box is None:
+                raise WireError(f"recv on closed mux stream {sid}")
+            try:
+                return box.get_nowait()
+            except queue.Empty:
+                pass
+            if deadline is not None and time.monotonic() >= deadline:
+                raise WireError(f"mux recv timed out on stream {sid}")
+            self._pump(deadline, lambda: not box.empty())
+
+    def _poll(self, sid: int) -> Frame | None:
+        with self._state_lock:
+            box = self._inboxes.get(sid)
+        if box is None:
+            raise WireError(f"poll on closed mux stream {sid}")
+        try:
+            return box.get_nowait()
+        except queue.Empty:
+            pass
+        # drain whatever the underlying transport has ready, then retry
+        if self._pump_lock.acquire(blocking=False):
+            try:
+                while True:
+                    f = self.transport.poll()
+                    if f is None:
+                        break
+                    self._route(f)
+            finally:
+                self._pump_lock.release()
+        try:
+            return box.get_nowait()
+        except queue.Empty:
+            return None
+
+
+class MuxEnvServer:
+    """The server half of a multiplexed connection: ONE thread, one
+    socket, N receiver state machines — versus :class:`EnvServer`'s
+    thread-per-connection.  ``make_receiver(sid)`` builds the
+    :class:`WireReceiver` for a stream the first time a frame arrives on
+    it; replies ride the same stream.  A BYE inside a stream retires that
+    stream's receiver; closing the underlying transport (or an envelope-
+    level WireError) ends the whole connection."""
+
+    def __init__(self, transport: Transport, make_receiver,
+                 timeout: float | None = _RECV_TIMEOUT,
+                 persistent: bool = False):
+        self.transport = transport
+        self.make_receiver = make_receiver
+        self.timeout = timeout
+        self.persistent = persistent      # keep serving after the last BYE
+        self.error: Exception | None = None
+        self.streams_served = 0
+        self._receivers: dict[int, WireReceiver] = {}
+        self._streams: dict[int, MuxStream] = {}
+        self._mux = MuxPeer(transport, initiator=False)
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name="mux-envserver")
+        self.thread.start()
+
+    def _stream(self, sid: int) -> MuxStream:
+        if sid not in self._streams:
+            self._streams[sid] = MuxStream(self._mux, sid)
+        return self._streams[sid]
+
+    def _run(self) -> None:
+        try:
+            while True:
+                frame = self.transport.recv(timeout=self.timeout)
+                sid, inner = wire.parse_stream(frame)
+                if sid not in self._receivers:
+                    self._receivers[sid] = self.make_receiver(sid)
+                    self.streams_served += 1
+                stream = self._stream(sid)
+                try:
+                    if not self._receivers[sid].handle(inner, stream):
+                        del self._receivers[sid]      # stream-level BYE
+                        if not self._receivers and not self.persistent:
+                            return
+                except WireError:
+                    raise
+                except Exception as e:  # noqa: BLE001 — back as ERROR
+                    rcv = self._receivers[sid]
+                    rcv._pending = None
+                    rcv._pending_chunks = {}
+                    stream.send(wire.json_frame(wire.ERROR, {
+                        "error": f"{type(e).__name__}: {e}",
+                        "kind": "receiver"}))
+        except WireError as e:
+            self.error = e
+        finally:
+            self.transport.close()
+
+    def join(self, timeout: float = 5.0) -> None:
+        self.thread.join(timeout)
 
 
 # ----------------------------------------------------------------------

@@ -64,13 +64,18 @@ EXEC = 9         # JSON: {"source": str, "cost": float|null}
 RESULT = 10      # JSON: {"duration": float} or {"error": str}
 FETCH = 11       # JSON: pull request — the remote becomes the sender
 BYE = 12         # close the session
+ATTACH = 13      # JSON: gateway session attach request (tenant, notebook)
+DETACH = 14      # JSON: {"session": str, "reason": str}
+STREAM = 15      # mux envelope: u32_le stream_id + one complete inner frame
 
 FRAME_TYPES = frozenset((HELLO, MANIFEST, CHUNK, ACK, TOMBSTONE, END,
-                         CANCEL, ERROR, EXEC, RESULT, FETCH, BYE))
+                         CANCEL, ERROR, EXEC, RESULT, FETCH, BYE,
+                         ATTACH, DETACH, STREAM))
 TYPE_NAMES = {HELLO: "HELLO", MANIFEST: "MANIFEST", CHUNK: "CHUNK",
               ACK: "ACK", TOMBSTONE: "TOMBSTONE", END: "END",
               CANCEL: "CANCEL", ERROR: "ERROR", EXEC: "EXEC",
-              RESULT: "RESULT", FETCH: "FETCH", BYE: "BYE"}
+              RESULT: "RESULT", FETCH: "FETCH", BYE: "BYE",
+              ATTACH: "ATTACH", DETACH: "DETACH", STREAM: "STREAM"}
 
 _HEADER = struct.Struct("<IB")        # payload_len, frame_type
 _CRC = struct.Struct("<I")
@@ -160,7 +165,19 @@ class FrameDecoder:
     :func:`decode_frames` and for loopback streams) — only payloads that
     straddle a feed boundary are joined.  Feed ``bytes`` for the zero-copy
     path; mutable buffers (``bytearray``) are defensively copied because
-    the caller could mutate them under a live payload view."""
+    the caller could mutate them under a live payload view.
+
+    Long-lived connections (a persistent gateway socket) must not pin
+    every buffer they ever received: fully-consumed segments are dropped
+    as frames decode, and when the consumed prefix of the head segment
+    comes to dominate it the remainder is compacted into a fresh buffer
+    (amortized O(1) per byte), so :attr:`retained_bytes` stays
+    O(unconsumed) instead of O(connection lifetime)."""
+
+    # a consumed prefix below this is not worth a compaction copy; above
+    # it, compact once consumed >= remaining (each copy moves fewer bytes
+    # than were consumed since the last one — amortized O(1)/byte)
+    _COMPACT_MIN = 4096
 
     def __init__(self):
         self._segs: deque = deque()       # unconsumed buffers (memoryview)
@@ -178,6 +195,27 @@ class FrameDecoder:
     @property
     def pending_bytes(self) -> int:
         return self._size
+
+    @property
+    def retained_bytes(self) -> int:
+        """Bytes of *underlying* buffers the decoder keeps alive — the
+        connection's true memory footprint, consumed prefixes included
+        (a memoryview pins its whole backing buffer)."""
+        total = 0
+        for seg in self._segs:
+            obj = seg.obj
+            total += len(obj) if obj is not None else len(seg)
+        return total
+
+    def _maybe_compact(self) -> None:
+        """Re-home the head segment's unconsumed tail when its consumed
+        prefix dominates, releasing the original backing buffer."""
+        if self._off < self._COMPACT_MIN or not self._segs:
+            return
+        head = self._segs[0]
+        if self._off * 2 >= len(head):
+            self._segs[0] = memoryview(bytes(head[self._off:]))
+            self._off = 0
 
     def frames(self) -> Iterator[Frame]:
         while True:
@@ -245,6 +283,7 @@ class FrameDecoder:
             raise WireError(
                 f"CRC mismatch on {TYPE_NAMES[ftype]} frame "
                 f"(got {crc:#010x}, want {want:#010x})")
+        self._maybe_compact()
         return Frame(ftype, payload)
 
 
@@ -433,3 +472,105 @@ def state_stream_frames(ser, need: Iterable[int], *,
     if deleted:
         yield json_frame(TOMBSTONE, deleted)
     yield Frame(END)
+
+
+# ----------------------------------------------------------------------
+# gateway control plane: ATTACH / DETACH
+# ----------------------------------------------------------------------
+
+def attach_frame(tenant: str, notebook: str, cells, *,
+                 think: Iterable[float] = (),
+                 session: str | None = None) -> Frame:
+    """Gateway session attach request.  ``cells`` is a list of
+    ``{"source": str, "cost": float|None}`` dicts (the client ships its
+    notebook inline; the gateway builds the session's Notebook from it).
+    Canonical JSON, so a golden vector pins the format."""
+    doc = {"tenant": str(tenant), "notebook": str(notebook),
+           "cells": [{"source": str(c["source"]),
+                      "cost": None if c.get("cost") is None
+                      else float(c["cost"])} for c in cells],
+           "think": [float(t) for t in think]}
+    if session is not None:
+        doc["session"] = str(session)
+    return json_frame(ATTACH, doc)
+
+
+def parse_attach(frame: Frame) -> dict:
+    if frame.ftype != ATTACH:
+        raise WireError(f"expected ATTACH, got {TYPE_NAMES.get(frame.ftype)}")
+    doc = parse_json(frame)
+    try:
+        cells = [{"source": str(c["source"]),
+                  "cost": None if c.get("cost") is None else float(c["cost"])}
+                 for c in doc["cells"]]
+        return {"tenant": str(doc["tenant"]),
+                "notebook": str(doc["notebook"]), "cells": cells,
+                "think": [float(t) for t in doc.get("think", ())],
+                "session": doc.get("session")}
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireError(f"malformed ATTACH: {e!r}") from None
+
+
+def detach_frame(session: str, reason: str = "client") -> Frame:
+    """Client-initiated session teardown (or the gateway's completion
+    notice when it detaches a drained session)."""
+    return json_frame(DETACH, {"session": str(session),
+                               "reason": str(reason)})
+
+
+def parse_detach(frame: Frame) -> tuple[str, str]:
+    if frame.ftype != DETACH:
+        raise WireError(f"expected DETACH, got {TYPE_NAMES.get(frame.ftype)}")
+    doc = parse_json(frame)
+    try:
+        return str(doc["session"]), str(doc.get("reason", "client"))
+    except (KeyError, TypeError) as e:
+        raise WireError(f"malformed DETACH: {e!r}") from None
+
+
+# ----------------------------------------------------------------------
+# STREAM: the mux envelope (N sessions on one socket)
+# ----------------------------------------------------------------------
+
+_STREAM_ID = struct.Struct("<I")
+
+
+def stream_frame(stream_id: int, inner: Frame) -> Frame:
+    """Wrap ``inner`` for one multiplexed stream.  The envelope payload is
+    the 4-byte stream id followed by the inner frame's *complete* wire
+    encoding (its own header + CRC), carried scatter-gather — the inner
+    payload bytes are never copied into the envelope."""
+    if not 0 <= stream_id < 2**32:
+        raise WireError(f"stream id {stream_id} out of u32 range")
+    return Frame(STREAM, (_STREAM_ID.pack(stream_id), *inner.segments()))
+
+
+def parse_stream(frame: Frame) -> tuple[int, Frame]:
+    """STREAM envelope -> (stream_id, inner frame).  The inner frame's
+    header, type and CRC are validated exactly as on a bare connection;
+    its payload stays a zero-copy view into the envelope's buffer."""
+    if frame.ftype != STREAM:
+        raise WireError(f"expected STREAM, got {TYPE_NAMES.get(frame.ftype)}")
+    buf = frame.payload
+    if len(buf) < _STREAM_ID.size + FRAME_OVERHEAD:
+        raise WireError("STREAM envelope too short for id + inner frame")
+    (sid,) = _STREAM_ID.unpack_from(buf)
+    plen, ftype = _HEADER.unpack_from(buf, _STREAM_ID.size)
+    if plen > MAX_PAYLOAD:
+        raise WireError(f"inner frame length {plen} exceeds MAX_PAYLOAD "
+                        f"({MAX_PAYLOAD}) — corrupted envelope?")
+    if ftype not in FRAME_TYPES:
+        raise WireError(f"unknown inner frame type {ftype}")
+    start = _STREAM_ID.size + _HEADER.size
+    if len(buf) != start + plen + _CRC.size:
+        raise WireError(
+            f"STREAM envelope must hold exactly one inner frame "
+            f"({len(buf)} bytes, want {start + plen + _CRC.size})")
+    payload = buf[start:start + plen]
+    (crc,) = _CRC.unpack_from(buf, start + plen)
+    want = zlib.crc32(payload, zlib.crc32(bytes((ftype,))))
+    if crc != want:
+        raise WireError(
+            f"CRC mismatch on mux'd {TYPE_NAMES[ftype]} frame "
+            f"(got {crc:#010x}, want {want:#010x})")
+    return sid, Frame(ftype, payload)

@@ -169,3 +169,40 @@ def test_horizon_requires_registry():
     with pytest.raises(ValueError):
         MigrationAnalyzer(KnowledgeBase(), ContextDetector(),
                           policy="horizon")
+
+def test_horizon_memoization_is_bit_identical_and_cheaper():
+    """Within one decision the chained step distributions re-query the
+    interaction model for the same cell many times; the memo must change
+    the model-call count, never the decision."""
+    runs = {}
+    for memo in (False, True):
+        an, ctxd, nb, cells = _horizon_fixture()
+        an.registry.connect("local", "remote", latency=10.0)
+        for _ in range(5):
+            for o in range(4):
+                ctxd.record("nb", o)
+        pol = an._chain[-1]
+        pol.memoize = memo
+        pol.model_calls = 0
+        decisions = [an.decide(nb, c, current_env="local", peek=True)
+                     for c in cells]
+        runs[memo] = (
+            [(d.env, d.migrate, d.reason, tuple(d.block), d.policy)
+             for d in decisions],
+            pol.model_calls)
+    assert runs[True][0] == runs[False][0]          # bit-identical outcomes
+    assert runs[True][1] < runs[False][1]           # strictly fewer queries
+
+
+def test_horizon_memo_scope_is_one_decision():
+    """The cache must not leak across decisions: new history between two
+    decide() calls changes the distributions and must be observed."""
+    an, ctxd, nb, cells = _horizon_fixture()
+    an.registry.connect("local", "remote", latency=10.0)
+    d_cold = an.decide(nb, cells[0], current_env="local", peek=True)
+    assert d_cold.env == "local"                    # no history: stay home
+    for _ in range(5):
+        for o in range(4):
+            ctxd.record("nb", o)
+    d_hot = an.decide(nb, cells[0], current_env="local", peek=True)
+    assert d_hot.env == "remote"                    # fresh history respected

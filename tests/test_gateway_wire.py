@@ -1,0 +1,215 @@
+"""Gateway control-plane wire format: ATTACH/DETACH/STREAM golden
+vectors, corruption properties, and decoder memory bounds.
+
+The golden stream pins the v1 encoding of the gateway frames the same way
+``wire_v1_golden.bin`` pins the migration frames: any byte drift is a wire
+break and must bump ``wire.VERSION``.
+"""
+import os
+
+import pytest
+
+from repro.core import wire
+from repro.core.wire import Frame, FrameDecoder, WireError
+from tests._hyp_compat import given, settings, st
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "wire_gateway_golden.bin")
+
+# the canonical v1 DETACH (session=s-0001, reason=complete): canonical
+# JSON means a semantic re-encode is byte-identical
+GOLDEN_DETACH_HEX = ("280000000e7b22726561736f6e223a22636f6d706c657465222c"
+                     "2273657373696f6e223a22732d30303031227d3ca3eb6f")
+
+
+def _golden_frames():
+    return [
+        wire.attach_frame("alice", "nb0",
+                          [{"source": "x = 1", "cost": 0.5},
+                           {"source": "y = x * 2", "cost": 30.0}],
+                          think=[1.5, 0.25], session="s-0001"),
+        wire.json_frame(wire.ACK, {"queued": "s-0001"}),
+        wire.stream_frame(5, wire.json_frame(
+            wire.ACK, {"session": "s-0001", "warm": True})),
+        wire.stream_frame(6, wire.detach_frame("s-0001", "client")),
+        wire.detach_frame("s-0001", "complete"),
+    ]
+
+
+# ----------------------------------------------------------------------
+# golden vectors
+# ----------------------------------------------------------------------
+
+def test_golden_stream_decodes_and_reencodes_byte_identical():
+    with open(GOLDEN, "rb") as f:
+        data = f.read()
+    frames = wire.decode_frames(data)
+    assert [f.ftype for f in frames] == [
+        wire.ATTACH, wire.ACK, wire.STREAM, wire.STREAM, wire.DETACH]
+    assert b"".join(f.encoded() for f in frames) == data
+    assert frames[4].encoded().hex() == GOLDEN_DETACH_HEX
+
+
+def test_golden_stream_matches_fresh_encoding():
+    """The committed bytes are exactly what today's encoders emit —
+    catches accidental format drift in either direction."""
+    with open(GOLDEN, "rb") as f:
+        data = f.read()
+    assert b"".join(f.encoded() for f in _golden_frames()) == data
+
+
+def test_golden_attach_parses_and_reencodes_identically():
+    with open(GOLDEN, "rb") as f:
+        frames = wire.decode_frames(f.read())
+    doc = wire.parse_attach(frames[0])
+    assert doc["tenant"] == "alice" and doc["notebook"] == "nb0"
+    assert doc["cells"][1] == {"source": "y = x * 2", "cost": 30.0}
+    assert doc["think"] == [1.5, 0.25] and doc["session"] == "s-0001"
+    again = wire.attach_frame(doc["tenant"], doc["notebook"], doc["cells"],
+                              think=doc["think"], session=doc["session"])
+    assert again.encoded() == frames[0].encoded()
+
+
+def test_golden_stream_envelopes_unwrap_to_inner_frames():
+    with open(GOLDEN, "rb") as f:
+        frames = wire.decode_frames(f.read())
+    sid, inner = wire.parse_stream(frames[2])
+    assert sid == 5 and inner.ftype == wire.ACK
+    sid, inner = wire.parse_stream(frames[3])
+    assert sid == 6 and inner.ftype == wire.DETACH
+    assert wire.parse_detach(inner) == ("s-0001", "client")
+    # the unwrapped inner frame re-encodes byte-identically
+    assert inner.encoded() == wire.detach_frame("s-0001", "client").encoded()
+
+
+def test_existing_v1_golden_still_decodes():
+    """Adding gateway frame types must not disturb the original stream."""
+    old = os.path.join(os.path.dirname(__file__), "data",
+                       "wire_v1_golden.bin")
+    with open(old, "rb") as f:
+        frames = wire.decode_frames(f.read())
+    assert frames[0].ftype == wire.HELLO
+    assert wire.parse_hello(frames[0])["version"] == wire.VERSION
+
+
+# ----------------------------------------------------------------------
+# parse validation
+# ----------------------------------------------------------------------
+
+def test_parse_attach_rejects_malformed_documents():
+    for bad in ({"notebook": "nb"},                       # missing tenant
+                {"tenant": "t"},                          # missing notebook
+                {"tenant": "t", "notebook": "nb",
+                 "cells": [{"cost": 1.0}]},               # cell missing source
+                {"tenant": "t", "notebook": "nb",
+                 "cells": [{"source": "x", "cost": "free"}]},  # bad cost
+                {"tenant": "t", "notebook": "nb",
+                 "cells": "nope"}):                       # cells not a list
+        with pytest.raises(WireError):
+            wire.parse_attach(wire.json_frame(wire.ATTACH, bad))
+    with pytest.raises(WireError):
+        wire.parse_attach(wire.hello_frame())             # wrong frame type
+
+
+def test_parse_detach_rejects_malformed_documents():
+    with pytest.raises(WireError):
+        wire.parse_detach(wire.json_frame(wire.DETACH, {"reason": "x"}))
+    with pytest.raises(WireError):
+        wire.parse_detach(wire.hello_frame())
+
+
+def test_stream_frame_validates_stream_id_range():
+    inner = wire.json_frame(wire.ACK, {})
+    for sid in (-1, 1 << 32):
+        with pytest.raises((WireError, ValueError)):
+            wire.stream_frame(sid, inner)
+
+
+def test_parse_stream_rejects_corrupt_inner_frames():
+    good = wire.stream_frame(9, wire.detach_frame("s", "client"))
+    raw = bytearray(good.encoded())
+    # flip a byte inside the inner payload: the envelope CRC catches it
+    raw[15] ^= 0xFF
+    with pytest.raises(WireError):
+        wire.decode_frames(bytes(raw))
+    # truncate the inner frame but fix up the envelope so only the
+    # inner-frame validation can object
+    payload = bytes(good.payload)[:-3]
+    forged = Frame(wire.STREAM, payload)
+    with pytest.raises(WireError):
+        wire.parse_stream(wire.decode_frames(forged.encoded())[0])
+    # a STREAM too short to hold even the inner header
+    forged = Frame(wire.STREAM, payload[:6])
+    with pytest.raises(WireError):
+        wire.parse_stream(wire.decode_frames(forged.encoded())[0])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 255))
+def test_bitflip_anywhere_is_rejected_or_decodes_identically(pos, flip):
+    """Property: a flipped byte either raises WireError or (flip == 0)
+    decodes identically — never a *different* valid stream."""
+    with open(GOLDEN, "rb") as f:
+        data = bytearray(f.read())
+    good = wire.decode_frames(bytes(data))
+    pos %= len(data)
+    data[pos] ^= flip
+    try:
+        got = wire.decode_frames(bytes(data))
+    except WireError:
+        return
+    assert got == good
+
+
+def test_truncation_is_a_clean_error():
+    with open(GOLDEN, "rb") as f:
+        data = f.read()
+    for cut in (1, 9, len(data) // 2, len(data) - 1):
+        with pytest.raises(WireError):
+            wire.decode_frames(data[:cut])
+
+
+# ----------------------------------------------------------------------
+# decoder memory bound (satellite: retained bytes stay O(unconsumed))
+# ----------------------------------------------------------------------
+
+def test_decoder_retains_o_of_unconsumed_not_o_of_stream():
+    """Feed a long stream in small slices: after each drain the decoder
+    must hold only the unconsumed tail, no matter how many bytes have
+    passed through.  (The old decoder kept every fed segment until a
+    frame completed *and* never trimmed the consumed prefix of a big
+    head segment.)"""
+    frame = wire.json_frame(wire.ACK, {"k": "v" * 64}).encoded()
+    stream = frame * 400
+    dec = FrameDecoder()
+    seen = 0
+    cap = 2 * FrameDecoder._COMPACT_MIN + len(frame)
+    for i in range(0, len(stream), 7):
+        dec.feed(stream[i:i + 7])
+        seen += sum(1 for _ in dec.frames())
+        assert dec.retained_bytes <= cap, (i, dec.retained_bytes)
+    assert seen == 400
+    assert dec.pending_bytes == 0
+
+
+def test_decoder_compacts_consumed_prefix_of_one_big_buffer():
+    """One huge feed, drained frame by frame: the consumed prefix must be
+    released instead of pinning the whole buffer via a memoryview."""
+    frame = wire.json_frame(wire.ACK, {"k": "v" * 500}).encoded()
+    dec = FrameDecoder()
+    dec.feed(frame * 300)               # one ~150 KB buffer
+    drained = sum(1 for _ in dec.frames())
+    assert drained == 300
+    assert dec.pending_bytes == 0
+    assert dec.retained_bytes <= len(frame) + 2 * FrameDecoder._COMPACT_MIN
+
+
+def test_decoder_partial_tail_is_exactly_what_remains():
+    frame = wire.json_frame(wire.ACK, {"n": 1}).encoded()
+    dec = FrameDecoder()
+    dec.feed(frame + frame[:5])
+    assert sum(1 for _ in dec.frames()) == 1
+    assert dec.pending_bytes == 5
+    dec.feed(frame[5:])
+    assert sum(1 for _ in dec.frames()) == 1
+    assert dec.pending_bytes == 0

@@ -1,0 +1,237 @@
+"""Stream multiplexing: N migration sessions on ONE connection.
+
+The load-bearing invariant: a session's per-stream byte counters must
+equal the same traffic's counters on a dedicated connection exactly —
+the mux envelope overhead lands on the shared transport's counters, never
+on a session's.  That is what makes per-session accounting (and the
+gateway bench's apples-to-apples comparison) honest.
+"""
+import socket
+import threading
+
+import pytest
+
+from repro.core import wire
+from repro.core.chunkstore import MemoryChunkStore
+from repro.core.reducer import StateReducer
+from repro.core.state import ExecutionState
+from repro.core.transport import (
+    LoopbackTransport, MigrationPeer, MuxEnvServer, MuxPeer, SocketTransport,
+    WireReceiver,
+)
+
+
+def _ser(red, **ns):
+    return red.serialize_names(ExecutionState(ns), list(ns))
+
+
+def _socket_pair():
+    srv = socket.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+    client = socket.create_connection(("127.0.0.1", port), timeout=5.0)
+    conn, _ = srv.accept()
+    srv.close()
+    return SocketTransport(client), SocketTransport(conn)
+
+
+def _mux_rig(n_streams, *, transport="loopback"):
+    """Client MuxPeer with N MigrationPeers + a MuxEnvServer, all on one
+    connection.  Returns (peers, per-stream (store, ns) map, server,
+    shared client transport)."""
+    if transport == "loopback":
+        client_tr, server_tr = LoopbackTransport.pair()
+    else:
+        client_tr, server_tr = _socket_pair()
+    red = StateReducer(codec="zlib")
+    sides = {}
+
+    def make_receiver(sid):
+        store, ns = MemoryChunkStore(), {}
+        sides[sid] = (store, ns)
+        return WireReceiver(store, red, ns=ns)
+
+    server = MuxEnvServer(server_tr, make_receiver, timeout=10.0)
+    mux = MuxPeer(client_tr, initiator=True)
+    peers = [MigrationPeer(mux.open_stream(), codec="zlib")
+             for _ in range(n_streams)]
+    return peers, sides, server, client_tr
+
+
+@pytest.mark.parametrize("transport", ["loopback", "socket"])
+def test_n_sessions_share_one_connection(transport):
+    peers, sides, server, _ = _mux_rig(3, transport=transport)
+    red = StateReducer(codec="zlib")
+    for i, peer in enumerate(peers):
+        peer.send_state(_ser(red, x=i, tag=f"s{i}"))
+        peer.execute("y = x * 10")
+    for peer in peers:
+        peer.close()
+    server.join()
+    assert server.error is None
+    assert server.streams_served == 3
+    assert len(sides) == 3
+    for _store, ns in sides.values():
+        assert ns["y"] == ns["x"] * 10
+
+
+def _serve_plain(receiver, transport):
+    while True:
+        frame = transport.recv(timeout=10.0)
+        if frame.ftype == wire.BYE:
+            return
+        receiver.handle(frame, transport)
+
+
+def test_per_stream_bytes_equal_dedicated_connection_bytes():
+    """Run identical traffic through (a) a dedicated loopback per session
+    and (b) mux streams on one shared loopback: every per-session frame
+    and byte counter must match exactly.  (The exec RPC is excluded from
+    the received-bytes comparison only because its RESULT frame embeds
+    the remote wall-clock float, whose repr length varies run to run —
+    its sent side is still compared byte-for-byte.)"""
+    red = StateReducer(codec="zlib")
+
+    def run_session(peer, i):
+        peer.send_state(_ser(red, x=i, blob=bytes(range(256)) * 8))
+        sent_before_exec = peer.transport.bytes_sent
+        peer.execute("y = x + 1")
+        exec_sent = peer.transport.bytes_sent - sent_before_exec
+        peer.close()
+        return exec_sent
+
+    dedicated = []
+    for i in range(3):
+        ctr, str_ = LoopbackTransport.pair()
+        rcv = WireReceiver(MemoryChunkStore(), red, ns={})
+        t = threading.Thread(target=_serve_plain, args=(rcv, str_),
+                             daemon=True)
+        t.start()
+        exec_sent = run_session(MigrationPeer(ctr, codec="zlib"), i)
+        t.join(timeout=5.0)
+        dedicated.append((ctr.frames_sent, ctr.bytes_sent,
+                          ctr.frames_recv, exec_sent))
+
+    peers, _sides, server, shared = _mux_rig(3)
+    muxed = []
+    for i, peer in enumerate(peers):
+        exec_sent = run_session(peer, i)
+        tr = peer.transport
+        muxed.append((tr.frames_sent, tr.bytes_sent,
+                      tr.frames_recv, exec_sent))
+    server.join()
+    assert server.error is None
+    assert muxed == dedicated
+    # the shared pipe carried everything plus the envelope overhead
+    assert shared.bytes_sent > sum(d[1] for d in dedicated)
+
+
+def test_interleaved_streams_do_not_cross_contaminate():
+    """Frames from different sessions interleave on the shared pipe but
+    land in the right namespaces."""
+    peers, sides, server, _ = _mux_rig(4)
+    red = StateReducer(codec="zlib")
+    for i, peer in enumerate(peers):
+        peer.send_state(_ser(red, x=100 + i))
+    for i, peer in enumerate(peers):
+        peer.execute(f"y = x - {i}")
+    for peer in peers:
+        peer.close()
+    server.join()
+    assert server.error is None
+    # stream order == open order (ids 1,3,5,7), so y == 100 everywhere
+    # only if each exec hit its own namespace
+    got = sorted(ns["y"] for _store, ns in sides.values())
+    assert got == [100, 100, 100, 100]
+    xs = sorted(ns["x"] for _store, ns in sides.values())
+    assert xs == [100, 101, 102, 103]
+
+
+def test_stream_error_is_contained_to_its_stream():
+    """A failing cell on one stream errors that session; its sibling on
+    the same connection keeps working."""
+    peers, _sides, server, _ = _mux_rig(2)
+    red = StateReducer(codec="zlib")
+    for i, peer in enumerate(peers):
+        peer.send_state(_ser(red, x=i))
+    with pytest.raises(RuntimeError):
+        peers[0].execute("boom()")       # NameError on the remote
+    assert peers[1].execute("y = x + 41") >= 0.0
+    for peer in peers:
+        peer.close()
+    server.join()
+    assert server.error is None
+
+
+def test_per_stream_token_bucket_shapes_that_stream_only():
+    """A rate-limited stream owns a private bucket; its sibling on the
+    same connection has none, so the throttled stream's deficit can never
+    delay the other."""
+    client_tr, server_tr = LoopbackTransport.pair()
+    mux = MuxPeer(client_tr, initiator=True)
+    now = [0.0]
+    slow = mux.open_stream(rate=1000.0, burst=100,
+                           clock=lambda: now[0])
+    fast = mux.open_stream()
+    assert slow.bucket is not None and fast.bucket is None
+    # bucket math is per-stream: a big frame over a 100-byte burst at
+    # 1000 B/s must wait out its own deficit on the next send
+    big = wire.json_frame(wire.ACK, {"pad": "z" * 400})
+    first = slow.bucket.delay(big.wire_size)
+    second = slow.bucket.delay(big.wire_size)
+    assert second > first                # each send deepens the deficit
+    assert second >= big.wire_size / 1000.0 * 0.5
+    fast.send(big)
+    fast.send(big)                       # sibling never waits
+    server_mux = MuxPeer(server_tr, initiator=False)
+    stream = server_mux.accept_stream(timeout=5.0)
+    assert stream.sid == fast.sid
+    assert stream.recv(timeout=5.0).ftype == wire.ACK
+
+
+def test_poll_on_mux_stream_is_nonblocking():
+    client_tr, server_tr = LoopbackTransport.pair()
+    a = MuxPeer(client_tr, initiator=True)
+    b = MuxPeer(server_tr, initiator=False)
+    sa = a.open_stream()
+    assert sa.poll() is None              # nothing pending: returns, no block
+    sa.send(wire.json_frame(wire.ACK, {"n": 1}))
+    sb = b.accept_stream(timeout=5.0)
+    assert sb.sid == sa.sid
+    assert wire.parse_json(sb.recv(timeout=5.0))["n"] == 1
+    sb.send(wire.json_frame(wire.ACK, {"n": 2}))
+    f = sa.poll()
+    assert f is not None and wire.parse_json(f)["n"] == 2
+    assert sa.poll() is None
+
+
+def test_both_ends_can_open_streams_without_id_collision():
+    client_tr, server_tr = LoopbackTransport.pair()
+    a = MuxPeer(client_tr, initiator=True)
+    b = MuxPeer(server_tr, initiator=False)
+    a_ids = [a.open_stream().sid for _ in range(3)]
+    b_ids = [b.open_stream().sid for _ in range(3)]
+    assert a_ids == [1, 3, 5] and b_ids == [2, 4, 6]
+    assert not set(a_ids) & set(b_ids)
+
+
+def test_persistent_server_survives_stream_churn():
+    """persistent=True keeps the connection serving after every open
+    stream has said BYE — a gateway connection must outlive a drain."""
+    client_tr, server_tr = LoopbackTransport.pair()
+    red = StateReducer(codec="zlib")
+
+    def make_receiver(sid):
+        return WireReceiver(MemoryChunkStore(), red, ns={})
+
+    server = MuxEnvServer(server_tr, make_receiver, timeout=10.0,
+                          persistent=True)
+    mux = MuxPeer(client_tr, initiator=True)
+    for round_ in range(3):
+        peer = MigrationPeer(mux.open_stream(), codec="zlib")
+        peer.send_state(_ser(red, r=round_))
+        peer.execute("rr = r * 2")
+        peer.close()                      # BYE retires this stream only
+    assert server.thread.is_alive()
+    assert server.streams_served == 3
+    client_tr.close()
+    server.join()
