@@ -1,0 +1,187 @@
+"""Replica-plane benchmarks: zero-replay failover and speculative racing.
+
+Two sweeps (results also land in ``BENCH_replica.json``):
+
+* **failover** — an env dies mid-heavy-cell at several namespace sizes;
+  three recovery arms on an identical fleet: *rerun* replays the whole
+  plan from home, *checkpoint* restores the latest periodic CAS
+  checkpoint and replays the cells since it, *replica* promotes the
+  most-converged warm follower and resumes the plan with zero replay.
+  The claim: promotion's recovery overhead (makespan minus the no-failure
+  makespan of the same fleet) beats checkpoint-restore by >10x at the
+  largest namespace size, because the follower already holds the state
+  that checkpoint recovery has to ship and the cells it has to replay.
+* **race** — first-result-wins speculative execution on two equal-cost
+  envs, admission-gated by the interaction model.  Correctness gate: the
+  committed result of every raced cell is bit-identical to a solo run of
+  the same plan (the loser leg executes against a discarded overlay), and
+  the wasted leg is charged to the speculation ledger.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import (
+    EnvironmentRegistry, ExecutionEnvironment, HybridRuntime, Notebook,
+    SessionScheduler,
+)
+
+# The failure strikes the light report cell, after the heavy training
+# cells committed, at the point where the periodic checkpoint is maximally
+# stale — the snapshot predates the last two heavy cells, so checkpoint
+# recovery replays them while promotion resumes with zero replay.  All
+# arms pay the same heartbeat miss window and the same re-execution of
+# the one interrupted cell; everything else is the recovery mechanism.
+FAIL_AT = 29.9
+CKPT_INTERVAL = 15.0
+BEAT_INTERVAL = 0.2      # 3-miss window => 0.6s detection latency
+N_CELLS = 5
+
+
+def make_notebook(n_elems: int, tag: str) -> Notebook:
+    """Load -> three heavy train cells -> light report; the loaded array
+    is the namespace the recovery arms have to reconstruct."""
+    nb = Notebook(f"replica-session-{tag}")
+    nb.add_cell("import numpy as np\n"
+                f"data = np.arange({n_elems}, dtype=np.float64)", cost=4.0)
+    nb.add_cell("model = float((data ** 2).sum())", cost=80.0)
+    nb.add_cell("model2 = model + float(data.sum())", cost=80.0)
+    nb.add_cell("model3 = model2 * 0.5 + float(data[-1])", cost=80.0)
+    nb.add_cell("out = model3 / 2", cost=5.0)
+    return nb
+
+
+def make_registry() -> EnvironmentRegistry:
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.3)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=10.0), capacity=1)
+    reg.register(ExecutionEnvironment("gpu-standby", speedup=10.0),
+                 capacity=1)
+    return reg
+
+
+def _run_arm(n_elems: int, mode: str | None):
+    """One fleet run; ``mode`` None = no failure (the overhead baseline)."""
+    sched = SessionScheduler(make_registry(), beat_interval=BEAT_INTERVAL)
+    if mode == "replica":
+        sched.enable_replicas(2)
+        sched.enable_recovery("rerun")       # fallback when no follower
+    elif mode is not None:
+        sched.enable_recovery(mode, interval=CKPT_INTERVAL)
+    if mode is not None:
+        sched.inject_failure("gpu-cloud", at=FAIL_AT, recover_after=10.0)
+    sched.add_notebook(make_notebook(n_elems, f"{n_elems}-{mode}"),
+                       policy="cost", use_knowledge=False,
+                       think=[1.0] * N_CELLS)
+    return sched.run()
+
+
+def failover_sweep(rows, out, sizes) -> None:
+    for n_elems in sizes:
+        base = _run_arm(n_elems, None)
+        entry = {"n_elems": n_elems, "nofail_makespan": base.makespan}
+        overhead = {}
+        for mode in ("rerun", "checkpoint", "replica"):
+            rep = _run_arm(n_elems, mode)
+            assert rep.recoveries >= 1, "failure must interrupt the run"
+            assert rep.sessions[0].cells_run == N_CELLS
+            overhead[mode] = rep.makespan - base.makespan
+            entry[mode] = {
+                "makespan": rep.makespan,
+                "recovery_overhead": overhead[mode],
+                "recoveries": rep.recoveries,
+                "promotions": rep.promotions,
+                "replicated_bytes": rep.replicated_bytes,
+                "replica_shared_bytes": rep.replica_shared_bytes,
+                "checkpoints": rep.checkpoints,
+                "restored_bytes": rep.restored_bytes,
+            }
+            rows.append((f"replica/n{n_elems}/{mode}/recovery_overhead",
+                         overhead[mode],
+                         f"makespan {rep.makespan:.2f}s vs "
+                         f"{base.makespan:.2f}s no-failure"))
+        assert entry["replica"]["promotions"] == 1, \
+            "the replica arm must recover by promotion, not rerun"
+        for rival in ("rerun", "checkpoint"):
+            entry[f"promote_speedup_vs_{rival}"] = (
+                overhead[rival] / max(overhead["replica"], 1e-9))
+            rows.append((f"replica/n{n_elems}/promote_speedup_vs_{rival}",
+                         entry[f"promote_speedup_vs_{rival}"],
+                         ">1 = promoting the warm follower wins"))
+        out["failover"].append(entry)
+    largest = out["failover"][-1]
+    out["promote_speedup_vs_checkpoint"] = (
+        largest["promote_speedup_vs_checkpoint"])
+    out["promote_speedup_vs_rerun"] = largest["promote_speedup_vs_rerun"]
+    assert largest["promote_speedup_vs_checkpoint"] >= 10.0, (
+        f"promotion must beat checkpoint-restore >=10x at the largest "
+        f"namespace; got {largest['promote_speedup_vs_checkpoint']:.1f}x")
+
+
+# ----------------------------------------------------------------------
+def _race_run(race: bool):
+    """Two passes over a three-cell plan on two equal-speed cloud envs:
+    the second pass carries predictions, the equal pricing lands inside
+    the race band, and the heavy cell races."""
+    nb = Notebook("replica-race")
+    nb.add_cell("import numpy as np\n"
+                "a = np.arange(4000, dtype=np.float64)", cost=0.1)
+    nb.add_cell("t = float((a * 3) @ a)", cost=30.0)
+    nb.add_cell("u = t / 7", cost=0.1)
+    envs = {"local": ExecutionEnvironment("local"),
+            "fast-a": ExecutionEnvironment("fast-a", speedup=10.0),
+            "fast-b": ExecutionEnvironment("fast-b", speedup=10.0)}
+    rt = HybridRuntime(nb, envs=envs, policy="cost", use_knowledge=False,
+                       latency=0.01, bandwidth=1e8)
+    rs = rt.attach_replicas(["fast-a", "fast-b"], race=race, rate=1e9)
+    for _pass in range(2):
+        for order in range(3):
+            rt.run_cell(order)
+            rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    final = {}
+    for name in ("t", "u"):
+        env = next(e for e in rt.envs.values() if name in e.state.ns)
+        final[name] = float(env.state.ns[name])
+    rt.close()
+    return rs, final
+
+
+def race_bench(rows, out) -> None:
+    solo_rs, solo_final = _race_run(race=False)
+    raced_rs, raced_final = _race_run(race=True)
+    assert solo_rs.races == 0
+    assert raced_rs.races >= 1, "the heavy cell must race"
+    identical = float(all(
+        solo_final[k] == raced_final[k] for k in solo_final))
+    out["race"] = {
+        "races": raced_rs.races,
+        "race_wins": dict(raced_rs.race_wins),
+        "race_waste_seconds": raced_rs.race_waste_seconds,
+        "race_leg_bytes": raced_rs.race_leg_bytes,
+        "bit_identical": identical,
+    }
+    rows.append(("replica/race/races", float(raced_rs.races),
+                 f"wins {dict(raced_rs.race_wins)}"))
+    rows.append(("replica/race/waste_seconds", raced_rs.race_waste_seconds,
+                 "loser legs charged to the speculation ledger"))
+    rows.append(("replica/race/bit_identical", identical,
+                 "raced committed results == solo run (hard gate)"))
+    assert identical == 1.0, "racing must never change the committed result"
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    out: dict = {"failover": []}
+    sizes = (50_000, 500_000) if smoke else (50_000, 500_000, 5_000_000)
+    failover_sweep(rows, out, sizes)
+    race_bench(rows, out)
+    with open("BENCH_replica.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val},{note}")

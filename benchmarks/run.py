@@ -34,6 +34,7 @@ MODULES = [
     "bench_digest",               # batched digest/delta + zero-copy wire
     "bench_live",                 # background delta replication / liveness
     "bench_gateway",              # persistent gateway: 10k-session storm
+    "bench_replica",              # replica plane: failover promotion / racing
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
@@ -47,6 +48,7 @@ ARTIFACTS = {
     "bench_digest": "BENCH_digest.json",
     "bench_live": "BENCH_live.json",
     "bench_gateway": "BENCH_gateway.json",
+    "bench_replica": "BENCH_replica.json",
 }
 
 

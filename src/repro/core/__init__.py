@@ -31,6 +31,7 @@ from repro.core.notebook import Cell, Notebook
 from repro.core.reducer import (
     SerializationFailure, SerializedState, StateReducer,
 )
+from repro.core.replica import RaceTicket, SessionReplicaSet
 from repro.core.scheduler import (
     AutoscalePolicy, CapacityArbiter, ScheduleReport, SessionCheckpointer,
     SessionReport, SessionScheduler, WorkloadTrace,
@@ -75,4 +76,5 @@ __all__ = [
     "WireReceiver", "attach_peer", "Frame", "FrameDecoder", "WireError",
     "GatewayReport", "GatewayService", "GatewayTenant", "WarmPool",
     "WireFrontend", "poisson_attach_storm",
+    "RaceTicket", "SessionReplicaSet",
 ]

@@ -509,6 +509,8 @@ class MigrationAnalyzer:
     def offload_target(self) -> str:
         """Default offload env (fastest candidate): the paper's 'remote'."""
         cands = self.candidates()
+        if not cands:
+            return self.home    # every candidate is down: stay put
         if self.registry is not None and len(cands) > 1:
             return max(cands, key=lambda n: self.registry[n].speedup)
         return cands[0]

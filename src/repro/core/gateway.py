@@ -238,6 +238,13 @@ class GatewaySessionReport:
     makespan: float                   # session clock at detach
     migrations: int
     reason: str                       # complete | client | error:...
+    # replica plane (zero with replicas=0): convergence lag at detach,
+    # promotions taken, races run and their win/waste tallies
+    replica_lag: int = 0
+    promotions: int = 0
+    races: int = 0
+    race_wins: dict = field(default_factory=dict)
+    race_waste_seconds: float = 0.0
 
 
 @dataclass
@@ -263,6 +270,10 @@ class GatewayReport:
     pruned_intervals: int
     env_utilization: dict
     tenants: dict
+    # replica plane aggregates (zero with replicas=0)
+    promotions: int = 0
+    races: int = 0
+    race_waste_seconds: float = 0.0
     session_reports: list = field(default_factory=list)
 
 
@@ -286,7 +297,12 @@ class GatewayService:
                  quantum: float = 1.0, share_chunks: bool = True,
                  clock=None, poll_interval: float = 0.05,
                  prune_interval: float = 10.0, prewarm: bool = True,
+                 replicas: int = 0, race: bool = False,
                  **runtime_defaults):
+        if replicas < 0:
+            raise ValueError(f"replicas must be >= 0, got {replicas}")
+        self.replicas_k = int(replicas)
+        self.race = bool(race)
         self.registry = registry
         self.share_chunks = bool(share_chunks)
         self.loop = EventLoop(clock)
@@ -418,6 +434,12 @@ class GatewayService:
                            arbiter=self.arbiter, session_id=req.session_id,
                            **req.runtime_kw)
         self._time_decisions(rt)
+        if self.replicas_k > 0:
+            followers = sorted(
+                n for n, e in worker.registry.envs().items()
+                if e.kind == "compute" and n != rt.home)[:self.replicas_k]
+            if followers:
+                rt.attach_replicas(followers, race=self.race)
         admission_wait = now - req.requested_at
         attach_wait = admission_wait + delay
         (self.warm_waits if worker.warm else self.cold_waits).append(
@@ -466,6 +488,10 @@ class GatewayService:
             rt.clock.advance_to(now)
             if sess.cursor > 0:
                 sess.think_total += gap
+        if rt.replicas is not None:
+            # think time just ended: converge the followers on whatever the
+            # last cell committed before the next one runs
+            rt.replicas.sync(now)
         self._prune_tick()
         try:
             rt.run_cell(sess.plan[sess.cursor])
@@ -502,12 +528,18 @@ class GatewayService:
     def _finish(self, sess: _GwSession, reason: str) -> None:
         sess.detached = True
         rt = sess.runtime
+        rs = rt.replicas
         self.reports.append(GatewaySessionReport(
             session=sess.id, tenant=sess.tenant, notebook=rt.nb.name,
             cells_run=sess.cursor, attach_wait=sess.attach_wait,
             warm=sess.worker.warm, queue_wait=rt.queue_wait,
             makespan=rt.clock.now(), migrations=rt.migrations,
-            reason=reason))
+            reason=reason,
+            replica_lag=rs.lag() if rs else 0,
+            promotions=rs.promotions if rs else 0,
+            races=rs.races if rs else 0,
+            race_wins=dict(rs.race_wins) if rs else {},
+            race_waste_seconds=rs.race_waste_seconds if rs else 0.0))
         rt.close()
         self.pool.release(sess.worker)
         self.tenants[sess.tenant].admitted -= 1
@@ -581,6 +613,10 @@ class GatewayService:
                        "weight": t.weight,
                        "admission_wait": t.admission_wait}
                 for name, t in self.tenants.items()},
+            promotions=sum(r.promotions for r in self.reports),
+            races=sum(r.races for r in self.reports),
+            race_waste_seconds=sum(r.race_waste_seconds
+                                   for r in self.reports),
             session_reports=list(self.reports))
 
 

@@ -1073,6 +1073,9 @@ class HybridRuntime:
         # background delta replicator (attach_replicator); None = off and
         # every decision/byte path is bit-identical to the unreplicated run
         self.replicator: DeltaReplicator | None = None
+        # replica plane (attach_replicas); None = off — K=0 keeps every
+        # decision and byte bit-identical to the unreplicated runtime
+        self.replicas = None
         self._closed = False
         self._emit(T.SESSION_STARTED, None)
 
@@ -1092,6 +1095,20 @@ class HybridRuntime:
         return DeltaReplicator(self, rate=rate, top_k=top_k,
                                liveness=liveness,
                                burst_seconds=burst_seconds)
+
+    def attach_replicas(self, followers, *, race: bool = False,
+                        race_band: float = 0.25,
+                        race_threshold: float = 0.35,
+                        rate: float = 50e6, burst_seconds: float = 1.0):
+        """Turn on the replica plane: keep ``followers`` converged with the
+        primary during think time (zero-replay promotion on failure) and —
+        with ``race=True`` — race confident cells on two candidate envs,
+        committing the first result."""
+        from repro.core.replica import SessionReplicaSet
+        return SessionReplicaSet(self, followers, race=race,
+                                 race_band=race_band,
+                                 race_threshold=race_threshold,
+                                 rate=rate, burst_seconds=burst_seconds)
 
     def probe(self, source: str, env_name: str) -> float:
         """Background probe for Algorithm 2 (no telemetry, no migration)."""
@@ -1226,6 +1243,12 @@ class HybridRuntime:
         cell = self.nb.cell(ref)
         order = self.nb.order(cell.cell_id)
         self._emit(T.CELL_EXECUTION_REQUESTED, cell.cell_id, order=order)
+        # the probability the interaction model gave THIS cell — the race
+        # gate's admission signal — must be captured before scoring pops it
+        pred = self._last_pred
+        cell_prob = (pred["dist"].get(order)
+                     if pred is not None and pred["notebook"] == self.nb.name
+                     else None)
         self._score_prediction(cell, order)
 
         if force_env is not None:
@@ -1248,6 +1271,16 @@ class HybridRuntime:
         self.last_decision = decision
 
         target = decision.env
+        # first-result-wins racing: with a replica set attached and the
+        # confidence gate firing, launch the cell on the two cheapest
+        # candidates; the modeled first RESULT (min expected cost) is where
+        # the cell commits, and the loser is cancelled at commit time
+        race = None
+        if self.replicas is not None and force_env is None:
+            race = self.replicas.plan_race(cell, order, decision,
+                                           prob=cell_prob)
+            if race is not None:
+                target = race.winner
         # speculations that bet on a different destination are now stale:
         # cancel them before the migration below claims its own
         if isinstance(self.engine, PipelinedMigrationEngine):
@@ -1337,6 +1370,14 @@ class HybridRuntime:
         env.state.mark_dirty(stores)
         if self.replicator is not None:
             self.replicator.invalidate(stores)
+        if self.replicas is not None:
+            # the cell committed: followers are one cell behind until the
+            # next think-time sync; a raced cell settles (loser CANCELLED,
+            # waste charged) the moment its first RESULT lands
+            self.replicas.note_cell(order)
+            if race is not None:
+                self.replicas.settle_race(race, duration=duration,
+                                          now=self.clock.now())
 
         # block bookkeeping: leave the block env when it completes (Fig. 3)
         if self.block_plan:
@@ -1367,6 +1408,12 @@ class HybridRuntime:
         self.engine.synced.pop(failed_env, None)
         if self.replicator is not None:
             self.replicator.forget(failed_env)
+        if self.replicas is not None:
+            # a race interrupted by the failure is aborted WITHOUT touching
+            # the loser's namespace: if that loser is the follower about to
+            # be promoted, its converged state must survive the cancel
+            self.replicas.abort_race(reason=f"{failed_env} failed")
+            self.replicas.forget(failed_env)
         if isinstance(self.engine, PipelinedMigrationEngine):
             wasted = self.engine.cancel_prefetch(failed_env, self.clock.now())
             if wasted:

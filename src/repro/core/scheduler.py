@@ -348,6 +348,15 @@ class SessionReport:
     trickled_bytes: int = 0
     trickle_claimed_bytes: int = 0
     wasted_bytes: int = 0
+    # replica plane (all zero with --replicas 0): follower convergence lag
+    # at drain, bytes applied / claimed-from-bank, promotions and races
+    replica_lag: int = 0
+    replicated_bytes: int = 0
+    replica_shared_bytes: int = 0
+    promotions: int = 0
+    races: int = 0
+    race_wins: dict = field(default_factory=dict)
+    race_waste_seconds: float = 0.0
 
     @property
     def prediction_hit_rate(self) -> float:
@@ -368,6 +377,7 @@ class _Session:
     recoveries: int = 0
     ckpt: SessionCheckpointer | None = None
     rep: object | None = None          # DeltaReplicator when replication on
+    replicas: object | None = None     # SessionReplicaSet when replicas on
 
     def done(self) -> bool:
         return self.cursor >= len(self.plan)
@@ -410,6 +420,12 @@ class ScheduleReport:
     trickled_bytes: int = 0
     trickle_claimed_bytes: int = 0
     wasted_speculation_bytes: int = 0
+    # replica plane (zero with --replicas 0): fleet-wide sums
+    replicated_bytes: int = 0
+    replica_shared_bytes: int = 0
+    promotions: int = 0
+    races: int = 0
+    race_waste_seconds: float = 0.0
     total_queue_wait: float = field(init=False)
     total_think_time: float = field(init=False)
     prediction_hit_rate: float = field(init=False)
@@ -485,6 +501,7 @@ class SessionScheduler:
         self.ckpt_storage_name: str | None = None
         self.scale_events: list[tuple[float, str, str]] = []
         self.replication: dict | None = None
+        self.replica_cfg: dict | None = None
         self._loop: EventLoop | None = None
         self._coord = None
 
@@ -555,6 +572,40 @@ class SessionScheduler:
         self.replication = {"rate": float(rate), "top_k": int(top_k),
                             "liveness": bool(liveness),
                             "interval": float(interval)}
+
+    def enable_replicas(self, k: int = 1, *, followers: list[str] | None = None,
+                        race: bool = False, race_band: float = 0.25,
+                        race_threshold: float = 0.35, rate: float = 50e6,
+                        interval: float = 1.0) -> None:
+        """Replica plane: every session keeps ``k`` follower namespaces
+        converged during think time (a background sync process on the event
+        loop, mirroring the trickle proc) so a primary failure promotes the
+        most-converged follower and replays only the unconverged tail —
+        zero cells when it had caught up.  ``followers`` pins the follower
+        envs explicitly; otherwise the first ``k`` non-home compute envs
+        (sorted) follow each session.  ``race=True`` adds first-result-wins
+        cell racing on top (see :class:`repro.core.replica.SessionReplicaSet`).
+        ``k=0`` without explicit followers is a no-op — today's behavior."""
+        k = int(k)
+        if k < 0:
+            raise ValueError(f"replicas must be >= 0, got {k}")
+        if followers is not None and len(set(followers)) != len(followers):
+            raise ValueError(f"duplicate follower envs: {followers}")
+        if k == 0 and not followers:
+            self.replica_cfg = None
+            return
+        self.replica_cfg = {"k": k, "followers": list(followers or []),
+                            "race": bool(race), "race_band": float(race_band),
+                            "race_threshold": float(race_threshold),
+                            "rate": float(rate), "interval": float(interval)}
+
+    def _pick_followers(self, rt: HybridRuntime) -> list[str]:
+        cfg = self.replica_cfg
+        if cfg["followers"]:
+            return [f for f in cfg["followers"] if f in rt.registry]
+        cands = sorted(n for n, e in rt.registry.envs().items()
+                       if e.kind == "compute" and n != rt.home)
+        return cands[:cfg["k"]]
 
     # ------------------------------------------------------------------
     def add_session(self, runtime: HybridRuntime, plan, *,
@@ -789,14 +840,42 @@ class SessionScheduler:
                          for ref in s.plan[s.cursor:]]
             s.rep.step(now, remaining_sources=remaining)
 
+    def _replica_proc(self, s: _Session):
+        """Per-session follower-convergence process: wakes every
+        ``interval`` seconds of think time (same idle guard as the trickle
+        proc) and ships the primary's committed delta to each follower,
+        applying it there.  Runs at priority 1001 — after a same-instant
+        trickle step — so whatever the trickle just banked at a follower is
+        claimed manifest-only instead of re-serialized (the dedupe)."""
+        interval = self.replica_cfg["interval"]
+        while not s.done():
+            yield interval
+            if s.done():
+                break
+            rt = s.runtime
+            now = self._loop.now()
+            if now < s.arrival or rt.clock.now() > now + 1e-9:
+                continue           # not arrived yet, or mid-cell
+            s.replicas.sync(now)
+
     def _recover(self, s: _Session, idx: int, e: EnvFailure,
                  predicted: dict[str, float]) -> None:
-        """Failure recovery: detection (heartbeat miss window), then either
-        checkpoint restore + replay-since-checkpoint or rerun-from-home."""
+        """Failure recovery: detection (heartbeat miss window), then — in
+        preference order — follower promotion (replay only the unconverged
+        tail), checkpoint restore + replay-since-checkpoint, or
+        rerun-from-home."""
         s.recoveries += 1
         rt = s.runtime
         rt.recover_from_failure(e.env)
         rt.clock.advance(self.detect_delay)
+        if s.replicas is not None:
+            res = s.replicas.promote(e.env, rt.clock.now())
+            if res is not None:
+                _follower, replay = res
+                s.cursor = max(0, s.cursor - replay)
+                self._loop.call_at(rt.clock.now(), self._step, s, idx,
+                                   predicted, priority=idx)
+                return
         if self.recovery == "checkpoint" and s.ckpt is not None \
                 and s.ckpt.saves > 0:
             wire, seconds = s.ckpt.restore(rt.clock.now())
@@ -857,6 +936,18 @@ class SessionScheduler:
                 # first, so the trickle sees the post-cell namespace
                 loop.process(self._trickle_proc(s), priority=1000,
                              delay=max(s.arrival, cfg["interval"]))
+        if self.replica_cfg is not None:
+            cfg = self.replica_cfg
+            for s in self._sessions:
+                followers = self._pick_followers(s.runtime)
+                if not followers:
+                    continue
+                s.replicas = s.runtime.attach_replicas(
+                    followers, race=cfg["race"],
+                    race_band=cfg["race_band"],
+                    race_threshold=cfg["race_threshold"], rate=cfg["rate"])
+                loop.process(self._replica_proc(s), priority=1001,
+                             delay=max(s.arrival, cfg["interval"]))
         for env, at, recover_after in self._failures:
             loop.call_at(at, self._fail_env, env, at, recover_after,
                          priority=-10)
@@ -887,7 +978,17 @@ class SessionScheduler:
                 trickled_bytes=s.rep.trickled_bytes if s.rep else 0,
                 trickle_claimed_bytes=s.rep.claimed_bytes if s.rep else 0,
                 wasted_bytes=getattr(s.runtime.engine,
-                                     "prefetch_wasted_bytes", 0)))
+                                     "prefetch_wasted_bytes", 0),
+                replica_lag=s.replicas.lag() if s.replicas else 0,
+                replicated_bytes=(s.replicas.replicated_bytes
+                                  if s.replicas else 0),
+                replica_shared_bytes=(s.replicas.shared_bytes
+                                      if s.replicas else 0),
+                promotions=s.replicas.promotions if s.replicas else 0,
+                races=s.replicas.races if s.replicas else 0,
+                race_wins=dict(s.replicas.race_wins) if s.replicas else {},
+                race_waste_seconds=(s.replicas.race_waste_seconds
+                                    if s.replicas else 0.0)))
         util = {n: self.arbiter.utilization(n) for n in self.registry.names()}
         makespan = max((r.makespan for r in reports), default=0.0)
         return ScheduleReport(
@@ -912,4 +1013,10 @@ class SessionScheduler:
             trickled_bytes=sum(r.trickled_bytes for r in reports),
             trickle_claimed_bytes=sum(r.trickle_claimed_bytes
                                       for r in reports),
-            wasted_speculation_bytes=sum(r.wasted_bytes for r in reports))
+            wasted_speculation_bytes=sum(r.wasted_bytes for r in reports),
+            replicated_bytes=sum(r.replicated_bytes for r in reports),
+            replica_shared_bytes=sum(r.replica_shared_bytes
+                                     for r in reports),
+            promotions=sum(r.promotions for r in reports),
+            races=sum(r.races for r in reports),
+            race_waste_seconds=sum(r.race_waste_seconds for r in reports))

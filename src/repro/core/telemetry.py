@@ -33,6 +33,11 @@ ENV_LIFECYCLE = "env-lifecycle"
 ENV_FAILED = "env-failed"
 SESSION_CHECKPOINTED = "session-checkpointed"
 SESSION_RECOVERED = "session-recovered"
+# replica plane: converged followers, zero-replay promotion, cell racing
+STATE_REPLICATED = "state-replicated"
+SESSION_PROMOTED = "session-promoted"
+CELL_RACED = "cell-raced"
+CELL_RACE_CANCELLED = "cell-race-cancelled"
 
 ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
              CELL_EXECUTION_STARTED, CELL_EXECUTION_COMPLETED, CELL_MODIFIED,
@@ -40,7 +45,9 @@ ALL_TYPES = (SESSION_STARTED, SESSION_DISPOSED, CELL_EXECUTION_REQUESTED,
              STATE_PREFETCH_CANCELLED, STATE_TRICKLED,
              STATE_TRICKLE_CANCELLED, STATE_TRICKLE_CLAIMED,
              ENV_LIFECYCLE, ENV_FAILED,
-             SESSION_CHECKPOINTED, SESSION_RECOVERED)
+             SESSION_CHECKPOINTED, SESSION_RECOVERED,
+             STATE_REPLICATED, SESSION_PROMOTED,
+             CELL_RACED, CELL_RACE_CANCELLED)
 
 
 @dataclass(frozen=True)

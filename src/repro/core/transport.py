@@ -350,6 +350,18 @@ class WireReceiver:
         self.streams_applied = 0
         self.streams_cancelled = 0
         self.streams_trickled = 0
+        # replica plane: convergence watermark this namespace has applied
+        # (commit sequence of the last REPLICA stream that fully landed)
+        self.replica_epoch = 0
+        self._replica_pending_epoch: int | None = None
+        self.replicas_applied = 0
+        self.promotions = 0
+        # first-result-wins racing: ids whose CANCEL already arrived — a
+        # late "run" for a cancelled race must NOT execute (the wire-level
+        # guarantee that a lost race cannot clobber committed state)
+        self._races_cancelled: set[str] = set()
+        self.races_run = 0
+        self.races_cancelled = 0
 
     # -- helpers --------------------------------------------------------
     def _apply_pending(self) -> list[str]:
@@ -403,6 +415,11 @@ class WireReceiver:
             if self._pending_trickle:
                 ack_doc["trickle"] = True
             self._pending_trickle = False
+            if self._replica_pending_epoch is not None:
+                # the convergence delta fully landed: advance the watermark
+                self.replica_epoch = self._replica_pending_epoch
+                self._replica_pending_epoch = None
+                self.replicas_applied += 1
             transport.send(wire.json_frame(wire.ACK, ack_doc))
         elif t == wire.CANCEL:
             # in-flight cancellation: the stream's chunks stay banked
@@ -413,6 +430,7 @@ class WireReceiver:
             self._pending = None
             self._pending_chunks = {}
             self._pending_trickle = False
+            self._replica_pending_epoch = None
         elif t == wire.EXEC:
             req = wire.parse_json(frame)
             t0 = time.perf_counter()
@@ -425,6 +443,50 @@ class WireReceiver:
                 return True
             transport.send(wire.json_frame(
                 wire.RESULT, {"duration": time.perf_counter() - t0}))
+        elif t == wire.REPLICA:
+            # convergence-delta header: drop the announced tombstones now
+            # (mid-stream deletions converge even when the residual delta
+            # is empty) and stage the watermark — committed at END, so a
+            # cancelled stream never overstates convergence
+            doc = wire.parse_replica(frame)
+            self.state.drop(doc["deleted"])
+            self._replica_pending_epoch = doc["epoch"]
+        elif t == wire.PROMOTE:
+            # failover handshake: reply with the watermark this namespace
+            # actually converged to — a stale promoter learns the residual
+            _session, _epoch = wire.parse_promote(frame)
+            self.promotions += 1
+            transport.send(wire.json_frame(
+                wire.RESULT, {"epoch": self.replica_epoch}))
+        elif t == wire.RACE:
+            doc = wire.parse_race(frame)
+            if doc["action"] == "cancel":
+                self._races_cancelled.add(doc["id"])
+                self.races_cancelled += 1
+            elif doc["id"] in self._races_cancelled:
+                # the CANCEL raced ahead of the run: do NOT execute — a
+                # lost race must never touch this namespace
+                transport.send(wire.json_frame(
+                    wire.RESULT, {"id": doc["id"], "cancelled": True}))
+            else:
+                # a race leg runs against an OVERLAY of the namespace and
+                # the overlay is discarded: only the committing (winner)
+                # path — a normal EXEC/migration — mutates real state, so
+                # the committed result is bit-identical to a solo run
+                self.races_run += 1
+                overlay = dict(self.state.ns)
+                t0 = time.perf_counter()
+                try:
+                    exec(compile(doc["source"], "<race>", "exec"),  # noqa: S102
+                         overlay)
+                except Exception as e:  # noqa: BLE001 — back as RESULT
+                    transport.send(wire.json_frame(wire.RESULT, {
+                        "id": doc["id"],
+                        "error": f"{type(e).__name__}: {e}"}))
+                    return True
+                transport.send(wire.json_frame(wire.RESULT, {
+                    "id": doc["id"],
+                    "duration": time.perf_counter() - t0}))
         elif t == wire.FETCH:
             self._serve_fetch(wire.parse_json(frame), transport)
         elif t == wire.BYE:
@@ -626,6 +688,43 @@ class MigrationPeer:
         future transports that stream asynchronously."""
         with self._lock:
             self.transport.send(Frame(wire.CANCEL))
+
+    # -- replica plane ---------------------------------------------------
+    def replicate(self, session: str, epoch: int, ser, *,
+                  deleted=()) -> StreamStats:
+        """Ship a convergence delta: a REPLICA header (session, commit
+        epoch, tombstones) followed by a normal non-speculative state
+        stream the receiver *applies* — the remote watermark advances when
+        the stream's END lands."""
+        with self._lock:
+            self.transport.send(wire.replica_frame(session, epoch,
+                                                   deleted=deleted))
+        return self.send_state(ser)
+
+    def promote(self, session: str, epoch: int) -> int:
+        """Failover handshake: returns the follower's own convergence
+        watermark (authoritative — a stale promoter learns the residual)."""
+        with self._lock:
+            self.transport.send(wire.promote_frame(session, epoch))
+            doc = wire.parse_json(_expect(self.transport.recv(), wire.RESULT))
+        return int(doc.get("epoch", 0))
+
+    def race(self, race_id: str, source: str) -> int:
+        """Launch the losing-capable leg of a first-result-wins race; the
+        remote side executes against a discarded overlay and replies with a
+        RESULT tagged by the race id (or ``cancelled`` when the CANCEL got
+        there first).  Returns the wire bytes the leg cost."""
+        with self._lock:
+            sent0 = self.transport.bytes_sent
+            self.transport.send(wire.race_frame(race_id, "run", source))
+            wire.parse_json(_expect(self.transport.recv(), wire.RESULT))
+            return self.transport.bytes_sent - sent0
+
+    def race_cancel(self, race_id: str) -> None:
+        """The other leg won (or the race was aborted): a late ``run`` for
+        this id must not execute on the remote side."""
+        with self._lock:
+            self.transport.send(wire.race_frame(race_id, "cancel"))
 
     def close(self) -> None:
         if self._closed:

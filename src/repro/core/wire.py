@@ -67,15 +67,19 @@ BYE = 12         # close the session
 ATTACH = 13      # JSON: gateway session attach request (tenant, notebook)
 DETACH = 14      # JSON: {"session": str, "reason": str}
 STREAM = 15      # mux envelope: u32_le stream_id + one complete inner frame
+REPLICA = 16     # JSON: replica-plane delta header (session, epoch, deleted)
+PROMOTE = 17     # JSON: {"session": str, "epoch": int} — failover handshake
+RACE = 18        # JSON: {"id": str, "action": "run"|"cancel", "source": str}
 
 FRAME_TYPES = frozenset((HELLO, MANIFEST, CHUNK, ACK, TOMBSTONE, END,
                          CANCEL, ERROR, EXEC, RESULT, FETCH, BYE,
-                         ATTACH, DETACH, STREAM))
+                         ATTACH, DETACH, STREAM, REPLICA, PROMOTE, RACE))
 TYPE_NAMES = {HELLO: "HELLO", MANIFEST: "MANIFEST", CHUNK: "CHUNK",
               ACK: "ACK", TOMBSTONE: "TOMBSTONE", END: "END",
               CANCEL: "CANCEL", ERROR: "ERROR", EXEC: "EXEC",
               RESULT: "RESULT", FETCH: "FETCH", BYE: "BYE",
-              ATTACH: "ATTACH", DETACH: "DETACH", STREAM: "STREAM"}
+              ATTACH: "ATTACH", DETACH: "DETACH", STREAM: "STREAM",
+              REPLICA: "REPLICA", PROMOTE: "PROMOTE", RACE: "RACE"}
 
 _HEADER = struct.Struct("<IB")        # payload_len, frame_type
 _CRC = struct.Struct("<I")
@@ -574,3 +578,71 @@ def parse_stream(frame: Frame) -> tuple[int, Frame]:
             f"CRC mismatch on mux'd {TYPE_NAMES[ftype]} frame "
             f"(got {crc:#010x}, want {want:#010x})")
     return sid, Frame(ftype, payload)
+
+
+# ----------------------------------------------------------------------
+# replica plane: REPLICA / PROMOTE / RACE (additive — v1 byte-stable)
+# ----------------------------------------------------------------------
+
+def replica_frame(session: str, epoch: int, *,
+                  deleted: Iterable[str] = ()) -> Frame:
+    """Replica-plane delta header: announces that the state stream which
+    follows is a *convergence* delta for ``session`` up to cell ``epoch``
+    (commit sequence number).  ``deleted`` carries names tombstoned since
+    the follower's last watermark, so mid-stream deletions converge too."""
+    return json_frame(REPLICA, {"session": str(session), "epoch": int(epoch),
+                                "deleted": sorted(deleted)})
+
+
+def parse_replica(frame: Frame) -> dict:
+    if frame.ftype != REPLICA:
+        raise WireError(f"expected REPLICA, got {TYPE_NAMES.get(frame.ftype)}")
+    doc = parse_json(frame)
+    try:
+        return {"session": str(doc["session"]), "epoch": int(doc["epoch"]),
+                "deleted": tuple(str(n) for n in doc.get("deleted", ()))}
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireError(f"malformed REPLICA: {e!r}") from None
+
+
+def promote_frame(session: str, epoch: int) -> Frame:
+    """Failover handshake: the scheduler promotes this follower to primary
+    for ``session``.  ``epoch`` is the commit sequence the promoter believes
+    the follower has converged to; the follower replies RESULT with its own
+    watermark so a stale promoter learns the real residual."""
+    return json_frame(PROMOTE, {"session": str(session), "epoch": int(epoch)})
+
+
+def parse_promote(frame: Frame) -> tuple[str, int]:
+    if frame.ftype != PROMOTE:
+        raise WireError(f"expected PROMOTE, got {TYPE_NAMES.get(frame.ftype)}")
+    doc = parse_json(frame)
+    try:
+        return str(doc["session"]), int(doc["epoch"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireError(f"malformed PROMOTE: {e!r}") from None
+
+
+def race_frame(race_id: str, action: str, source: str = "") -> Frame:
+    """First-result-wins cell race.  ``action`` is ``"run"`` (execute
+    ``source``, reply RESULT tagged with the race id) or ``"cancel"``
+    (the other leg won; drop the race — a late ``run`` for a cancelled id
+    must NOT execute, which is the wire-level clobber protection)."""
+    if action not in ("run", "cancel"):
+        raise WireError(f"bad RACE action {action!r} (want run|cancel)")
+    return json_frame(RACE, {"id": str(race_id), "action": action,
+                             "source": str(source)})
+
+
+def parse_race(frame: Frame) -> dict:
+    if frame.ftype != RACE:
+        raise WireError(f"expected RACE, got {TYPE_NAMES.get(frame.ftype)}")
+    doc = parse_json(frame)
+    try:
+        action = str(doc["action"])
+        if action not in ("run", "cancel"):
+            raise ValueError(f"bad action {action!r}")
+        return {"id": str(doc["id"]), "action": action,
+                "source": str(doc.get("source", ""))}
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireError(f"malformed RACE: {e!r}") from None

@@ -8,7 +8,8 @@
         [--fleet 4] [--arrivals 0.2] [--think-time 5] [--seed 0] \
         [--fail-env remote:30] [--autoscale] [--recovery checkpoint] \
         [--transport loopback|socket] \
-        [--replicate] [--trickle-rate 50MB/s] [--liveness on|off]
+        [--replicate] [--trickle-rate 50MB/s] [--liveness on|off] \
+        [--replicas K] [--race on|off]
 
 ``--transport socket`` is the two-process demo: the remote env runs as a
 child Python process and every migration genuinely streams CRC-framed
@@ -22,6 +23,14 @@ the most likely next environments at ``--trickle-rate`` bytes/second, so a
 later migration ships only the residual delta.  ``--liveness off`` disables
 the dead-name pruning that otherwise bounds what trickles and what
 full-state return trips carry.
+
+``--replicas K`` (fleet only) turns on the replica plane: each session
+keeps K follower namespaces converged during think time, so a primary
+failure *promotes* the most-converged follower and replays only the
+unconverged tail — zero cells when it had caught up — instead of paying a
+checkpoint restore or a full rerun.  ``--race on`` adds first-result-wins
+cell racing on top of the converged followers.  ``--replicas 0`` (the
+default) is today's behavior exactly.
 
 Cells execute for real (exec against the session namespace); timing follows
 the paper's forced-speedup protocol when cells carry a
@@ -196,7 +205,8 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  checkpoint_interval: float = 30.0,
                  transport: str = "loopback",
                  replicate: bool = False, trickle_rate: float = 50e6,
-                 liveness: bool = True) -> dict:
+                 liveness: bool = True, replicas: int = 0,
+                 race: bool = False) -> dict:
     with open(path) as f:
         nb = Notebook.from_ipynb(json.load(f))
     if transport == "socket":
@@ -218,11 +228,17 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         raise ValueError(
             "--replicate needs --fleet: think-time trickling runs as a "
             "background process on the scheduler's event loop")
+    if replicas and not fleet:
+        raise ValueError(
+            "--replicas needs --fleet: follower convergence runs as a "
+            "background process on the scheduler's event loop")
 
     if fleet:
         sched = SessionScheduler(registry)
         if replicate:
             sched.enable_replication(rate=trickle_rate, liveness=liveness)
+        if replicas:
+            sched.enable_replicas(replicas, race=race)
         if recovery:
             sched.enable_recovery(recovery, interval=checkpoint_interval)
         if autoscale:
@@ -276,6 +292,12 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
             "trickled_bytes": rep.trickled_bytes,
             "trickle_claimed_bytes": rep.trickle_claimed_bytes,
             "wasted_speculation_bytes": rep.wasted_speculation_bytes,
+            "replicas": replicas,
+            "replicated_bytes": rep.replicated_bytes,
+            "replica_shared_bytes": rep.replica_shared_bytes,
+            "promotions": rep.promotions,
+            "races": rep.races,
+            "race_waste_seconds": rep.race_waste_seconds,
             "per_session": [
                 {"session": s.session[:12], "makespan": s.makespan,
                  "arrival": s.arrival, "think_time": s.think_time,
@@ -283,6 +305,10 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  "recoveries": s.recoveries,
                  "trickled_bytes": s.trickled_bytes,
                  "trickle_claimed_bytes": s.trickle_claimed_bytes,
+                 "replica_lag": s.replica_lag,
+                 "promotions": s.promotions,
+                 "races": s.races, "race_wins": s.race_wins,
+                 "race_waste_seconds": s.race_waste_seconds,
                  "prediction_hit_rate": s.prediction_hit_rate}
                 for s in rep.sessions],
         }
@@ -329,6 +355,19 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         "provenance_records": len(rt.kb.provenance),
     }
     return report, nb
+
+
+class _OnceAction(argparse.Action):
+    """Reject a flag given more than once (a silently-overridden repeat of
+    ``--replicas`` is almost always a typo in a long fleet command line)."""
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        if getattr(namespace, f"_seen_{self.dest}", False):
+            parser.error(f"{option_string} given more than once "
+                         f"(got {getattr(namespace, self.dest)!r} "
+                         f"then {values!r})")
+        setattr(namespace, f"_seen_{self.dest}", True)
+        setattr(namespace, self.dest, values)
 
 
 def main():
@@ -392,6 +431,15 @@ def main():
                     help="prune provably-dead names from trickle and "
                          "full-state moves (live-variable analysis over "
                          "the remaining cells; default on)")
+    ap.add_argument("--replicas", type=int, default=0, metavar="K",
+                    action=_OnceAction,
+                    help="fleet: keep K follower namespaces converged "
+                         "during think time; a primary failure promotes "
+                         "the most-converged follower with zero replay "
+                         "(0 = off, today's behavior)")
+    ap.add_argument("--race", choices=["on", "off"], default="off",
+                    help="first-result-wins cell racing on converged "
+                         "followers (requires --replicas >= 1)")
     ap.add_argument("--report", default=None)
     ap.add_argument("--write-annotated", default=None,
                     help="write the notebook back with decision annotations")
@@ -432,6 +480,17 @@ def main():
             raise ValueError(
                 "--replicate rides the fleet plane and is incompatible "
                 "with --transport socket (the two-process demo)")
+        if args.replicas < 0:
+            raise ValueError(
+                f"--replicas must be >= 0 (got {args.replicas})")
+        if args.replicas and not args.fleet:
+            raise ValueError(
+                "--replicas needs --fleet: follower convergence runs on "
+                "the scheduler's event loop (try --fleet 2 --think-time 5)")
+        if args.race == "on" and not args.replicas:
+            raise ValueError(
+                "--race on races cells against converged followers and "
+                "needs --replicas >= 1")
     except ValueError as e:
         ap.error(str(e))
 
@@ -446,7 +505,8 @@ def main():
         autoscale=args.autoscale, recovery=args.recovery,
         checkpoint_interval=args.checkpoint_interval,
         transport=args.transport, replicate=args.replicate,
-        trickle_rate=trickle_rate, liveness=args.liveness == "on")
+        trickle_rate=trickle_rate, liveness=args.liveness == "on",
+        replicas=args.replicas, race=args.race == "on")
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))

@@ -21,6 +21,10 @@ WireFrontend):
         --tenants alice:2,bob:1 --quota 16 --warm-pool 8 \
         --max-sessions 64
     PYTHONPATH=src python -m repro.launch.serve --gateway 0 --stress 2000
+
+``--replicas K`` (gateway or notebook-fleet mode) keeps K follower
+namespaces converged per session — failures promote instead of replaying —
+and ``--race on`` adds first-result-wins cell racing on top.
 """
 from __future__ import annotations
 
@@ -77,7 +81,8 @@ def serve_gateway(n_sessions: int, *, tenants=None, quota: int | None = None,
                   warm_pool: int = 8, max_sessions: int | None = None,
                   stress: int = 0, rate: float = 50.0,
                   think_mean: float = 20.0, cold_start: float = 5.0,
-                  gpu_capacity: int = 16, seed: int = 0) -> dict:
+                  gpu_capacity: int = 16, seed: int = 0,
+                  replicas: int = 0, race: bool = False) -> dict:
     """Run the persistent gateway over the 3-env fabric.  Plain mode
     attaches ``n_sessions`` programmatically; ``stress`` > 0 additionally
     drives that many sessions as real ATTACH frames over a wire frontend
@@ -95,8 +100,8 @@ def serve_gateway(n_sessions: int, *, tenants=None, quota: int | None = None,
     reg.connect("local", "gpu-cloud", bandwidth=5e8, latency=0.3)
     reg.connect("local", "tpu-mesh", bandwidth=1e8, latency=1.0)
     gw = GatewayService(reg, warm_pool=warm_pool, cold_start=cold_start,
-                        max_sessions=max_sessions, policy="cost",
-                        use_knowledge=False)
+                        max_sessions=max_sessions, replicas=replicas,
+                        race=race, policy="cost", use_knowledge=False)
     names = []
     for name, weight, tquota in (tenants or [("default", 1.0, None)]):
         gw.add_tenant(name, weight=weight,
@@ -137,11 +142,18 @@ def serve_gateway(n_sessions: int, *, tenants=None, quota: int | None = None,
         "tenants": rep.tenants,
         "env_utilization": rep.env_utilization,
         "wire_sessions": stress,
+        "replicas": replicas,
+        "promotions": rep.promotions,
+        "races": rep.races,
+        "race_waste_seconds": rep.race_waste_seconds,
+        "replica_lag_max": max(
+            (r.replica_lag for r in rep.session_reports), default=0),
     }
 
 
 def serve_notebook_fleet(n_sessions: int, *, gpu_capacity: int = 2,
-                         tpu_capacity: int = 1) -> dict:
+                         tpu_capacity: int = 1, replicas: int = 0,
+                         race: bool = False) -> dict:
     """N synthetic data-science sessions over a shared 3-env fabric."""
     from repro.core import (
         EnvironmentRegistry, ExecutionEnvironment, Notebook, SessionScheduler,
@@ -156,6 +168,8 @@ def serve_notebook_fleet(n_sessions: int, *, gpu_capacity: int = 2,
     reg.connect("local", "gpu-cloud", bandwidth=5e8, latency=0.3)
     reg.connect("local", "tpu-mesh", bandwidth=1e8, latency=1.0)
     sched = SessionScheduler(reg)
+    if replicas:
+        sched.enable_replicas(replicas, race=race)
     for i in range(n_sessions):
         nb = Notebook(f"user-{i}")
         nb.add_cell("import numpy as np\n"
@@ -171,6 +185,13 @@ def serve_notebook_fleet(n_sessions: int, *, gpu_capacity: int = 2,
         "queue_events": rep.queue_events,
         "total_queue_wait": rep.total_queue_wait,
         "env_utilization": rep.env_utilization,
+        "replicas": replicas,
+        "replicated_bytes": rep.replicated_bytes,
+        "promotions": rep.promotions,
+        "races": rep.races,
+        "race_waste_seconds": rep.race_waste_seconds,
+        "replica_lag": {s.session: s.replica_lag for s in rep.sessions
+                        if s.replica_lag},
         "sessions_per_modeled_hour": (
             n_sessions / rep.makespan * 3600 if rep.makespan else 0.0),
     }
@@ -209,7 +230,27 @@ def main():
                          "of real ATTACH frames over a wire frontend")
     ap.add_argument("--rate", type=float, default=50.0,
                     help="gateway storm arrival rate (sessions/s)")
+    ap.add_argument("--replicas", type=int, default=0, metavar="K",
+                    help="keep K follower namespaces converged per session "
+                         "(fleet/gateway modes; 0 = off)")
+    ap.add_argument("--race", choices=["on", "off"], default="off",
+                    help="first-result-wins cell racing on converged "
+                         "followers (requires --replicas >= 1)")
     args = ap.parse_args()
+
+    try:
+        positive_int("--replicas", args.replicas, allow_zero=True)
+        if args.race == "on" and not args.replicas:
+            raise ValueError(
+                "--race on races cells against converged followers and "
+                "needs --replicas >= 1")
+        if args.replicas and args.gateway is None \
+                and not args.notebook_fleet:
+            raise ValueError(
+                "--replicas applies to --gateway or --notebook-fleet "
+                "serving modes only")
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.gateway is not None:
         try:
@@ -231,7 +272,8 @@ def main():
         report = serve_gateway(
             args.gateway, tenants=tenants, quota=args.quota,
             warm_pool=args.warm_pool, max_sessions=args.max_sessions,
-            stress=args.stress, rate=args.rate, seed=args.seed)
+            stress=args.stress, rate=args.rate, seed=args.seed,
+            replicas=args.replicas, race=args.race == "on")
         print(json.dumps(report, indent=2))
         print("ok")
         return
@@ -239,7 +281,8 @@ def main():
     if args.notebook_fleet:
         report = serve_notebook_fleet(
             args.notebook_fleet, gpu_capacity=args.fleet_gpu_capacity,
-            tpu_capacity=args.fleet_tpu_capacity)
+            tpu_capacity=args.fleet_tpu_capacity,
+            replicas=args.replicas, race=args.race == "on")
         print(json.dumps(report, indent=2))
         print("ok")
         return

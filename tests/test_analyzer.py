@@ -206,3 +206,22 @@ def test_horizon_memo_scope_is_one_decision():
             ctxd.record("nb", o)
     d_hot = an.decide(nb, cells[0], current_env="local", peek=True)
     assert d_hot.env == "remote"                    # fresh history respected
+
+
+def test_offload_target_all_candidates_down_falls_back_home():
+    """Every non-home env failed: placement stays put instead of crashing
+    (regression: offload_target() indexed an empty candidate list, so any
+    policy decision after the fleet's only offload env died raised)."""
+    from repro.core import EnvironmentRegistry, ExecutionEnvironment
+    reg = EnvironmentRegistry()
+    reg.register(ExecutionEnvironment("local"), home=True)
+    reg.register(ExecutionEnvironment("remote", speedup=10.0))
+    an = MigrationAnalyzer(KnowledgeBase(), ContextDetector(), PerfModel(),
+                           registry=reg)
+    assert an.offload_target() == "remote"
+    reg.set_status("remote", "failed")
+    assert an.offload_target() == "local"
+    nb = Notebook("nb")
+    cell = nb.add_cell("x = 1", cost=1.0)
+    d = an.decide(nb, cell, current_env="local")
+    assert d.env == "local" and not d.migrate

@@ -1,0 +1,368 @@
+"""Replica plane: follower convergence (tombstones included), zero-replay
+promotion, trickle-bank dedupe, first-result-wins racing (bit-identical
+commits, cancel-before-run protection), and the degenerate K=0 case."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EnvironmentRegistry, ExecutionEnvironment, HybridRuntime, Notebook,
+    SessionScheduler, StateReducer,
+)
+from repro.core import telemetry as T
+from repro.core import wire
+from repro.core.transport import attach_peer
+
+
+def _runtime(followers=("standby",), *, race=False, replicator=False,
+             extra_envs=(), **kw):
+    nb = Notebook("replica-demo")
+    nb.add_cell("import numpy as np\n"
+                "a = np.arange(4000, dtype=np.float64)\n"
+                "b = np.arange(100, dtype=np.float64)", cost=0.1)
+    nb.add_cell("c = float(a.sum() + b.sum())", cost=30.0)
+    nb.add_cell("d = c + 1", cost=0.1)
+    envs = {"local": ExecutionEnvironment("local"),
+            "standby": ExecutionEnvironment("standby", speedup=10.0)}
+    for name in extra_envs:
+        envs[name] = ExecutionEnvironment(name, speedup=10.0)
+    rt = HybridRuntime(nb, envs=envs, policy="cost", use_knowledge=False,
+                       latency=0.01, bandwidth=1e6, **kw)
+    rep = rt.attach_replicator(rate=1e9, top_k=2) if replicator else None
+    rs = rt.attach_replicas(list(followers), race=race, rate=1e9)
+    return nb, rt, rs, rep
+
+
+# -- follower convergence ----------------------------------------------
+
+
+def test_follower_converges_and_watermark_advances():
+    nb, rt, rs, _ = _runtime()
+    rt.run_cell(0)
+    assert rs.commit_seq == 1 and rs.lag("standby") == 1
+    shipped = rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    assert shipped > 0
+    assert rs.watermark["standby"] == rs.commit_seq == 1
+    assert rs.lag() == 0
+    np.testing.assert_array_equal(rt.envs["standby"].state["a"],
+                                  rt.envs["local"].state["a"])
+    msgs = [m for m in rt.bus.messages() if m.type == T.STATE_REPLICATED]
+    assert msgs and msgs[-1].payload["watermark"] == 1
+    rt.close()
+
+
+def test_follower_converges_under_midstream_tombstones():
+    """A name deleted on the primary after it replicated must disappear
+    from the follower on the next sync — even when nothing else is dirty."""
+    nb, rt, rs, _ = _runtime()
+    rt.run_cell(0)
+    rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    assert "b" in rt.envs["standby"].state.ns
+    rt.envs["local"].execute("del b")
+    rt.envs["local"].state.mark_dirty([])
+    rs.sync(rt.clock.now() + 2.0, budget_bytes=1 << 30)
+    assert "b" not in rt.envs["standby"].state.ns
+    assert "a" in rt.envs["standby"].state.ns
+    msgs = [m for m in rt.bus.messages() if m.type == T.STATE_REPLICATED]
+    assert "b" in msgs[-1].payload["deleted"]
+    rt.close()
+
+
+def test_budget_paces_convergence_but_always_progresses():
+    nb, rt, rs, _ = _runtime()
+    rt.run_cell(0)
+    # tiny budget: at least one name still ships (progress guarantee),
+    # but the follower does not fully converge in one wakeup
+    shipped = rs.sync(rt.clock.now() + 1.0, budget_bytes=1)
+    assert shipped > 0
+    assert rs.lag("standby") == 1          # not converged yet
+    rs.sync(rt.clock.now() + 2.0, budget_bytes=1 << 30)
+    assert rs.lag("standby") == 0
+    rt.close()
+
+
+# -- dedupe with the trickle bank (satellite 1) -------------------------
+
+
+def test_replica_claims_trickle_bank_no_double_bytes():
+    """When a follower is also a trickle destination, each dirty chunk
+    crosses once: the replica sync claims the banked copy manifest-only,
+    and the next trickle step ships zero new bytes for those names."""
+    nb, rt, rs, rep = _runtime(replicator=True)
+    rt.run_cell(0)
+    rep.step(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    assert "a" in rep.banked.get("standby", {})
+    trickled_before = rep.trickled_bytes
+    rs.sync(rt.clock.now() + 2.0, budget_bytes=1 << 30)
+    # the sync claimed the bank instead of re-serializing: shared bytes
+    # grew, fresh replication bytes did not
+    assert rs.shared_bytes > 0
+    assert rs.replicated_bytes == 0
+    assert "a" not in rep.banked.get("standby", {})
+    assert "a" in rt.envs["standby"].state.ns
+    # and the trickle ledger carries no double bytes: a second trickle
+    # step sees the synced digests as already-known and ships nothing
+    rep.step(rt.clock.now() + 3.0, budget_bytes=1 << 30)
+    assert rep.trickled_bytes == trickled_before
+    rt.close()
+
+
+def test_trickle_after_replica_sync_ships_nothing():
+    """The other direction of the dedupe: names the replica set already
+    applied never trickle again (the replicator's effective-known view
+    includes the synced digests)."""
+    nb, rt, rs, rep = _runtime(replicator=True)
+    rt.run_cell(0)
+    rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    assert rs.replicated_bytes > 0
+    shipped = rep.step(rt.clock.now() + 2.0, budget_bytes=1 << 30)
+    assert shipped == 0
+    assert "a" not in rep.banked.get("standby", {})
+    rt.close()
+
+
+# -- promotion ----------------------------------------------------------
+
+
+def test_zero_replay_promotion_of_converged_follower():
+    nb, rt, rs, _ = _runtime()
+    rt.run_cell(0)
+    rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    res = rs.promote("local", rt.clock.now())
+    assert res == ("standby", 0)           # converged: nothing to replay
+    assert rt.current_env == "standby"
+    assert rs.promotions == 1
+    msgs = [m for m in rt.bus.messages() if m.type == T.SESSION_PROMOTED]
+    assert msgs[-1].payload["replay"] == 0
+    rt.close()
+
+
+def test_promotion_applies_residual_bank_and_reports_replay():
+    """An unconverged follower still promotes: the banked trickle applies
+    manifest-only and the replay count covers the unconverged tail."""
+    nb, rt, rs, rep = _runtime(replicator=True)
+    rt.run_cell(0)
+    rep.step(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    assert "a" in rep.banked.get("standby", {})
+    assert "a" not in rt.envs["standby"].state.ns
+    res = rs.promote("local", rt.clock.now())
+    assert res is not None
+    follower, replay = res
+    assert follower == "standby" and replay == 1
+    # the residual bank landed in the promoted namespace
+    np.testing.assert_array_equal(rt.envs["standby"].state["a"],
+                                  rt.envs["local"].state["a"])
+    msgs = [m for m in rt.bus.messages() if m.type == T.SESSION_PROMOTED]
+    assert "a" in msgs[-1].payload["residual"]
+    rt.close()
+
+
+def test_promote_returns_none_without_live_follower():
+    nb, rt, rs, _ = _runtime()
+    rt.run_cell(0)
+    rt.envs["standby"].status = "failed"
+    assert rs.promote("local", rt.clock.now()) is None
+    rt.close()
+
+
+def test_forget_resets_dead_follower_watermark():
+    nb, rt, rs, _ = _runtime()
+    rt.run_cell(0)
+    rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    assert rs.watermark["standby"] == 1
+    rs.forget("standby")
+    assert rs.watermark["standby"] == 0
+    rt.close()
+
+
+# -- first-result-wins racing ------------------------------------------
+
+
+def _raced_runtime(race):
+    """Two equal-speed cloud envs: after a history-building first pass the
+    heavy cell prices identically on both, which is exactly the
+    within-band disagreement the race admission looks for."""
+    nb = Notebook("race-demo")
+    nb.add_cell("import numpy as np\n"
+                "a = np.arange(2000, dtype=np.float64)", cost=0.1)
+    nb.add_cell("t = float(a.sum())", cost=30.0)
+    nb.add_cell("u = t + 1", cost=0.1)
+    envs = {"local": ExecutionEnvironment("local"),
+            "fast-a": ExecutionEnvironment("fast-a", speedup=10.0),
+            "fast-b": ExecutionEnvironment("fast-b", speedup=10.0)}
+    rt = HybridRuntime(nb, envs=envs, policy="cost", use_knowledge=False,
+                       latency=0.01, bandwidth=1e8)
+    rs = rt.attach_replicas(["fast-a", "fast-b"], race=race, rate=1e9)
+    for _pass in range(2):
+        for order in range(3):
+            rt.run_cell(order)
+            rs.sync(rt.clock.now() + 1.0, budget_bytes=1 << 30)
+    return rt, rs
+
+
+def test_race_fires_and_commits_bit_identical_result():
+    solo_rt, solo_rs = _raced_runtime(race=False)
+    raced_rt, raced_rs = _raced_runtime(race=True)
+    assert solo_rs.races == 0
+    assert raced_rs.races >= 1
+    want = float(np.arange(2000, dtype=np.float64).sum())
+    for rt in (solo_rt, raced_rt):
+        env = next(e for e in rt.envs.values() if "t" in e.state.ns)
+        assert float(env.state["t"]) == want     # bit-identical commit
+        assert float(rt.envs[rt.current_env].state["u"]) == want + 1
+    assert sum(raced_rs.race_wins.values()) == raced_rs.races
+    assert raced_rs.race_waste_seconds >= 0.0
+    raced = [m for m in raced_rt.bus.messages() if m.type == T.CELL_RACED]
+    settled = [m for m in raced_rt.bus.messages()
+               if m.type == T.CELL_RACE_CANCELLED]
+    assert len(raced) == raced_rs.races == len(settled)
+    assert settled[-1].payload["committed"] == raced[-1].payload["winner"]
+    solo_rt.close()
+    raced_rt.close()
+
+
+def test_primary_failure_during_race_keeps_follower_state():
+    """Satellite 3: the loser CANCEL fired by a mid-race primary failure
+    must not clobber the (about to be promoted) follower's committed
+    state, and the subsequent promotion must succeed."""
+    rt, rs = _raced_runtime(race=True)
+    assert rs.races >= 1
+    # stage an in-flight race whose loser is the converged follower
+    from repro.core.replica import RaceTicket
+    rs._active_race = RaceTicket(
+        race_id="test-race-inflight", order=1, winner="fast-a",
+        loser="fast-b", winner_est=3.0, loser_est=3.0,
+        started_at=rt.clock.now(), policy_env="fast-a")
+    before = {n: rt.envs["fast-b"].state.ns[n]
+              for n in ("a", "t") if n in rt.envs["fast-b"].state.ns}
+    assert before                          # follower actually holds state
+    waste_before = rs.race_waste_seconds
+    rt.recover_from_failure("fast-a")
+    assert rs._active_race is None         # race aborted...
+    assert rs.race_waste_seconds == waste_before   # ...without waste
+    for n, v in before.items():            # ...and nothing clobbered
+        assert rt.envs["fast-b"].state.ns[n] is v
+    res = rs.promote("fast-a", rt.clock.now())
+    assert res is not None and res[0] == "fast-b"
+    rt.close()
+
+
+# -- RACE / REPLICA / PROMOTE over a live transport ---------------------
+
+
+def test_race_frames_round_trip():
+    f = wire.race_frame("r-1", "run", "x = 1")
+    doc = wire.parse_race(f)
+    assert doc == {"id": "r-1", "action": "run", "source": "x = 1"}
+    with pytest.raises(wire.WireError):
+        wire.race_frame("r-1", "sideways")
+    session, epoch = wire.parse_promote(wire.promote_frame("s", 7))
+    assert (session, epoch) == ("s", 7)
+    doc = wire.parse_replica(wire.replica_frame("s", 3, deleted=("b", "a")))
+    assert doc == {"session": "s", "epoch": 3, "deleted": ("a", "b")}
+    # additive: the v1 frame space simply grew
+    assert {wire.REPLICA, wire.PROMOTE, wire.RACE} <= wire.FRAME_TYPES
+
+
+def test_race_cancel_before_run_never_executes():
+    """Wire-level clobber protection: a CANCEL that beats the run means
+    the run replies 'cancelled' without touching the remote namespace."""
+    env = ExecutionEnvironment("remote", speedup=10.0)
+    red = StateReducer(codec="zlib")
+    peer = attach_peer(env, red, kind="loopback")
+    peer.race_cancel("r-dead")
+    peer.race("r-dead", "boom = 1")
+    recv = env._server.receiver
+    assert recv.races_cancelled == 1
+    assert recv.races_run == 0
+    assert "boom" not in env.state.ns
+    # a non-cancelled race runs against a discarded overlay
+    env.state.ns["x"] = 2
+    nbytes = peer.race("r-live", "y = x * 2")
+    assert nbytes > 0
+    assert env._server.receiver.races_run == 1
+    assert "y" not in env.state.ns         # overlay discarded
+    peer.close()
+
+
+def test_replicate_and_promote_frames_advance_remote_watermark():
+    env = ExecutionEnvironment("remote", speedup=10.0)
+    red = StateReducer(codec="zlib")
+    peer = attach_peer(env, red, kind="loopback")
+    from repro.core.state import ExecutionState
+    src = ExecutionState({"a": np.arange(64, dtype=np.float32)})
+    ser = red.serialize_names(src, {"a"})
+    peer.replicate("sess", 5, ser)
+    recv = env._server.receiver
+    assert recv.replica_epoch == 5 and recv.replicas_applied == 1
+    np.testing.assert_array_equal(env.state.ns["a"], src.ns["a"])
+    assert peer.promote("sess", 9) == 5    # remote watermark authoritative
+    assert recv.promotions == 1
+    peer.close()
+
+
+# -- fleet integration --------------------------------------------------
+
+
+def _failover_fleet(mode):
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.3)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment("gpu-cloud", speedup=10.0), capacity=1)
+    reg.register(ExecutionEnvironment("gpu-standby", speedup=10.0),
+                 capacity=1)
+    sched = SessionScheduler(reg)
+    if mode == "replica":
+        sched.enable_replicas(2)
+        sched.enable_recovery("rerun")     # the fallback when no follower
+    else:
+        sched.enable_recovery(mode)
+    sched.inject_failure("gpu-cloud", at=14.0, recover_after=10.0)
+    nb = Notebook("failover")
+    nb.add_cell("import numpy as np\n"
+                "data = np.arange(50_000, dtype=np.float64)", cost=4.0)
+    nb.add_cell("model = float((data ** 2).sum())", cost=80.0)
+    nb.add_cell("model2 = model + 1", cost=80.0)
+    nb.add_cell("out = model2 / 2", cost=0.3)
+    sched.add_notebook(nb, policy="cost", use_knowledge=False,
+                       think=[1.0] * 4)
+    return sched.run()
+
+
+def test_scheduler_promotes_instead_of_rerunning():
+    rep = _failover_fleet("replica")
+    rerun = _failover_fleet("rerun")
+    s = rep.sessions[0]
+    assert s.cells_run == 4
+    assert rep.promotions == 1 and s.promotions == 1
+    assert rep.recoveries == 1
+    assert s.replicated_bytes > 0
+    # promotion resumes the plan instead of replaying it from home
+    assert rep.makespan < rerun.makespan
+    assert rep.replica_shared_bytes >= 0
+
+
+def test_scheduler_replicas_validation():
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.3)
+    reg.register(ExecutionEnvironment("local"), home=True)
+    sched = SessionScheduler(reg)
+    with pytest.raises(ValueError):
+        sched.enable_replicas(-1)
+    with pytest.raises(ValueError):
+        sched.enable_replicas(2, followers=["a", "a"])
+    sched.enable_replicas(0)
+    assert sched.replica_cfg is None       # K=0 is exactly today's behavior
+
+
+def test_degenerate_no_replicas_reports_zero():
+    reg = EnvironmentRegistry(default_bandwidth=1e6, default_latency=0.01)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=4)
+    reg.register(ExecutionEnvironment("remote", speedup=10.0), capacity=4)
+    sched = SessionScheduler(reg)
+    nb = Notebook("plain")
+    nb.add_cell("v = 1", cost=0.1)
+    nb.add_cell("w = v + 1", cost=0.1)
+    sched.add_notebook(nb, plan=[0, 1], policy="cost", use_knowledge=False)
+    rep = sched.run()
+    assert rep.promotions == 0 and rep.races == 0
+    assert rep.replicated_bytes == 0
+    s = rep.sessions[0]
+    assert s.replica_lag == 0 and s.promotions == 0 and s.races == 0
