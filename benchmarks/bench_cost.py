@@ -1,0 +1,247 @@
+"""Cost-plane benchmarks: the price-aware horizon DP vs the seconds-only
+DP on priced fleets, producing a cost-vs-makespan frontier.
+
+Five sweeps (results also land in ``BENCH_cost.json``):
+
+* **frontier** — the GPU-heavy training workload on three fleets
+  (*static*: home + on-demand GPU; *autoscaled*: + an elastic burst GPU;
+  *spot*: + a cheap preemptible GPU with a seeded hazard), each run under
+  both objectives with the same per-cell latency SLO.  The claim: on the
+  spot fleet the dollars DP lands on the cheap preemptible pool and pays
+  strictly fewer dollars at equal-or-better SLO attainment, because the
+  hazard-weighted recovery surcharge prices preemptions instead of
+  ignoring them.
+* **data gravity** — the remote-sensing pipeline on a fabric where the
+  near-data env is slightly slower but egress out of the fast far region
+  is priced per-GB (asymmetrically).  The dollars DP keeps compute at the
+  data and pays zero egress; the seconds DP chases the fastest env.
+* **degenerate** — zero prices, zero hazards, symmetric links: the
+  dollars objective reproduces the seconds objective's schedule exactly,
+  and the fig5/fig11 decision sweeps still match the committed goldens
+  bit-for-bit (the cost plane must not perturb the seed DP).
+* **determinism** — the spot arm twice with the same seed: identical
+  ScheduleReports (preemption draws are seeded substreams).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import (
+    AutoscalePolicy, EnvironmentRegistry, ExecutionEnvironment,
+    SessionScheduler, gpu_training_notebook, remote_sensing_notebook,
+)
+
+SEED = 2            # hazard substream: realizes preemptions inside the run
+SLO = 30.0          # per-cell latency bound: forces training off home
+GRAVITY_SLO = 12.0  # forces the remote-sensing bands off home too
+
+
+def make_registry(fleet: str) -> EnvironmentRegistry:
+    """*static*: home + an on-demand GPU at $3/h.  *autoscaled*: + an
+    elastic burst GPU the AutoscalePolicy may provision/cull.  *spot*:
+    + a preemptible GPU — slightly slower, $0.9/h, with a hazard."""
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.3)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment(
+        "ondemand-gpu", speedup=10.0, price_per_hour=3.0), capacity=2)
+    if fleet == "autoscaled":
+        reg.register(ExecutionEnvironment(
+            "gpu-burst", speedup=10.0, price_per_hour=3.0, status="down",
+            cold_start=6.0, idle_timeout=12.0), capacity=2)
+    if fleet == "spot":
+        reg.register(ExecutionEnvironment(
+            "spot-gpu", speedup=8.0, price_per_hour=0.9,
+            hazard_rate=120.0 / 3600.0), capacity=4)
+    return reg
+
+
+def run_fleet(fleet: str, objective: str, n_sessions: int):
+    sched = SessionScheduler(make_registry(fleet))
+    sched.enable_recovery("checkpoint", interval=15.0)
+    if fleet == "autoscaled":
+        sched.enable_autoscale(AutoscalePolicy(
+            ["gpu-burst"], check_interval=4.0, scale_up_wait=1.0))
+    for i in range(n_sessions):
+        sched.add_notebook(
+            gpu_training_notebook(f"gpu-{fleet}-{objective}-{i}"),
+            policy="horizon", use_knowledge=False,
+            objective=objective, slo=SLO)
+    if fleet == "spot":
+        sched.enable_spot_hazards(seed=SEED, recover_after=10.0)
+    return sched.run()
+
+
+def frontier(rows, out, n_sessions: int) -> None:
+    for fleet in ("static", "autoscaled", "spot"):
+        arms = {}
+        for objective in ("seconds", "dollars"):
+            rep = run_fleet(fleet, objective, n_sessions)
+            arms[objective] = rep
+            rows.append((f"cost/{fleet}/{objective}/dollars",
+                         rep.total_dollars,
+                         f"compute {rep.compute_dollars:.4f} + egress "
+                         f"{rep.egress_dollars:.4f}"))
+            rows.append((f"cost/{fleet}/{objective}/makespan",
+                         rep.makespan, f"{rep.preemptions} preemptions"))
+            rows.append((f"cost/{fleet}/{objective}/slo_attainment",
+                         rep.slo_attainment, f"SLO {SLO:g}s per cell"))
+            out["frontier"][fleet][objective] = {
+                "dollars": rep.total_dollars,
+                "compute_dollars": rep.compute_dollars,
+                "egress_dollars": rep.egress_dollars,
+                "makespan": rep.makespan,
+                "queue_wait": rep.total_queue_wait,
+                "slo_attainment": rep.slo_attainment,
+                "preemptions": rep.preemptions,
+                "recoveries": rep.recoveries,
+            }
+        sec, dol = arms["seconds"], arms["dollars"]
+        ratio = dol.total_dollars / max(sec.total_dollars, 1e-12)
+        delta = dol.slo_attainment - sec.slo_attainment
+        rows.append((f"cost/{fleet}/dollars_ratio", ratio,
+                     "dollars DP vs seconds DP; <1 = price-aware wins"))
+        rows.append((f"cost/{fleet}/slo_attainment_delta", delta,
+                     ">=0 = no SLO paid for the savings"))
+        out["frontier"][fleet]["dollars_ratio"] = ratio
+        out["frontier"][fleet]["slo_attainment_delta"] = delta
+
+
+# ----------------------------------------------------------------------
+def make_gravity_registry() -> EnvironmentRegistry:
+    """Data gravity: ``near-data`` sits next to the scene archive (free
+    in-region transfers, 6x); ``far-gpu`` is faster (8x) but in another
+    region — per-GB egress is priced on every link crossing the boundary,
+    and asymmetrically (shipping results back out of the far region costs
+    double)."""
+    reg = EnvironmentRegistry(default_bandwidth=2e8, default_latency=0.3)
+    reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+    reg.register(ExecutionEnvironment(
+        "near-data", speedup=6.0, price_per_hour=1.0), capacity=4)
+    reg.register(ExecutionEnvironment(
+        "far-gpu", speedup=8.0, price_per_hour=3.0), capacity=4)
+    for src in ("local", "near-data"):
+        reg.set_egress(src, "far-gpu", 40.0)
+        reg.set_egress("far-gpu", src, 80.0)
+    return reg
+
+
+def data_gravity(rows, out, scenes: int) -> None:
+    arms = {}
+    for objective in ("seconds", "dollars"):
+        sched = SessionScheduler(make_gravity_registry())
+        rt = sched.add_notebook(
+            remote_sensing_notebook(f"rs-{objective}", scenes=scenes),
+            policy="horizon", use_knowledge=False,
+            objective=objective, slo=GRAVITY_SLO)
+        rep = sched.run()
+        heavy = {e: s for e, s in rt.exec_env_seconds.items()
+                 if e != "local"}
+        arms[objective] = {
+            "dollars": rep.total_dollars,
+            "compute_dollars": rep.compute_dollars,
+            "egress_dollars": rep.egress_dollars,
+            "makespan": rep.makespan,
+            "slo_attainment": rep.slo_attainment,
+            "env_seconds": dict(rt.exec_env_seconds),
+            "compute_at_data": float(
+                heavy.get("near-data", 0.0) > 0.0
+                and heavy.get("far-gpu", 0.0) == 0.0),
+        }
+        rows.append((f"cost/gravity/{objective}/dollars",
+                     rep.total_dollars,
+                     f"egress {rep.egress_dollars:.4f}"))
+    rows.append(("cost/gravity/compute_at_data",
+                 arms["dollars"]["compute_at_data"],
+                 "dollars DP keeps the bands next to the scene archive"))
+    rows.append(("cost/gravity/dollars/egress_dollars",
+                 arms["dollars"]["egress_dollars"],
+                 "must stay zero: no priced boundary crossed"))
+    rows.append(("cost/gravity/dollars_ratio",
+                 arms["dollars"]["dollars"]
+                 / max(arms["seconds"]["dollars"], 1e-12),
+                 "<1 = staying at the data beats chasing the fast region"))
+    out["gravity"] = {
+        "seconds": arms["seconds"], "dollars": arms["dollars"],
+        "compute_at_data": arms["dollars"]["compute_at_data"],
+        "dollars_ratio": arms["dollars"]["dollars"]
+        / max(arms["seconds"]["dollars"], 1e-12),
+    }
+
+
+# ----------------------------------------------------------------------
+def degenerate(rows, out, n_sessions: int) -> None:
+    """Zero prices, zero hazards, symmetric free links: the dollars DP is
+    the seconds DP.  Two halves: (a) same fleet under both objectives
+    produces the identical schedule; (b) the committed fig5/fig11 decision
+    goldens still reproduce bit-for-bit."""
+    def run_plain(objective: str):
+        reg = EnvironmentRegistry(default_bandwidth=2e8,
+                                  default_latency=0.3)
+        reg.register(ExecutionEnvironment("local"), home=True, capacity=8)
+        reg.register(ExecutionEnvironment("remote", speedup=10.0),
+                     capacity=4)
+        sched = SessionScheduler(reg)
+        for i in range(n_sessions):
+            sched.add_notebook(gpu_training_notebook(f"deg-{i}"),
+                               policy="horizon", use_knowledge=False,
+                               objective=objective)
+        return sched.run()
+
+    a, b = run_plain("seconds"), run_plain("dollars")
+    schedule_identical = (
+        a.makespan == b.makespan
+        and a.actual_env_seconds == b.actual_env_seconds
+        and [s.makespan for s in a.sessions]
+        == [s.makespan for s in b.sessions]
+        and b.total_dollars == 0.0)
+    rows.append(("cost/degenerate/schedule_identical",
+                 float(schedule_identical),
+                 "unpriced fleet: dollars DP == seconds DP"))
+    out["degenerate"] = {
+        "schedule_identical": float(schedule_identical)}
+
+    from benchmarks import fig5_fig6_policy_speedups, fig11_knowledge_policy
+    golden_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                               "tests", "data",
+                               "fig_decisions_golden.json")
+    with open(golden_path) as f:
+        golden = json.load(f)
+    fresh5 = [[n, v, d]
+              for n, v, d in fig5_fig6_policy_speedups.run(smoke=True)]
+    fresh11 = [[n, v, d]
+               for n, v, d in fig11_knowledge_policy.run(smoke=True)]
+    bit_identical = (fresh5 == golden["fig5_fig6"]
+                     and fresh11 == golden["fig11"])
+    rows.append(("cost/degenerate/bit_identical", float(bit_identical),
+                 "fig5/fig11 decision goldens reproduce bit-for-bit"))
+    out["degenerate"]["bit_identical"] = float(bit_identical)
+
+
+# ----------------------------------------------------------------------
+def determinism(rows, out, n_sessions: int) -> None:
+    a = run_fleet("spot", "dollars", n_sessions)
+    b = run_fleet("spot", "dollars", n_sessions)
+    identical = a == b
+    rows.append(("cost/deterministic_replay", float(identical),
+                 "same seed => identical preemptions and dollars"))
+    out["deterministic_replay"] = float(identical)
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    out: dict = {"frontier": {f: {} for f in
+                              ("static", "autoscaled", "spot")}}
+    n = 2 if smoke else 4
+    frontier(rows, out, n_sessions=n)
+    data_gravity(rows, out, scenes=3 if smoke else 6)
+    degenerate(rows, out, n_sessions=n)
+    determinism(rows, out, n_sessions=n)
+    with open("BENCH_cost.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val},{note}")

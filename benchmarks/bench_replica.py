@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import json
 
-import numpy as np
 
 from repro.core import (
     EnvironmentRegistry, ExecutionEnvironment, HybridRuntime, Notebook,

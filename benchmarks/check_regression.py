@@ -23,6 +23,11 @@ seeded ratios) — wall-clock seconds vary by machine and would flake.
 
 ``--update`` rewrites the baseline files from the current reports (run a
 fresh ``--smoke`` first); tolerances are never auto-updated.
+
+When ``$GITHUB_STEP_SUMMARY`` is set (always, inside a GitHub Actions
+step) a per-metric markdown table — metric, baseline, observed,
+tolerance, PASS/FAIL — is appended to it so the gate's full scoreboard
+shows on the run's summary page instead of only the failing lines.
 """
 from __future__ import annotations
 
@@ -53,40 +58,54 @@ def lookup(doc, dotted: str):
 
 
 def check_file(rules: list[dict], baseline: dict, current: dict,
-               fname: str) -> list[str]:
-    """Apply one file's rules; returns human-readable failure lines."""
+               fname: str, rows: list[dict] | None = None) -> list[str]:
+    """Apply one file's rules; returns human-readable failure lines.
+    When ``rows`` is given, a structured record per rule is appended to
+    it (for the markdown step summary): file, metric, cmp, tol,
+    baseline, observed, ok."""
     failures = []
     for rule in rules:
         metric, cmp_, tol = rule["metric"], rule["cmp"], float(rule["tol"])
+        row = {"file": fname, "metric": metric, "cmp": cmp_, "tol": tol,
+               "baseline": None, "observed": None, "ok": False}
+        if rows is not None:
+            rows.append(row)
         try:
             base = lookup(baseline, metric)
         except (KeyError, TypeError) as e:
             failures.append(f"{fname}:{metric}: missing in baseline ({e})")
             continue
+        row["baseline"] = base
         try:
             cur = lookup(current, metric)
         except (KeyError, TypeError) as e:
             failures.append(f"{fname}:{metric}: missing in fresh report "
                             f"({e}) — did the benchmark stop emitting it?")
             continue
+        row["observed"] = cur
         if cmp_ == "max":
             bound = base * (1.0 + tol)
             if cur > bound:
                 failures.append(
                     f"{fname}:{metric}: REGRESSION {cur:g} > {bound:g} "
                     f"(baseline {base:g}, tol +{tol:.0%})")
+            else:
+                row["ok"] = True
         elif cmp_ == "min":
             bound = base * (1.0 - tol)
             if cur < bound:
                 failures.append(
                     f"{fname}:{metric}: REGRESSION {cur:g} < {bound:g} "
                     f"(baseline {base:g}, tol -{tol:.0%})")
+            else:
+                row["ok"] = True
         else:
             failures.append(f"{fname}:{metric}: unknown cmp {cmp_!r}")
     return failures
 
 
-def check_all(baselines_dir: str, current_dir: str) -> list[str]:
+def check_all(baselines_dir: str, current_dir: str,
+              rows: list[dict] | None = None) -> list[str]:
     tol_path = os.path.join(baselines_dir, "tolerances.json")
     with open(tol_path) as f:
         spec = json.load(f)
@@ -106,8 +125,39 @@ def check_all(baselines_dir: str, current_dir: str) -> list[str]:
             baseline = json.load(f)
         with open(cur_path) as f:
             current = json.load(f)
-        failures.extend(check_file(rules, baseline, current, fname))
+        failures.extend(check_file(rules, baseline, current, fname,
+                                   rows=rows))
     return failures
+
+
+def render_summary(rows: list[dict], failures: list[str]) -> str:
+    """Markdown table for ``$GITHUB_STEP_SUMMARY``: one row per gated
+    metric with its baseline, the observed value, the tolerance and a
+    PASS/FAIL verdict; spec-level failures (missing files) follow as
+    bullets."""
+    lines = ["## Benchmark regression gate", "",
+             "| metric | baseline | observed | tolerance | verdict |",
+             "|---|---|---|---|---|"]
+
+    def num(v):
+        return "—" if v is None else f"{v:g}"
+
+    for row in rows:
+        sign = "+" if row["cmp"] == "max" else "-"
+        tol = (f"{sign}{row['tol']:.0%} ({row['cmp']})"
+               if row["cmp"] in ("max", "min") else f"?{row['cmp']}?")
+        verdict = "PASS" if row["ok"] else "**FAIL**"
+        lines.append(f"| {row['file']}:{row['metric']} "
+                     f"| {num(row['baseline'])} | {num(row['observed'])} "
+                     f"| {tol} | {verdict} |")
+    spec_failures = [f for f in failures if "REGRESSION" not in f]
+    if spec_failures:
+        lines.append("")
+        lines.extend(f"- {f}" for f in spec_failures)
+    lines.append("")
+    lines.append(f"**{len(failures)} failure(s)**" if failures
+                 else "All metrics within tolerance.")
+    return "\n".join(lines) + "\n"
 
 
 def update_baselines(baselines_dir: str, current_dir: str) -> list[str]:
@@ -141,7 +191,12 @@ def main(argv=None) -> int:
         for path in update_baselines(args.baselines, args.current):
             print(f"baseline updated: {path}")
         return 0
-    failures = check_all(args.baselines, args.current)
+    rows: list[dict] = []
+    failures = check_all(args.baselines, args.current, rows=rows)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(render_summary(rows, failures))
     if failures:
         print("benchmark regression gate FAILED:", file=sys.stderr)
         for line in failures:

@@ -8,10 +8,9 @@ Paper result: migration pays off for e > 7.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (
-    ContextDetector, EnvironmentRegistry, ExecutionEnvironment, KnowledgeBase,
+    ContextDetector, EnvironmentRegistry, KnowledgeBase,
     MigrationAnalyzer, Notebook,
 )
 

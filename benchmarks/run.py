@@ -35,6 +35,7 @@ MODULES = [
     "bench_live",                 # background delta replication / liveness
     "bench_gateway",              # persistent gateway: 10k-session storm
     "bench_replica",              # replica plane: failover promotion / racing
+    "bench_cost",                 # cost plane: dollars DP / spot / data gravity
     "kernel_bench",               # kernels
     "roofline_dump",              # §Roofline table feed
 ]
@@ -49,6 +50,7 @@ ARTIFACTS = {
     "bench_live": "BENCH_live.json",
     "bench_gateway": "BENCH_gateway.json",
     "bench_replica": "BENCH_replica.json",
+    "bench_cost": "BENCH_cost.json",
 }
 
 

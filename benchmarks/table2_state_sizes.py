@@ -10,7 +10,6 @@ gives the paper its 55x/8x reductions.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import ExecutionEnvironment, MigrationEngine, StateReducer
 

@@ -28,7 +28,6 @@ from repro.core.chunkstore import CHUNK_BYTES
 from repro.core.fabric import ExecutionEnvironment
 from repro.core.migration import MigrationEngine
 from repro.core.reducer import SerializedName, SerializedState, StateReducer
-from repro.core.state import ExecutionState
 
 
 def _flatten(tree, prefix: str) -> dict[str, np.ndarray]:

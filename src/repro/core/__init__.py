@@ -34,7 +34,8 @@ from repro.core.reducer import (
 from repro.core.replica import RaceTicket, SessionReplicaSet
 from repro.core.scheduler import (
     AutoscalePolicy, CapacityArbiter, ScheduleReport, SessionCheckpointer,
-    SessionReport, SessionScheduler, WorkloadTrace,
+    SessionReport, SessionScheduler, WorkloadTrace, gpu_training_notebook,
+    remote_sensing_notebook,
 )
 from repro.core.simclock import SimClock, WallClock
 from repro.core.simulator import (
@@ -66,7 +67,8 @@ __all__ = [
     "PipelinedMigrationEngine", "Cell", "Notebook", "SerializationFailure",
     "SerializedState", "StateReducer", "AutoscalePolicy", "CapacityArbiter",
     "ScheduleReport", "SessionCheckpointer",
-    "SessionReport", "SessionScheduler", "WorkloadTrace", "SimClock",
+    "SessionReport", "SessionScheduler", "WorkloadTrace",
+    "gpu_training_notebook", "remote_sensing_notebook", "SimClock",
     "WallClock", "Trace",
     "TRACES", "cell_frequency", "policy_grid", "simulate",
     "synthetic_loops_trace", "tf_guide_trace", "ExecutionState",

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import ast
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -315,7 +315,21 @@ class HorizonPolicy(PlacementPolicy):
     The decision is the env minimizing ``transfer(current -> e) + V[0][e]``
     — i.e. the placement with minimum *expected* cost over the horizon,
     not just the best response to one predicted path.  Requires a registry
-    (per-pair links + env speedups)."""
+    (per-pair links + env speedups).
+
+    Cost plane (``analyzer.objective == "dollars"``): the same DP runs over
+    lexicographic ``(expected dollars, expected seconds)`` step costs.
+    Execution on env *e* is priced at ``price_per_hour(e)``; migration legs
+    additionally pay the link's per-GB egress; a spot env's step cost is
+    surcharged by its hazard-weighted expected recovery cost (``hazard *
+    exec_seconds`` expected preemptions, each priced from the fleet's
+    recovery ladder — replica promotion, checkpoint restore, or rerun).
+    A per-cell latency SLO filters the envs the DP may route through:
+    an env whose expected per-cell seconds (incl. hazard recovery) exceed
+    the SLO is penalized out unless *no* env attains it.  With all prices
+    zero and no hazards the dollar component is uniformly 0.0 and the
+    lexicographic comparison degrades to the seconds DP — decisions are
+    bit-identical to the seconds-only objective."""
 
     name = "horizon"
 
@@ -391,6 +405,12 @@ class HorizonPolicy(PlacementPolicy):
                             "horizon: no history or declared costs yet",
                             policy="horizon")
 
+        if an.objective == "dollars":
+            # the price-aware DP lives on its own path so the seconds-only
+            # code below stays float-for-float identical to the seed
+            return self._decide_dollars(an, nb, current_env, order, state,
+                                        dists, envs, cache)
+
         # backward DP + argmin successor per (step, env); the terminal V is
         # the amortized return-home transfer
         V = {e: an.pair_migration_time(state, e, an.home) for e in envs}
@@ -447,6 +467,125 @@ class HorizonPolicy(PlacementPolicy):
                         block=tuple(block) if best != an.home else (),
                         policy="horizon")
 
+    # -- price-aware DP (cost plane) -------------------------------------
+    # an env whose expected per-cell latency blows the SLO gets this added
+    # to its step dollars: any SLO-feasible route beats it, but if *every*
+    # env is infeasible the DP still produces a well-defined argmin
+    SLO_PENALTY = 1e15
+
+    @staticmethod
+    def _lex_better(cand: tuple[float, float],
+                    best: tuple[float, float]) -> bool:
+        """Lexicographic (dollars, seconds) with the same 1e-12 epsilon the
+        seconds DP uses — so an all-prices-zero fleet reproduces the
+        seconds DP's successor choices exactly."""
+        if cand[0] < best[0] - 1e-12:
+            return True
+        if cand[0] > best[0] + 1e-12:
+            return False
+        return cand[1] < best[1] - 1e-12
+
+    def _decide_dollars(self, an, nb, current_env, order, state, dists,
+                        envs, cache):
+        """Backward DP over (step, env) minimizing lexicographic
+        (expected dollars, expected seconds) subject to the per-cell SLO."""
+        # per-(step, env) expected dollars + hazard-adjusted seconds; the
+        # pairing rule matches the seconds path: a cell missing an estimate
+        # on any env contributes to none
+        dol: list[dict[str, float]] = []
+        sec: list[dict[str, float]] = []
+        for d in dists:
+            drow = {e: 0.0 for e in envs}
+            srow = {e: 0.0 for e in envs}
+            for c_order, p in d.items():
+                ts = {e: _modeled_exec_seconds(an, nb.cells[c_order], e)
+                      for e in envs}
+                if any(t is None for t in ts.values()):
+                    continue
+                for e, t in ts.items():
+                    hs, hd = an.hazard_surcharge(e, t, state)
+                    drow[e] += p * (an.exec_dollars(t, e) + hd)
+                    srow[e] += p * (t + hs)
+            dol.append(drow)
+            sec.append(srow)
+
+        # SLO feasibility: worst expected per-cell latency over the horizon
+        # (exec + hazard-weighted recovery).  Entry migration and fleet
+        # overhead are priced in the objective, not the feasibility test —
+        # they hit only the first cell of a block.
+        feasible = {e: True for e in envs}
+        if an.slo is not None:
+            for e in envs:
+                lat = max((s[e] for s in sec), default=0.0)
+                feasible[e] = lat <= an.slo + 1e-12
+
+        V = {e: (an.transfer_dollars(state, e, an.home),
+                 an.pair_migration_time(state, e, an.home)) for e in envs}
+        succ: list[dict[str, str]] = []
+        for t in range(len(dists) - 1, -1, -1):
+            nv: dict[str, tuple[float, float]] = {}
+            ns: dict[str, str] = {}
+            for e in envs:
+                best_e, best_c = None, None
+                for e2 in envs:
+                    c = (an.transfer_dollars(state, e, e2) + V[e2][0],
+                         an.pair_migration_time(state, e, e2) + V[e2][1])
+                    if best_c is None or self._lex_better(c, best_c):
+                        best_e, best_c = e2, c
+                pen = 0.0 if feasible[e] else self.SLO_PENALTY
+                nv[e] = (dol[t][e] + pen + best_c[0], sec[t][e] + best_c[1])
+                ns[e] = best_e
+            succ.append(ns)
+            V = nv
+        succ.reverse()
+
+        costs = {}
+        for e in envs:
+            over = an.env_overhead(e)
+            pen = 0.0 if feasible[e] else self.SLO_PENALTY
+            costs[e] = (an.transfer_dollars(state, current_env, e) + V[e][0]
+                        + an.exec_dollars(over, e) + pen,
+                        an.pair_migration_time(state, current_env, e)
+                        + V[e][1] + over)
+        best = min(costs, key=lambda e: (costs[e][0], costs[e][1],
+                                         e != an.home))
+        slo_note = ""
+        if costs[best][0] >= self.SLO_PENALTY:
+            # every env blows the SLO: fall back to fastest-expected-seconds
+            best = min(costs, key=lambda e: (costs[e][1], e != an.home))
+            slo_note = f"; SLO {an.slo:.1f}s unattainable, fastest env chosen"
+        matrix = ", ".join(
+            f"{e}=${costs[e][0] % self.SLO_PENALTY:.4f}/{costs[e][1]:.2f}s"
+            + ("" if feasible[e] else "!slo") for e in envs)
+
+        block = [order]
+        if best != an.home:
+            e, c = best, order
+            for t in range(1, len(dists)):
+                e = succ[t - 1][e]
+                if e != best:
+                    break
+                step = {c2: p for c2, p in self._dist(an, nb, c, cache).items()
+                        if 0 <= c2 < len(nb.cells)}
+                if not step:
+                    break
+                c = max(step.items(), key=lambda kv: (kv[1], -kv[0]))[0]
+                if c in block or c < block[-1]:
+                    break
+                block.append(c)
+
+        if best == current_env:
+            return Decision(best, False,
+                            f"horizon-$(H={len(dists)}): stay on {best} "
+                            f"[{matrix}]{slo_note}",
+                            block=tuple(block) if best != an.home else (),
+                            policy="horizon")
+        return Decision(best, True,
+                        f"horizon-$(H={len(dists)}): {best} minimizes "
+                        f"expected dollars [{matrix}]{slo_note}",
+                        block=tuple(block) if best != an.home else (),
+                        policy="horizon")
+
 
 POLICIES = {"single": SingleCellPolicy, "block": BlockPolicy,
             "cost": CostMatrixPolicy, "horizon": HorizonPolicy}
@@ -464,10 +603,20 @@ class MigrationAnalyzer:
                  migration_latency: float = 0.5,
                  migration_bandwidth: float = 1e9,
                  registry=None,
-                 horizon: int = 4):
+                 horizon: int = 4,
+                 objective: str = "seconds",   # seconds | dollars
+                 slo: float | None = None):
         assert policy in POLICIES, policy
         if policy in ("cost", "horizon") and registry is None:
             raise ValueError(f"{policy} policy requires a registry")
+        if objective not in ("seconds", "dollars"):
+            raise ValueError(f"unknown objective {objective!r} "
+                             "(expected 'seconds' or 'dollars')")
+        if objective == "dollars" and registry is None:
+            raise ValueError("objective='dollars' requires a registry "
+                             "(prices live on envs and links)")
+        if slo is not None and slo <= 0:
+            raise ValueError(f"slo must be > 0 seconds, got {slo}")
         self.kb = kb
         self.context = context
         self.perf = perf or PerfModel()
@@ -486,6 +635,16 @@ class MigrationAnalyzer:
         # trickled to the target; None (the default) keeps decisions
         # bit-identical to the unreplicated run
         self.replication_view = None
+        # cost plane: "seconds" (the paper's objective) or "dollars"
+        # (expected dollars subject to the per-cell latency SLO below)
+        self.objective = objective
+        self.slo = slo
+        # the fleet scheduler attaches an object with
+        # expected_recovery(env) -> (seconds, dollars) here, pricing one
+        # preemption from its configured recovery ladder (replica
+        # promotion / checkpoint restore / rerun); None falls back to a
+        # conservative re-ship-and-rerun model
+        self.recovery_view = None
         self.state_size_estimate: dict[str, float] = defaultdict(lambda: 1e6)
         self._chain: list[PlacementPolicy] = []
         if use_knowledge:
@@ -542,6 +701,55 @@ class MigrationAnalyzer:
         if self.fleet_view is None:
             return 0.0
         return float(self.fleet_view.overhead_seconds(env_name))
+
+    # -- cost plane ------------------------------------------------------
+    def env_price(self, env_name: str) -> float:
+        """Dollars per hour of occupying ``env_name`` (0 without a registry
+        — the paper's dyad is free)."""
+        if self.registry is None or env_name not in self.registry:
+            return 0.0
+        return self.registry[env_name].price_per_hour
+
+    def exec_dollars(self, seconds: float, env_name: str) -> float:
+        return self.env_price(env_name) * seconds / 3600.0
+
+    def env_hazard(self, env_name: str) -> float:
+        """Preemption hazard (events/second) of ``env_name``; 0 = on-demand."""
+        if self.registry is None or env_name not in self.registry:
+            return 0.0
+        return self.registry[env_name].hazard_rate
+
+    def transfer_dollars(self, nbytes: float, src: str, dst: str) -> float:
+        """Egress dollars src→dst for the *residual* bytes — the same
+        replication discount :meth:`pair_migration_time` applies."""
+        if src == dst or self.registry is None:
+            return 0.0
+        if self.replication_view is not None:
+            nbytes = self.replication_view.residual_bytes(nbytes, src, dst)
+        return self.registry.transfer_dollars(src, dst, nbytes)
+
+    def hazard_surcharge(self, env_name: str, exec_seconds: float,
+                         state_bytes: float) -> tuple[float, float]:
+        """Expected (seconds, dollars) a preemption hazard adds to running
+        one cell of ``exec_seconds`` on ``env_name``: ``hazard *
+        exec_seconds`` expected preemptions, each costing one recovery.
+        The recovery is priced from the fleet's ladder when a
+        ``recovery_view`` is attached; the fallback models the worst rung —
+        re-ship the state from home and rerun the cell."""
+        h = self.env_hazard(env_name)
+        if h <= 0.0 or exec_seconds <= 0.0:
+            return 0.0, 0.0
+        if self.recovery_view is not None:
+            r_sec, r_dol = self.recovery_view.expected_recovery(env_name)
+            r_sec += exec_seconds / 2.0        # expected lost partial work
+            r_dol += self.exec_dollars(exec_seconds / 2.0, env_name)
+        else:
+            r_sec = (self.pair_migration_time(state_bytes, self.home, env_name)
+                     + exec_seconds)
+            r_dol = (self.transfer_dollars(state_bytes, self.home, env_name)
+                     + self.exec_dollars(exec_seconds, env_name))
+        n = h * exec_seconds                   # expected preemptions mid-cell
+        return n * r_sec, n * r_dol
 
     # ------------------------------------------------------------------
     def decide(self, nb: Notebook, cell: Cell, *,

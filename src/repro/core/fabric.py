@@ -16,7 +16,7 @@ legacy ``{"local": ..., "remote": ...}`` dict API.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Iterator
 
 from repro.core.chunkstore import DiskChunkStore, MemoryChunkStore
@@ -51,14 +51,22 @@ class ExecutionEnvironment:
     scheduler records ``ready_at`` when it starts one.  ``idle_timeout``
     (None = never) is how long the env may sit idle before the autoscaler
     culls it.  The default status is ``up``, so a registry that never
-    touches the lifecycle behaves exactly as before."""
+    touches the lifecycle behaves exactly as before.
+
+    Cost plane: ``price_per_hour`` is what occupying this env costs in
+    dollars per wall-clock hour (0 = free, the paper's implicit price).
+    ``hazard_rate`` is the preemption hazard in events per *second* of
+    uptime; a non-zero rate marks the env as spot/preemptible capacity —
+    the scheduler draws seeded preemption times from it and the price-aware
+    placement DP weighs it against the cheaper price tag."""
 
     def __init__(self, name: str, *, speedup: float = 1.0,
                  mesh_ctx=None, globals_seed: dict | None = None,
                  kind: str = "compute", chunk_store=None,
                  storage_dir: str | None = None, status: str = "up",
                  cold_start: float = 0.0, idle_timeout: float | None = None,
-                 transport: str = "loopback"):
+                 transport: str = "loopback", price_per_hour: float = 0.0,
+                 hazard_rate: float = 0.0):
         assert status in LIFECYCLE, status
         self.name = name
         self.speedup = float(speedup)
@@ -69,6 +77,11 @@ class ExecutionEnvironment:
         self.cold_start = float(cold_start)
         self.idle_timeout = idle_timeout
         self.ready_at = 0.0              # when a provisioning env comes up
+        self.price_per_hour = float(price_per_hour)
+        self.hazard_rate = float(hazard_rate)
+        if self.price_per_hour < 0 or self.hazard_rate < 0:
+            raise ValueError(
+                f"env {name!r}: price_per_hour and hazard_rate must be >= 0")
         # transport plane: how migration traffic reaches this env.
         # "loopback" (default) = in-process, zero-copy, simulated timing —
         # the paper's setup.  "socket"/"subprocess" envs additionally carry
@@ -104,6 +117,11 @@ class ExecutionEnvironment:
         cold-start wait is then priced into placement)."""
         return self.status in ("up", "provisioning")
 
+    @property
+    def spot(self) -> bool:
+        """Preemptible capacity: a non-zero preemption hazard was declared."""
+        return self.hazard_rate > 0.0
+
     def execute(self, source: str, cost: float | None = None) -> float:
         """Run real code against this env's namespace; return modeled seconds."""
         t0 = time.perf_counter()
@@ -122,13 +140,22 @@ class Link:
     names which transport binding the pair's migration traffic rides
     (loopback = in-process simulated movement; socket = real framed TCP,
     optionally shaped).  The *cost model* is the same either way — real
-    transports record measured wall time alongside the modeled seconds."""
+    transports record measured wall time alongside the modeled seconds.
+
+    Links are directed, so a pair may be asymmetric: cloud downlinks are
+    commonly faster than uplinks, and providers bill *egress* — dollars per
+    GB leaving the source — in one direction only.  ``egress_per_gb`` prices
+    that; the default 0.0 keeps every pre-cost-plane topology free."""
     bandwidth: float = 1e9          # bytes/second
     latency: float = 0.5            # seconds per transfer
     transport: str = "loopback"
+    egress_per_gb: float = 0.0      # dollars per 1e9 bytes crossing the link
 
     def transfer_seconds(self, nbytes: int | float) -> float:
         return self.latency + nbytes / self.bandwidth
+
+    def transfer_dollars(self, nbytes: int | float) -> float:
+        return self.egress_per_gb * nbytes / 1e9
 
 
 class EnvironmentRegistry:
@@ -238,17 +265,51 @@ class EnvironmentRegistry:
     # -- links ----------------------------------------------------------
     def connect(self, a: str, b: str, *, bandwidth: float | None = None,
                 latency: float | None = None, symmetric: bool = True,
-                transport: str | None = None) -> Link:
+                transport: str | None = None,
+                egress_per_gb: float | None = None,
+                reverse_bandwidth: float | None = None,
+                reverse_latency: float | None = None,
+                reverse_egress_per_gb: float | None = None) -> Link:
+        """Set the a→b link.  ``symmetric=True`` (default) also sets b→a;
+        pass any ``reverse_*`` override to make the pair asymmetric — the
+        reverse direction then gets its own Link falling back to the
+        forward values for anything not overridden."""
         link = Link(bandwidth if bandwidth is not None
                     else self.default_link.bandwidth,
                     latency if latency is not None
                     else self.default_link.latency,
                     transport if transport is not None
-                    else self.default_link.transport)
+                    else self.default_link.transport,
+                    egress_per_gb if egress_per_gb is not None
+                    else self.default_link.egress_per_gb)
         self._links[(a, b)] = link
+        asymmetric = (reverse_bandwidth is not None
+                      or reverse_latency is not None
+                      or reverse_egress_per_gb is not None)
         if symmetric:
-            self._links[(b, a)] = link
+            if asymmetric:
+                self._links[(b, a)] = Link(
+                    reverse_bandwidth if reverse_bandwidth is not None
+                    else link.bandwidth,
+                    reverse_latency if reverse_latency is not None
+                    else link.latency,
+                    link.transport,
+                    reverse_egress_per_gb if reverse_egress_per_gb is not None
+                    else link.egress_per_gb)
+            else:
+                self._links[(b, a)] = link
         return link
+
+    def set_egress(self, a: str, b: str, per_gb: float, *,
+                   symmetric: bool = False) -> None:
+        """Price egress on an existing (or default) link without touching
+        its bandwidth/latency.  Egress is directional by default — billing
+        usually charges data *leaving* a provider, not entering it."""
+        self._links[(a, b)] = replace(
+            self.link(a, b), egress_per_gb=float(per_gb))
+        if symmetric:
+            self._links[(b, a)] = replace(
+                self.link(b, a), egress_per_gb=float(per_gb))
 
     def link(self, src: str, dst: str) -> Link:
         if src == dst:
@@ -259,6 +320,12 @@ class EnvironmentRegistry:
         if src == dst:
             return 0.0
         return self.link(src, dst).transfer_seconds(nbytes)
+
+    def transfer_dollars(self, src: str, dst: str, nbytes: int | float) -> float:
+        """Egress dollars for shipping ``nbytes`` src→dst (0 on self-pairs)."""
+        if src == dst:
+            return 0.0
+        return self.link(src, dst).transfer_dollars(nbytes)
 
     def pairs(self) -> list[tuple[str, str]]:
         ns = self.names()
@@ -285,6 +352,8 @@ class EnvironmentRegistry:
                 kind=env.kind, storage_dir=env.storage_dir,
                 cold_start=env.cold_start, idle_timeout=env.idle_timeout,
                 transport=getattr(env, "transport", "loopback"),
+                price_per_hour=env.price_per_hour,
+                hazard_rate=env.hazard_rate,
                 chunk_store=env.chunk_store if share_chunk_stores
                 else None)
             # lifecycle state carries over verbatim (the clone stands for

@@ -18,7 +18,7 @@ by the environment speedup, on a simulated clock.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import telemetry as T
 from repro.core.analyzer import Decision, MigrationAnalyzer, PerfModel
@@ -1018,7 +1018,8 @@ class HybridRuntime:
                  engine: MigrationEngine | None = None,
                  arbiter=None,
                  model: InteractionModel | str | None = None,
-                 horizon: int = 4, session_id: str | None = None):
+                 horizon: int = 4, session_id: str | None = None,
+                 objective: str = "seconds", slo: float | None = None):
         if registry is None:
             assert envs, "pass envs={...} or registry=EnvironmentRegistry(...)"
             registry = EnvironmentRegistry.from_envs(
@@ -1048,7 +1049,7 @@ class HybridRuntime:
             self.kb, self.context, PerfModel(), policy=policy,
             use_knowledge=use_knowledge, migration_latency=latency,
             migration_bandwidth=bandwidth, registry=registry,
-            horizon=horizon)
+            horizon=horizon, objective=objective, slo=slo)
         self.current_env = self.home
         self.block_plan: list[int] = []
         self.block_env: str | None = None
@@ -1057,6 +1058,12 @@ class HybridRuntime:
         self.session_id = session_id or T.new_session_id()
         self.migrations = 0
         self.queue_wait = 0.0
+        # cost plane: modeled execution seconds billed per env (the dollar
+        # meter's input) + per-cell request→completion latency (the SLO
+        # attainment meter's input).  Both are pure bookkeeping — no
+        # decision reads them.
+        self.exec_env_seconds: dict[str, float] = {}
+        self.cell_latencies: list[float] = []
         self.arbiter = arbiter               # shared capacity (SessionScheduler)
         # fleet failure injection: fault_check(env, start, end) -> failure
         # instant inside [start, end) or None.  When set, executions and
@@ -1242,6 +1249,7 @@ class HybridRuntime:
         """Execute one cell under the policies; returns modeled duration."""
         cell = self.nb.cell(ref)
         order = self.nb.order(cell.cell_id)
+        t_request = self.clock.now()
         self._emit(T.CELL_EXECUTION_REQUESTED, cell.cell_id, order=order)
         # the probability the interaction model gave THIS cell — the race
         # gate's admission signal — must be captured before scoring pops it
@@ -1345,6 +1353,9 @@ class HybridRuntime:
                 # only the work up to the failure instant, free the slot,
                 # and let the fleet scheduler drive recovery
                 self.clock.advance(max(0.0, tf - exec_start))
+                self.exec_env_seconds[self.current_env] = (
+                    self.exec_env_seconds.get(self.current_env, 0.0)
+                    + max(0.0, tf - exec_start))   # partial work still bills
                 if self.arbiter is not None:
                     self.arbiter.release(self.current_env, exec_start, tf)
                 self._emit(T.ENV_FAILED, cell.cell_id, env=self.current_env,
@@ -1353,11 +1364,16 @@ class HybridRuntime:
                 raise EnvFailure(self.current_env, tf, order,
                                  wasted=tf - exec_start)
         self.clock.advance(duration)
+        self.exec_env_seconds[self.current_env] = (
+            self.exec_env_seconds.get(self.current_env, 0.0) + duration)
         if self.arbiter is not None:
             self.arbiter.release(self.current_env, exec_start, self.clock.now())
         base = cell.cost if cell.cost is not None else duration * env.speedup
         for name, e in self.registry.compute_envs().items():
             self.analyzer.perf.observe(cell.cell_id, name, base / e.speedup)
+        # per-cell latency the user saw: request (incl. migration + queue +
+        # cold-start waits) to result — what the SLO is stated against
+        self.cell_latencies.append(self.clock.now() - t_request)
         self._emit(T.CELL_EXECUTION_COMPLETED, cell.cell_id, order=order,
                    env=self.current_env, duration=duration)
 

@@ -35,7 +35,7 @@ from repro.core.analyzer import _modeled_exec_seconds
 from repro.core.events import EventLoop
 from repro.core.fabric import EnvironmentRegistry
 from repro.core.migration import EnvFailure, HybridRuntime
-from repro.core.notebook import Notebook
+from repro.core.notebook import Cell, Notebook
 from repro.core.reducer import SerializedState
 
 
@@ -202,6 +202,60 @@ class WorkloadTrace:
 
 
 # ----------------------------------------------------------------------
+# workload families (cost plane)
+# ----------------------------------------------------------------------
+
+def gpu_training_notebook(name: str = "gpu-train", *, steps: int = 4,
+                          step_cost: float = 45.0, params_mb: float = 4.0,
+                          data_mb: float = 8.0) -> Notebook:
+    """A GPU-heavy training notebook (NotebookOS-style on-demand
+    accelerator binding): one cheap setup cell, ``steps`` expensive train
+    steps that each mutate the model weights (checkpoint-heavy — every
+    step dirties the largest name in the namespace), and a cheap eval
+    cell.  Declared costs are home-seconds; an accelerator env's speedup
+    divides them, which is exactly the asymmetry the placement DP trades
+    against its $/hour price tag."""
+    p_elems = max(1, int(params_mb * 131072))     # float64 MB -> elements
+    d_elems = max(1, int(data_mb * 131072))
+    cells = [Cell((
+        "import numpy as np\n"
+        f"data = np.arange({d_elems}, dtype=np.float64)\n"
+        f"weights = np.zeros({p_elems}, dtype=np.float64)\n"
+        "losses = []\n"), cost=2.0, cell_id="setup")]
+    for i in range(steps):
+        cells.append(Cell((
+            f"weights = weights + {float(i + 1)}\n"
+            "losses.append(float(weights[0] + data[0]))\n"),
+            cost=float(step_cost), cell_id=f"train-{i}"))
+    cells.append(Cell("summary = (len(losses), float(weights[-1]))\n",
+                      cost=1.0, cell_id="eval"))
+    return Notebook(name, cells)
+
+
+def remote_sensing_notebook(name: str = "remote-sensing", *, scenes: int = 4,
+                            scene_mb: float = 6.0,
+                            band_cost: float = 30.0) -> Notebook:
+    """A remote-sensing pipeline whose working set is dominated by the
+    ingested scene stack: heavy per-band computations reference the whole
+    stack, so migrating the computation means migrating the dataset.  With
+    the dataset homed next to a storage env and egress priced on the link
+    out, data gravity must pull compute *to* the data — shipping the stack
+    pays egress dollars and loses the placement comparison."""
+    s_elems = max(1, int(scene_mb * 131072))
+    cells = [Cell((
+        "import numpy as np\n"
+        f"scenes = np.ones(({scenes}, {s_elems}), dtype=np.float64)\n"
+        "products = {}\n"), cost=3.0, cell_id="ingest")]
+    for i, stage in enumerate(("ndvi", "cloudmask", "mosaic")):
+        cells.append(Cell(
+            f"products['{stage}'] = float(scenes[{i % scenes}].sum())\n",
+            cost=float(band_cost), cell_id=stage))
+    cells.append(Cell("report = sorted(products.items())\n",
+                      cost=1.0, cell_id="report"))
+    return Notebook(name, cells)
+
+
+# ----------------------------------------------------------------------
 # autoscaling
 # ----------------------------------------------------------------------
 
@@ -357,6 +411,16 @@ class SessionReport:
     races: int = 0
     race_wins: dict = field(default_factory=dict)
     race_waste_seconds: float = 0.0
+    # cost plane (all zero on an unpriced fleet): execution dollars billed
+    # per-env, egress dollars for migration bytes, and the fraction of this
+    # session's cells that completed within the per-cell latency SLO
+    compute_dollars: float = 0.0
+    egress_dollars: float = 0.0
+    slo_attainment: float = 1.0
+
+    @property
+    def dollars(self) -> float:
+        return self.compute_dollars + self.egress_dollars
 
     @property
     def prediction_hit_rate(self) -> float:
@@ -426,6 +490,14 @@ class ScheduleReport:
     promotions: int = 0
     races: int = 0
     race_waste_seconds: float = 0.0
+    # cost plane (zero on an unpriced fleet): fleet-wide dollar meter and
+    # SLO attainment (cell-weighted across sessions); ``preemptions`` counts
+    # injected failures on spot (hazard-rated) envs
+    compute_dollars: float = 0.0
+    egress_dollars: float = 0.0
+    total_dollars: float = 0.0
+    preemptions: int = 0
+    slo_attainment: float = 1.0
     total_queue_wait: float = field(init=False)
     total_think_time: float = field(init=False)
     prediction_hit_rate: float = field(init=False)
@@ -458,6 +530,42 @@ class _FleetView:
         if wait == float("inf"):
             return wait
         return overhead + wait
+
+
+class _RecoveryView:
+    """What the price-aware placement DP sees of the fleet's recovery
+    ladder: the expected (seconds, dollars) ONE preemption costs under the
+    configured recovery mode — replica promotion (detection only; the
+    follower already converged), checkpoint restore (detection + expected
+    replay since the last save, half the checkpoint interval), or rerun
+    (detection + expected half-plan replay at home).  Replay runs at the
+    home env, so its seconds bill at the home price."""
+
+    def __init__(self, sched: "SessionScheduler"):
+        self.sched = sched
+        self._plan_cache: float | None = None
+
+    def _mean_plan_seconds(self) -> float:
+        if self._plan_cache is None:
+            totals = []
+            for s in self.sched._sessions:
+                nb = s.runtime.nb
+                totals.append(sum(nb.cell(ref).cost or 0.0
+                                  for ref in s.plan))
+            self._plan_cache = (sum(totals) / len(totals)) if totals else 0.0
+        return self._plan_cache
+
+    def expected_recovery(self, env: str) -> tuple[float, float]:
+        sched = self.sched
+        detect = sched.detect_delay
+        if sched.replica_cfg is not None:
+            sec = detect
+        elif sched.recovery == "checkpoint":
+            sec = detect + sched.checkpoint_interval / 2.0
+        else:
+            sec = detect + self._mean_plan_seconds() / 2.0
+        home = sched.registry[sched.registry.home]
+        return sec, sec * home.price_per_hour / 3600.0
 
 
 class SessionScheduler:
@@ -541,6 +649,33 @@ class SessionScheduler:
             raise KeyError(env)
         self._failures.append((env, float(at), recover_after))
         self._env_failures.setdefault(env, []).append(float(at))
+
+    def enable_spot_hazards(self, *, seed: int = 0, horizon: float = 900.0,
+                            recover_after: float | None = 20.0) -> int:
+        """Draw seeded preemption times for every spot env (``hazard_rate
+        > 0``) and inject them through the ordinary failure path — the
+        heartbeat detector, recovery ladder and EnvFailure machinery treat
+        a preemption exactly like any other env death.  Inter-preemption
+        gaps are exponential at the env's hazard rate, pre-drawn from a
+        per-env substream of ``seed`` out to ``horizon`` sim-seconds, so
+        two runs with the same seed see identical preemptions.  With
+        ``recover_after`` the capacity comes back that many seconds later
+        (spot pools refill).  Returns the number injected."""
+        import numpy as np
+        injected = 0
+        for i, name in enumerate(sorted(self.registry.names())):
+            env = self.registry[name]
+            if env.hazard_rate <= 0 or name == self.registry.home:
+                continue
+            rng = np.random.default_rng([int(seed), i])
+            t = 0.0
+            while True:
+                t += float(rng.exponential(1.0 / env.hazard_rate))
+                if t > horizon:
+                    break
+                self.inject_failure(name, t, recover_after=recover_after)
+                injected += 1
+        return injected
 
     def enable_recovery(self, mode: str = "checkpoint", *,
                         interval: float = 30.0,
@@ -916,6 +1051,15 @@ class SessionScheduler:
             view = _FleetView(self)
             for s in self._sessions:
                 s.runtime.analyzer.fleet_view = view
+        if any(e.price_per_hour > 0 or e.hazard_rate > 0
+               for e in self.registry.envs().values()):
+            # cost plane: price-aware placement sees the recovery ladder so
+            # a spot env's hazard is weighed at what a preemption actually
+            # costs under the configured recovery mode (an unpriced fleet
+            # attaches nothing — decisions bit-identical to the seed)
+            rview = _RecoveryView(self)
+            for s in self._sessions:
+                s.runtime.analyzer.recovery_view = rview
         if self.autoscale is not None:
             loop.every(self.autoscale.check_interval, self._autoscale_tick,
                        priority=-5)
@@ -961,8 +1105,27 @@ class SessionScheduler:
             # a cell raises mid-drain (bus subscribers must not leak)
             for s in self._sessions:
                 s.runtime.close()
+        slo = next((s.runtime.analyzer.slo for s in self._sessions
+                    if s.runtime.analyzer.slo is not None), None)
+
+        def _dollars(rt: HybridRuntime) -> tuple[float, float]:
+            comp = sum(self.registry[e].price_per_hour * sec / 3600.0
+                       for e, sec in rt.exec_env_seconds.items()
+                       if e in self.registry)
+            egress = sum(self.registry.transfer_dollars(m.src, m.dst, m.nbytes)
+                         for m in rt.engine.log
+                         if m.src in self.registry and m.dst in self.registry)
+            return comp, egress
+
+        def _attainment(rt: HybridRuntime) -> float:
+            if slo is None or not rt.cell_latencies:
+                return 1.0
+            ok = sum(1 for lat in rt.cell_latencies if lat <= slo + 1e-9)
+            return ok / len(rt.cell_latencies)
+
         reports = []
         for s in self._sessions:
+            comp_d, egress_d = _dollars(s.runtime)
             reports.append(SessionReport(
                 session=s.runtime.session_id,
                 notebook=s.runtime.nb.name,
@@ -988,7 +1151,10 @@ class SessionScheduler:
                 races=s.replicas.races if s.replicas else 0,
                 race_wins=dict(s.replicas.race_wins) if s.replicas else {},
                 race_waste_seconds=(s.replicas.race_waste_seconds
-                                    if s.replicas else 0.0)))
+                                    if s.replicas else 0.0),
+                compute_dollars=comp_d,
+                egress_dollars=egress_d,
+                slo_attainment=_attainment(s.runtime)))
         util = {n: self.arbiter.utilization(n) for n in self.registry.names()}
         makespan = max((r.makespan for r in reports), default=0.0)
         return ScheduleReport(
@@ -1019,4 +1185,17 @@ class SessionScheduler:
                                      for r in reports),
             promotions=sum(r.promotions for r in reports),
             races=sum(r.races for r in reports),
-            race_waste_seconds=sum(r.race_waste_seconds for r in reports))
+            race_waste_seconds=sum(r.race_waste_seconds for r in reports),
+            compute_dollars=sum(r.compute_dollars for r in reports),
+            egress_dollars=sum(r.egress_dollars for r in reports),
+            total_dollars=sum(r.dollars for r in reports),
+            preemptions=sum(1 for env, _, _ in self._failures
+                            if env in self.registry
+                            and self.registry[env].hazard_rate > 0),
+            slo_attainment=(
+                sum(r.slo_attainment * len(s.runtime.cell_latencies)
+                    for r, s in zip(reports, self._sessions))
+                / max(1, sum(len(s.runtime.cell_latencies)
+                             for s in self._sessions))
+                if any(s.runtime.cell_latencies for s in self._sessions)
+                else 1.0))

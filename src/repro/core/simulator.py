@@ -12,7 +12,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.context import ContextDetector, sequence_stats
+from repro.core.context import ContextDetector
 
 
 @dataclass(frozen=True)

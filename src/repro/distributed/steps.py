@@ -6,7 +6,6 @@
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

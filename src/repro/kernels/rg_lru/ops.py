@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.rg_lru.kernel import rglru_scan_kernel
 

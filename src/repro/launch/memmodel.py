@@ -35,7 +35,6 @@ def _tree_bytes(spec_tree, ctx_like, mesh_shape, bytes_per_el: float,
     """Sum sharded bytes over a P-spec tree."""
     import jax
 
-    from repro.distributed.sharding import zero1_sharding
     from repro.models.layers import is_p
 
     leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_p)

@@ -9,7 +9,9 @@
         [--fail-env remote:30] [--autoscale] [--recovery checkpoint] \
         [--transport loopback|socket] \
         [--replicate] [--trickle-rate 50MB/s] [--liveness on|off] \
-        [--replicas K] [--race on|off]
+        [--replicas K] [--race on|off] \
+        [--price remote:3.0] [--hazard spot:6/h] [--egress remote:local:0.09] \
+        [--slo 30] [--workload gpu-training|remote-sensing]
 
 ``--transport socket`` is the two-process demo: the remote env runs as a
 child Python process and every migration genuinely streams CRC-framed
@@ -23,6 +25,17 @@ the most likely next environments at ``--trickle-rate`` bytes/second, so a
 later migration ships only the residual delta.  ``--liveness off`` disables
 the dead-name pruning that otherwise bounds what trickles and what
 full-state return trips carry.
+
+Cost plane: ``--price env:dollars_per_hour`` (repeatable) puts a price tag
+on an env, ``--hazard env:rate[/h|/s]`` (fleet only, repeatable) marks it
+as spot capacity with a seeded preemption hazard, ``--egress a:b:$per_gb``
+(repeatable) prices data leaving a link, and ``--slo seconds`` states the
+per-cell latency SLO.  Giving any of ``--price``/``--egress``/``--slo``
+switches the horizon policy's DP to minimize *expected dollars subject to
+the SLO* instead of seconds (``--hazard`` alone keeps the seconds
+objective, so a spot fleet can be measured under both).  ``--workload
+gpu-training|remote-sensing`` runs a built-in synthetic notebook family
+instead of an .ipynb file.
 
 ``--replicas K`` (fleet only) turns on the replica plane: each session
 keeps K follower namespaces converged during think time, so a primary
@@ -149,11 +162,73 @@ def parse_rate_spec(spec: str) -> float:
     return rate
 
 
+def parse_price_spec(spec: str) -> tuple[str, float]:
+    """``env:dollars_per_hour`` -> (env, price); friendly errors."""
+    parts = spec.split(":")
+    if len(parts) != 2 or not parts[0]:
+        raise ValueError(
+            f"--price {spec!r}: expected env:dollars_per_hour "
+            f"(e.g. remote:3.0)")
+    try:
+        price = float(parts[1])
+    except ValueError:
+        raise ValueError(
+            f"--price {spec!r}: {parts[1]!r} is not a number "
+            f"(dollars per hour, e.g. remote:3.0)") from None
+    if price < 0:
+        raise ValueError(f"--price {spec!r}: price must be >= 0")
+    return parts[0], price
+
+
+def parse_hazard_spec(spec: str) -> tuple[str, float]:
+    """``env:rate[/h|/s]`` -> (env, preemptions per *second*).  The rate
+    defaults to per-hour — ``spot:6/h`` (or just ``spot:6``) is one
+    expected preemption every 10 minutes; ``/s`` gives it per-second."""
+    parts = spec.split(":")
+    if len(parts) != 2 or not parts[0]:
+        raise ValueError(
+            f"--hazard {spec!r}: expected env:rate[/h|/s] (e.g. spot:6/h)")
+    body = parts[1].strip()
+    per_second = False
+    if body.lower().endswith("/s"):
+        per_second, body = True, body[:-2]
+    elif body.lower().endswith("/h"):
+        body = body[:-2]
+    try:
+        rate = float(body)
+    except ValueError:
+        raise ValueError(
+            f"--hazard {spec!r}: {body!r} is not a number "
+            f"(preemption rate, e.g. spot:6/h or spot:0.002/s)") from None
+    if rate < 0:
+        raise ValueError(f"--hazard {spec!r}: rate must be >= 0")
+    return parts[0], rate if per_second else rate / 3600.0
+
+
+def parse_egress_spec(spec: str) -> tuple[str, str, float]:
+    """``a:b:dollars_per_gb`` -> (src, dst, per_gb); friendly errors."""
+    parts = spec.split(":")
+    if len(parts) != 3 or not parts[0] or not parts[1]:
+        raise ValueError(
+            f"--egress {spec!r}: expected src:dst:dollars_per_gb "
+            f"(e.g. remote:local:0.09)")
+    try:
+        per_gb = float(parts[2])
+    except ValueError:
+        raise ValueError(
+            f"--egress {spec!r}: {parts[2]!r} is not a number "
+            f"(dollars per GB, e.g. remote:local:0.09)") from None
+    if per_gb < 0:
+        raise ValueError(f"--egress {spec!r}: egress price must be >= 0")
+    return parts[0], parts[1], per_gb
+
+
 def build_registry(*, remote_speedup: float = 10.0, bandwidth: float = 1e9,
                    latency: float = 0.5, extra_envs=(), links=(),
                    cold_start: float = 5.0,
                    idle_timeout: float = 60.0,
-                   transport: str = "loopback") -> EnvironmentRegistry:
+                   transport: str = "loopback",
+                   prices=(), hazards=(), egress=()) -> EnvironmentRegistry:
     """Two-env default plus any ``name:speedup[:capacity[:down]]`` extras
     and ``a:b:bandwidth:latency`` link overrides.  ``down`` envs get the
     fleet ``cold_start``/``idle_timeout`` knobs — they're the autoscaler's
@@ -190,6 +265,33 @@ def build_registry(*, remote_speedup: float = 10.0, bandwidth: float = 1e9,
                     f"--link {spec!r}: unknown environment {end!r} "
                     f"(registered: {', '.join(reg.names())})")
         reg.connect(a, b, bandwidth=bw, latency=lat)
+    # cost plane: env price tags, spot preemption hazards, link egress
+    for spec in prices:
+        name, price = parse_price_spec(spec)
+        if name not in reg:
+            raise ValueError(
+                f"--price {spec!r}: unknown environment {name!r} "
+                f"(registered: {', '.join(reg.names())})")
+        reg[name].price_per_hour = price
+    for spec in hazards:
+        name, rate = parse_hazard_spec(spec)
+        if name not in reg:
+            raise ValueError(
+                f"--hazard {spec!r}: unknown environment {name!r} "
+                f"(registered: {', '.join(reg.names())})")
+        if name == reg.home:
+            raise ValueError(
+                f"--hazard {spec!r}: the home environment cannot be "
+                f"preempted (sessions live there)")
+        reg[name].hazard_rate = rate
+    for spec in egress:
+        a, b, per_gb = parse_egress_spec(spec)
+        for end in (a, b):
+            if end not in reg:
+                raise ValueError(
+                    f"--egress {spec!r}: unknown environment {end!r} "
+                    f"(registered: {', '.join(reg.names())})")
+        reg.set_egress(a, b, per_gb)
     return reg
 
 
@@ -206,9 +308,25 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
                  transport: str = "loopback",
                  replicate: bool = False, trickle_rate: float = 50e6,
                  liveness: bool = True, replicas: int = 0,
-                 race: bool = False) -> dict:
-    with open(path) as f:
-        nb = Notebook.from_ipynb(json.load(f))
+                 race: bool = False, prices=(), hazards=(), egress=(),
+                 slo: float | None = None,
+                 workload: str | None = None) -> dict:
+    def load_notebook() -> Notebook:
+        if workload is not None:
+            from repro.core import (gpu_training_notebook,
+                                    remote_sensing_notebook)
+            factory = {"gpu-training": gpu_training_notebook,
+                       "remote-sensing": remote_sensing_notebook}[workload]
+            return factory()
+        with open(path) as f:
+            return Notebook.from_ipynb(json.load(f))
+
+    nb = load_notebook()
+    # any priced dimension switches the placement objective to expected
+    # dollars under the SLO; --hazard alone keeps the seconds objective so
+    # a spot fleet can be measured under both
+    objective = "dollars" if (prices or egress or slo is not None) \
+        else "seconds"
     if transport == "socket":
         if fleet:
             raise ValueError(
@@ -221,8 +339,15 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
     registry = build_registry(remote_speedup=remote_speedup,
                               bandwidth=bandwidth, latency=latency,
                               extra_envs=extra_envs, links=links,
-                              transport=transport)
+                              transport=transport, prices=prices,
+                              hazards=hazards, egress=egress)
     code = [c for c in nb.cells if c.cell_type == "code"]
+
+    if hazards and not fleet:
+        raise ValueError(
+            "--hazard needs --fleet: preemptions are injected through the "
+            "scheduler's failure machinery (try --fleet 2 --recovery "
+            "checkpoint)")
 
     if replicate and not fleet:
         raise ValueError(
@@ -256,12 +381,14 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         plan = [i for i, c in enumerate(nb.cells)
                 if c.cell_type == "code"] * sessions
         for _ in range(fleet):
-            with open(path) as f:
-                session_nb = Notebook.from_ipynb(json.load(f))
+            session_nb = load_notebook()
             sched.add_notebook(session_nb, plan=plan,
                                reducer=StateReducer(codec=codec),
                                policy=policy, use_knowledge=use_knowledge,
-                               pipeline=pipeline, model=model)
+                               pipeline=pipeline, model=model,
+                               objective=objective, slo=slo)
+        if any(e.hazard_rate > 0 for e in registry.envs().values()):
+            sched.enable_spot_hazards(seed=seed)
         if arrivals or think_time:
             sched.set_workload(WorkloadTrace.poisson(
                 fleet, rate=arrivals, think_mean=think_time,
@@ -298,11 +425,20 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
             "promotions": rep.promotions,
             "races": rep.races,
             "race_waste_seconds": rep.race_waste_seconds,
+            "objective": objective,
+            "slo": slo,
+            "total_dollars": rep.total_dollars,
+            "compute_dollars": rep.compute_dollars,
+            "egress_dollars": rep.egress_dollars,
+            "preemptions": rep.preemptions,
+            "slo_attainment": rep.slo_attainment,
             "per_session": [
                 {"session": s.session[:12], "makespan": s.makespan,
                  "arrival": s.arrival, "think_time": s.think_time,
                  "queue_wait": s.queue_wait, "migrations": s.migrations,
                  "recoveries": s.recoveries,
+                 "dollars": s.dollars,
+                 "slo_attainment": s.slo_attainment,
                  "trickled_bytes": s.trickled_bytes,
                  "trickle_claimed_bytes": s.trickle_claimed_bytes,
                  "replica_lag": s.replica_lag,
@@ -317,7 +453,7 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
     rt = HybridRuntime(
         nb, registry=registry, reducer=StateReducer(codec=codec),
         policy=policy, use_knowledge=use_knowledge, pipeline=pipeline,
-        model=model)
+        model=model, objective=objective, slo=slo)
 
     try:
         for _ in range(sessions):
@@ -350,6 +486,18 @@ def run_notebook(path: str, *, sessions: int = 3, remote_speedup: float = 10.0,
         "prefetch_wasted_bytes": getattr(rt.engine,
                                          "prefetch_wasted_bytes", 0),
         "prediction_hit_rate": rt.prediction_hit_rate,
+        "objective": objective,
+        "slo": slo,
+        "compute_dollars": sum(
+            getattr(registry[e], "price_per_hour", 0.0) * sec / 3600.0
+            for e, sec in rt.exec_env_seconds.items() if e in registry),
+        "egress_dollars": sum(
+            registry.transfer_dollars(m.src, m.dst, m.nbytes)
+            for m in rt.engine.log),
+        "slo_attainment": (
+            sum(1 for lat in rt.cell_latencies if lat <= slo + 1e-9)
+            / len(rt.cell_latencies)
+            if slo is not None and rt.cell_latencies else 1.0),
         "decisions": {c.cell_id: c.annotations[-1] if c.annotations else None
                       for c in code},
         "provenance_records": len(rt.kb.provenance),
@@ -372,7 +520,14 @@ class _OnceAction(argparse.Action):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("notebook")
+    ap.add_argument("notebook", nargs="?", default=None,
+                    help=".ipynb path (omit when using --workload)")
+    ap.add_argument("--workload",
+                    choices=["gpu-training", "remote-sensing"],
+                    default=None,
+                    help="built-in notebook family instead of an .ipynb "
+                         "path: gpu-training (GPU-heavy train loop) or "
+                         "remote-sensing (data-gravity pipeline)")
     ap.add_argument("--sessions", type=int, default=3)
     ap.add_argument("--remote-speedup", type=float, default=10.0)
     ap.add_argument("--policy",
@@ -440,6 +595,24 @@ def main():
     ap.add_argument("--race", choices=["on", "off"], default="off",
                     help="first-result-wins cell racing on converged "
                          "followers (requires --replicas >= 1)")
+    ap.add_argument("--price", action="append", default=[],
+                    metavar="ENV:DOLLARS_PER_HOUR",
+                    help="cost plane: hourly compute price for an env, "
+                         "e.g. remote:3.0 (any price switches the horizon "
+                         "DP to minimize expected dollars)")
+    ap.add_argument("--hazard", action="append", default=[],
+                    metavar="ENV:RATE[/h|/s]",
+                    help="cost plane: spot-preemption hazard rate, e.g. "
+                         "spot:6/h (requires --fleet; preemptions are "
+                         "seeded and deterministic)")
+    ap.add_argument("--egress", action="append", default=[],
+                    metavar="SRC:DST:DOLLARS_PER_GB",
+                    help="cost plane: per-GB egress price on a directed "
+                         "link, e.g. remote:local:0.09")
+    ap.add_argument("--slo", type=float, default=None, metavar="SECONDS",
+                    help="cost plane: per-cell latency SLO; the dollars DP "
+                         "only considers placements whose expected per-cell "
+                         "latency stays within this bound")
     ap.add_argument("--report", default=None)
     ap.add_argument("--write-annotated", default=None,
                     help="write the notebook back with decision annotations")
@@ -449,10 +622,28 @@ def main():
         # validate every spec up front (duplicate env names, malformed
         # floats, unknown envs) so mistakes die as friendly argparse
         # errors — runtime failures below keep their real tracebacks
+        if args.notebook is None and args.workload is None:
+            raise ValueError(
+                "give a notebook path or pick a built-in family with "
+                "--workload gpu-training|remote-sensing")
+        if args.notebook is not None and args.workload is not None:
+            raise ValueError(
+                "--workload replaces the notebook path; give one or the "
+                "other, not both")
+        if args.slo is not None and args.slo <= 0:
+            raise ValueError(
+                f"--slo must be a positive number of seconds "
+                f"(got {args.slo})")
         fail_envs = [parse_fail_spec(s) for s in args.fail_env]
         reg = build_registry(remote_speedup=args.remote_speedup,
                              bandwidth=args.bandwidth, latency=args.latency,
-                             extra_envs=args.env, links=args.link)
+                             extra_envs=args.env, links=args.link,
+                             prices=args.price, hazards=args.hazard,
+                             egress=args.egress)
+        if args.hazard and not args.fleet:
+            raise ValueError(
+                "--hazard needs --fleet: seeded preemptions run on the "
+                "scheduler's event loop (try --fleet 2)")
         for env, _at, _rec in fail_envs:
             if env not in reg:
                 raise ValueError(
@@ -506,7 +697,9 @@ def main():
         checkpoint_interval=args.checkpoint_interval,
         transport=args.transport, replicate=args.replicate,
         trickle_rate=trickle_rate, liveness=args.liveness == "on",
-        replicas=args.replicas, race=args.race == "on")
+        replicas=args.replicas, race=args.race == "on",
+        prices=args.price, hazards=args.hazard, egress=args.egress,
+        slo=args.slo, workload=args.workload)
 
     print(json.dumps({k: v for k, v in report.items() if k != "decisions"},
                      indent=2))

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
-from repro.configs import SHAPES, TrainConfig, get_config
+from repro.configs import TrainConfig, get_config
 from repro.configs.base import ShapeConfig
 from repro.data import TokenPipeline
 from repro.models import LM

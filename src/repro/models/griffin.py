@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.context import shard
-from repro.models.layers import P, causal_conv1d, silu
+from repro.models.layers import P, causal_conv1d
 
 LRU_C = 8.0          # RG-LRU exponent constant
 NUM_BLOCKS = 8       # block-diagonal gate projections

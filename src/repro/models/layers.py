@@ -11,7 +11,6 @@ axes + init rule).  From that single source of truth we derive:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

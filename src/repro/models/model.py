@@ -9,10 +9,8 @@
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -7,7 +7,6 @@ block) — essential for dry-run compile times and standard MaxText practice.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -17,7 +16,7 @@ from repro.distributed.context import shard
 from repro.models import attention as attn
 from repro.models import griffin, moe, ssm
 from repro.models.layers import (
-    P, embed_spec, rms_norm, stack_spec, swiglu,
+    P, rms_norm, stack_spec, swiglu,
 )
 
 Axes = tuple

@@ -8,7 +8,7 @@ import random
 
 try:
     import hypothesis.strategies as st
-    from hypothesis import given, settings
+    from hypothesis import given, settings  # noqa: F401 — re-export shim
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - depends on the environment
     HAVE_HYPOTHESIS = False

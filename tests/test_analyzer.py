@@ -1,5 +1,4 @@
 """Migration analyzer: policies + Algorithm 2 (paper §II-C)."""
-import numpy as np
 
 from repro.core import (
     ContextDetector, KnowledgeBase, MigrationAnalyzer, Notebook, PerfModel,

@@ -6,7 +6,7 @@ import os
 import pytest
 
 from benchmarks.check_regression import (
-    check_all, check_file, lookup, main, update_baselines,
+    check_all, check_file, lookup, main, render_summary, update_baselines,
 )
 
 
@@ -96,6 +96,70 @@ def test_update_rewrites_baselines_from_current(rig):
     with open(os.path.join(base, "BENCH_x.json")) as f:
         assert json.load(f)["w"]["bytes"] == 500
     assert check_all(base, cur) == []
+
+
+def test_summary_rows_and_markdown_rendering(rig):
+    base, cur = rig
+    # bytes pass, ratio regresses: the table must carry one PASS row with
+    # both numbers and one FAIL row
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 900, "ratio": 2.0}})
+    rows = []
+    failures = check_all(base, cur, rows=rows)
+    assert len(failures) == 1
+    assert [r["ok"] for r in rows] == [True, False]
+    assert rows[0] == {"file": "BENCH_x.json", "metric": "w.bytes",
+                       "cmp": "max", "tol": 0.10,
+                       "baseline": 1000.0, "observed": 900.0, "ok": True}
+    md = render_summary(rows, failures)
+    assert "| metric | baseline | observed | tolerance | verdict |" in md
+    assert "| BENCH_x.json:w.bytes | 1000 | 900 | +10% (max) | PASS |" in md
+    assert "| BENCH_x.json:w.ratio | 8 | 2 | -10% (min) | **FAIL** |" in md
+    assert "1 failure(s)" in md
+
+
+def test_summary_marks_missing_metrics_without_numbers(rig):
+    base, cur = rig
+    _write(os.path.join(cur, "BENCH_x.json"), {"w": {"bytes": 900}})
+    rows = []
+    failures = check_all(base, cur, rows=rows)
+    md = render_summary(rows, failures)
+    # the missing metric renders a dash for the observed value and the
+    # spec-level failure line follows the table as a bullet
+    assert "| BENCH_x.json:w.ratio | 8 | — |" in md
+    assert "- BENCH_x.json:w.ratio: missing in fresh report" in md
+
+
+def test_all_green_summary_says_so(rig):
+    base, cur = rig
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 1000, "ratio": 8.0}})
+    rows = []
+    md = render_summary(rows := [], check_all(base, cur, rows=rows))
+    assert "All metrics within tolerance." in md
+    assert "FAIL" not in md
+
+
+def test_main_appends_summary_when_env_set(rig, tmp_path, monkeypatch):
+    base, cur = rig
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 3000, "ratio": 8.0}})
+    summary = tmp_path / "step_summary.md"
+    summary.write_text("# earlier step\n")
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert main(["--baselines", base, "--current", cur]) == 1
+    text = summary.read_text()
+    assert text.startswith("# earlier step\n")          # appended, not clobbered
+    assert "## Benchmark regression gate" in text
+    assert "**FAIL**" in text and "PASS" in text
+
+
+def test_main_skips_summary_when_env_unset(rig, monkeypatch):
+    base, cur = rig
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    _write(os.path.join(cur, "BENCH_x.json"),
+           {"w": {"bytes": 1000, "ratio": 8.0}})
+    assert main(["--baselines", base, "--current", cur]) == 0
 
 
 def test_repo_tolerances_are_well_formed():

@@ -9,7 +9,6 @@ tolerance question.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from _hyp_compat import given, settings, st

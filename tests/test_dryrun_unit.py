@@ -6,7 +6,6 @@ re-implemented import-free via importlib machinery on the source file.)
 """
 import importlib.util
 import os
-import sys
 import types
 
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

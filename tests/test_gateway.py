@@ -5,7 +5,7 @@ import pytest
 from repro.core import wire
 from repro.core.fabric import EnvironmentRegistry, ExecutionEnvironment
 from repro.core.gateway import (
-    GatewayService, WarmPool, percentile, poisson_attach_storm,
+    GatewayService, percentile, poisson_attach_storm,
 )
 from repro.core.notebook import Notebook
 from repro.core.transport import LoopbackTransport

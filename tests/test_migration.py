@@ -1,6 +1,5 @@
 """Migration engine + hybrid runtime (paper §II, Fig. 1/3)."""
 import numpy as np
-import pytest
 
 from repro.core import (
     ExecutionEnvironment, HybridRuntime, MigrationEngine, Notebook,

@@ -1,5 +1,4 @@
 """Optimizer + schedules."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
